@@ -1,0 +1,37 @@
+"""Shared benchmark setup: a simulated wide-EP cluster around the reduced
+mixtral config (4 experts, top-2) at configurable world size."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.reintegration import WarmupCostModel
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+
+
+def build_runtime(world: int = 32, spr: int = 1, seed: int = 0,
+                  arch: str = "mixtral-8x22b", **kw) -> ElasticEPRuntime:
+    cfg = get_config(arch).reduced()
+    table = make_initial_membership(world, cfg.moe.num_experts, spr)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    return ElasticEPRuntime(cfg, params, table, **kw)
+
+
+def timeit(fn, iters: int = 30, warmup: int = 5) -> float:
+    """Min wall time per call in microseconds (min-of-N is the robust
+    estimator on a contended single-core host: noise is strictly additive)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts) * 1e6)

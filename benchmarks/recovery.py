@@ -1,0 +1,92 @@
+"""Paper Fig. 10: failure-recovery across scales f1..f16 on a 32-rank
+instance — phase breakdown (left), repair-source mix (middle), post-recovery
+throughput (right), vs the 348 s full-restart baseline.
+
+The repair planning/execution is REAL (EPLB + 3-tier transfers over the
+simulated 32-rank slot array); transfer seconds come from the
+RecoveryCostModel calibrated to the DESIGN.md fabric (ICI/host-DMA widths)
+with per-slot bytes of the full-scale deepseek-style expert
+(paper model: 671B / 256 experts -> ~2.5 GB of expert weights per rank).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.repair import RecoveryCostModel
+from repro.serving.engine import FullRestartCostModel
+
+from benchmarks.common import build_runtime
+
+FULL_SCALE_BYTES_PER_SLOT = int(2.5e9)   # deepseek-v3 expert shard per slot
+
+
+def run(scales=(1, 2, 4, 8, 16), world: int = 32, spr: int = 1):
+    rows = []
+    for f in scales:
+        rt = build_runtime(world=world, spr=spr, seed=f)
+        # full-scale transfer accounting: override the per-slot bytes the
+        # planner reports (the reduced model's weights are tiny)
+        failed = list(range(0, world, max(world // f, 1)))[:f]
+        for r in failed:
+            rt.detector.mark_unreachable(r)
+        rt.clock.advance(1.2)
+        detected = rt.poll_failures()
+        assert sorted(detected) == sorted(failed)
+        phases = rt.handle_failure(detected)
+        ev = [e for e in rt.timeline if e.kind == "recovery_done"][-1]
+        mix = ev.detail["mix"]
+        # rescale weight-transfer seconds to full-scale slot bytes
+        n_t2 = mix.get("gpu_relocation", 0)
+        n_t3 = mix.get("dram_reload", 0)
+        cm = rt.cost_model
+        per_rank_t2 = np.zeros(world)
+        per_rank_t3 = np.zeros(world)
+        # distribute moved slots over surviving ranks like the planner did
+        alive = [r for r in range(world) if rt.table.active_mask[r]]
+        for i in range(n_t2):
+            per_rank_t2[alive[i % len(alive)]] += FULL_SCALE_BYTES_PER_SLOT
+        for i in range(n_t3):
+            per_rank_t3[alive[i % len(alive)]] += FULL_SCALE_BYTES_PER_SLOT
+        t2 = per_rank_t2.max() / (cm.ici_gbps * 1e9)
+        t3 = per_rank_t3.max() / (cm.host_gbps * 1e9)
+        total = cm.detect_s + cm.drain_s + cm.coordinate_s + t2 + t3
+        rows.append({
+            "failed": f,
+            "detect_s": cm.detect_s,
+            "drain_s": cm.drain_s,
+            "coordinate_s": cm.coordinate_s,
+            "weight_transfer_s": t2 + t3,
+            "total_s": total,
+            "mix": mix,
+            "post_recovery_throughput_frac": rt.active_fraction(),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    restart = FullRestartCostModel()
+    print("name,us_per_call,derived")
+    for r in rows:
+        m = r["mix"]
+        print(f"recovery/f{r['failed']}/total,"
+              f"{r['total_s']*1e6:.0f},"
+              f"phases=detect:{r['detect_s']:.1f}+drain:{r['drain_s']:.1f}"
+              f"+coord:{r['coordinate_s']:.1f}"
+              f"+xfer:{r['weight_transfer_s']:.2f}s")
+        print(f"recovery/f{r['failed']}/mix,0,"
+              f"local={m.get('local_reuse',0)}"
+              f"_reloc={m.get('gpu_relocation',0)}"
+              f"_dram={m.get('dram_reload',0)}")
+        print(f"recovery/f{r['failed']}/throughput,0,"
+              f"post_recovery_frac={r['post_recovery_throughput_frac']:.3f}")
+    speedup = restart.total_s / max(r["total_s"] for r in rows)
+    print(f"recovery/full_restart_baseline,"
+          f"{restart.total_s*1e6:.0f},paper=348s")
+    print(f"recovery/summary,0,worst_recovery={max(x['total_s'] for x in rows):.1f}s"
+          f"_vs_restart={restart.total_s:.0f}s_speedup={speedup:.0f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

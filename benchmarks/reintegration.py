@@ -1,0 +1,73 @@
+"""Paper Fig. 1 + Fig. 11: throughput time series around a failure +
+reintegration, across failure scales, vs the full-restart baseline.
+
+Each trace must show the paper's structure: steady state -> bounded recovery
+pause -> reduced-capacity plateau -> bounded join pause -> full throughput.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.reintegration import WarmupCostModel
+from repro.serving.engine import FullRestartCostModel, ServingEngine
+from repro.serving.request import Request
+
+from benchmarks.common import build_runtime
+
+WARMUP = WarmupCostModel(process_relaunch_s=3.0, runtime_init_s=6.0,
+                         weight_load_s=12.0, graph_capture_s=9.0)
+
+
+def run_trace(f: int, world: int = 32, fixed: bool = False,
+              horizon: float = 420.0):
+    rt = build_runtime(world=world, spr=1, seed=f, warmup_model=WARMUP)
+    eng = ServingEngine(rt, max_batch=8, max_len=4096,
+                        base_step_time=0.25, fixed_membership=fixed)
+    for i in range(64):
+        eng.sched.submit(Request(rid=i, prompt=[1] * 4,
+                                 max_new_tokens=100_000))
+    rt.injector.inject_at(30.0, list(range(f)))
+    eng.run(until=horizon, max_steps=40_000)
+    return rt, eng
+
+
+def pauses_from_trace(rt):
+    t_fail = [e.t for e in rt.timeline if e.kind == "failure"]
+    t_rec = [e.t for e in rt.timeline if e.kind == "recovery_done"]
+    t_join = [e.t for e in rt.timeline if e.kind == "join"]
+    p1 = (t_rec[0] - t_fail[0]) if t_fail and t_rec else None
+    p2 = (rt.cost_model.join_patch_s * len(t_join)) if t_join else None
+    return p1, p2, (t_join[-1] if t_join else None)
+
+
+def main():
+    print("name,us_per_call,derived")
+    for f in (1, 2, 4, 8, 16):
+        rt, eng = run_trace(f)
+        p1, p2, t_join = pauses_from_trace(rt)
+        # reduced-capacity plateau throughput fraction
+        t_rec = [e.t for e in rt.timeline if e.kind == "recovery_done"][0]
+        plateau = [s.tokens_per_s for s in eng.trace
+                   if t_rec < s.t < (t_join or 1e9) and s.tokens_per_s > 0]
+        frac = (np.mean(plateau) / np.max([s.tokens_per_s for s in eng.trace])
+                if plateau else 0.0)
+        rec95 = next((s.t for s in eng.trace
+                      if t_join and s.t > t_join
+                      and s.active_fraction == 1.0), None)
+        print(f"reintegration/f{f}/pauses,0,"
+              f"recovery_pause={p1:.1f}s_join_pause={p2:.1f}s"
+              f"_total_offline={p1 + p2:.1f}s")
+        print(f"reintegration/f{f}/plateau,0,"
+              f"reduced_capacity_frac={frac:.3f}"
+              f"_full_capacity_back_at={rec95 or -1:.0f}s")
+        assert rt.table.active_mask.all(), "must return to full capacity"
+        assert eng.compile_count() == 1
+
+    rt, eng = run_trace(1, fixed=True)
+    restart = [e for e in rt.timeline if e.kind == "full_restart_done"][0]
+    print(f"reintegration/full_restart,0,"
+          f"outage={restart.detail['seconds']:.0f}s_paper=348s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,449 @@
+"""Analytic three-term roofline per (arch x shape x mesh).
+
+XLA's ``cost_analysis`` on the compiled module counts scan bodies ONCE (it
+does not multiply by while-loop trip counts), so for depth-scanned models it
+underestimates by ~L x microbatch. The roofline therefore uses an exact
+analytic op-count model per architecture component, with per-component
+parallel widths from the sharding policy (e.g. yi-34b's 56 heads don't
+divide the 16-way TP axis, so its attention is only data-parallel — a real
+deployment property the model captures). The dry-run remains the
+shardability/memory proof, and its per-iteration HLO collective sizes
+cross-validate the analytic collective model (see validate()).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs import SHAPES, cell_is_supported, get_config, list_configs
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.transformer import build_groups
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+BYTES = 2  # bf16
+
+
+@dataclass
+class MeshModel:
+    pod: int = 1
+    data: int = 16
+    model: int = 16
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+
+@dataclass
+class Terms:
+    flops: float = 0.0          # per chip
+    hbm_bytes: float = 0.0      # per chip
+    ici_bytes: float = 0.0      # per chip
+    notes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Terms"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        self.ici_bytes += other.ici_bytes
+
+    def seconds(self):
+        return {
+            "compute_s": self.flops / PEAK_FLOPS,
+            "memory_s": self.hbm_bytes / HBM_BW,
+            "collective_s": self.ici_bytes / ICI_BW,
+        }
+
+
+def _attn_width(cfg: ArchConfig, m: MeshModel, baseline: bool = False) -> int:
+    """Parallel width of attention compute: DP x (TP iff heads divide).
+    SSPerf P3: zero-padded heads (attn_head_pad) restore divisibility."""
+    H = cfg.num_heads + (0 if baseline else cfg.attn_head_pad)
+    tp = m.model if H % m.model == 0 else 1
+    return m.dp * tp
+
+
+def _mats(cfg: ArchConfig) -> int:
+    return 3 if cfg.activation in ("swiglu", "geglu") else 2
+
+
+def attention_terms(cfg: ArchConfig, shape: ShapeConfig, m: MeshModel,
+                    n_layers: int, baseline: bool = False) -> Terms:
+    t = Terms()
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if not baseline and cfg.attn_head_pad:
+        H = H + cfg.attn_head_pad      # padded heads do (zeroed) work too
+    B, S = shape.global_batch, shape.seq_len
+    decode = shape.kind == "decode"
+    T = B * (1 if decode else S)           # tokens processed this step
+    ctx = S if decode else S / 2           # average attended context (causal)
+    if cfg.attention == "swa" and cfg.window:
+        ctx = min(ctx, cfg.window)
+    aw = _attn_width(cfg, m, baseline)
+
+    if cfg.attention == "mla":
+        mla = cfg.mla
+        r, rope = mla.kv_lora_rank, mla.qk_rope_head_dim
+        nope, vh = mla.qk_nope_head_dim, mla.v_head_dim
+        proj = (2 * T * d * mla.q_lora_rank
+                + 2 * T * mla.q_lora_rank * H * (nope + rope)
+                + 2 * T * d * (r + rope)
+                + 2 * T * H * vh * d)
+        if decode:
+            # absorbed path: scores/ctx against the latent cache
+            core = (2 * T * H * nope * r                 # q absorb
+                    + 2 * T * ctx * H * (r + rope)       # scores
+                    + 2 * T * ctx * H * r                # ctx
+                    + 2 * T * H * r * vh)                # v expand
+            # latent cache: batch over dp, sequence over model
+            cache_bytes = B * S * (r + rope) * BYTES / (m.dp * m.model)
+        else:
+            core = (2 * T * r * H * (nope + vh)          # expand k,v
+                    + 2 * T * ctx * H * (nope + rope) * 2
+                    + 2 * T * ctx * H * vh * 2)
+            cache_bytes = T * (r + rope) * BYTES / (m.dp * m.model)
+        t.flops = (proj + core) / aw
+        t.hbm_bytes = cache_bytes
+    else:
+        proj = 2 * T * d * (H + 2 * KV) * hd + 2 * T * H * hd * d
+        core = 2 * T * ctx * H * hd * 2                  # qk + pv
+        kv_div = KV % m.model == 0
+        if decode:
+            # kv heads shard over model when divisible, else the sequence
+            # dim does — either way the cache read splits dp x model ways
+            cache = B * min(S, cfg.window or S) * KV * hd * 2 * BYTES
+            cache_bytes = cache / (m.dp * m.model)
+        else:
+            cache_bytes = T * KV * hd * 2 * BYTES / (m.dp * m.model)
+        t.flops = (proj + core) / aw
+        t.hbm_bytes = cache_bytes
+        # seq-sharded decode adds an output all-reduce over model
+        if decode and not kv_div and m.model > 1:
+            t.ici_bytes += 2 * (B / m.dp) * H * hd * 4
+    t.flops *= n_layers
+    t.hbm_bytes *= n_layers
+    t.ici_bytes *= n_layers
+    return t
+
+
+def ffn_terms(cfg: ArchConfig, shape: ShapeConfig, m: MeshModel,
+              n_layers: int, d_ff: int) -> Terms:
+    t = Terms()
+    B, S = shape.global_batch, shape.seq_len
+    T = B * (1 if shape.kind == "decode" else S)
+    width = m.dp * (m.model if d_ff % m.model == 0 else 1)
+    t.flops = 2 * T * cfg.d_model * d_ff * _mats(cfg) * n_layers / width
+    return t
+
+
+def moe_terms(cfg: ArchConfig, shape: ShapeConfig, m: MeshModel,
+              n_layers: int, kind: str, baseline: bool = False) -> Terms:
+    """Routed experts: dense capacity dispatch (cf x padding) + a2a."""
+    t = Terms()
+    moe = cfg.moe
+    B, S = shape.global_batch, shape.seq_len
+    T = B * (1 if shape.kind == "decode" else S)
+    ep_world = int(np.prod([{"data": m.data, "model": m.model}[a]
+                            for a in cfg.ep_axes])) or 1
+    x_width = m.pod * ep_world                   # token sharding of the island
+    cf = cfg.capacity_factor if kind != "train" else cfg.capacity_factor
+    # wide-EP decode at small batch: tokens pad up to one per EP rank
+    T_pad = max(T, x_width)
+    routed_tokens = T_pad * moe.top_k * cf       # capacity-padded compute
+    tp = int(np.prod([{"data": m.data, "model": m.model}[a]
+                      for a in cfg.expert_tp_axes])) or 1
+    width = x_width * tp if tp > 1 else x_width
+    t.flops = (2 * routed_tokens * cfg.d_model * moe.d_expert * _mats(cfg)
+               * n_layers / width)
+    # router
+    t.flops += 2 * T * cfg.d_model * moe.num_experts * n_layers / x_width
+    # shared experts (model-TP dense)
+    if moe.num_shared_experts:
+        dse = moe.d_shared_expert * moe.num_shared_experts
+        t.flops += (2 * T * cfg.d_model * dse * _mats(cfg) * n_layers
+                    / (x_width * 1 if False else m.dp * m.model))
+    # dispatch + combine all_to_all per chip: send+recv its capacity share
+    per_chip_tokens = routed_tokens / x_width
+    a2a = 2 * per_chip_tokens * cfg.d_model * BYTES   # dispatch + combine
+    a2a *= (ep_world - 1) / ep_world
+    t.ici_bytes += a2a * n_layers
+    # expert-TP reduction of the partial sums
+    if tp > 1:
+        if baseline:
+            # paper-faithful: fp32 psum INSIDE the expert over the
+            # k*cf-padded capacity buffers
+            t.ici_bytes += (2 * per_chip_tokens * cfg.d_model * 4
+                            * (tp - 1) / tp * n_layers)
+        else:
+            # SSPerf P1: defer to after combine — [T_local, d] in model dtype
+            t_local = T_pad / x_width
+            t.ici_bytes += (2 * t_local * cfg.d_model * BYTES
+                            * (tp - 1) / tp * n_layers)
+    return t
+
+
+def ssm_terms(cfg: ArchConfig, shape: ShapeConfig, m: MeshModel,
+              n_mamba: int, n_mlstm: int, n_slstm: int) -> Terms:
+    t = Terms()
+    d = cfg.d_model
+    B, S = shape.global_batch, shape.seq_len
+    T = B * (1 if shape.kind == "decode" else S)
+    width = m.dp * m.model     # inner dims shard over model
+    if n_mamba and cfg.mamba:
+        mc = cfg.mamba
+        d_in = mc.expand * d
+        dtr = mc.dt_rank or -(-d // 16)
+        per_tok = (2 * d * 2 * d_in + 2 * d_in * (dtr + 2 * mc.d_state)
+                   + 2 * dtr * d_in + 10 * d_in * mc.d_state
+                   + 2 * d_in * d)
+        t.flops += per_tok * T * n_mamba / width
+        t.hbm_bytes += (B * d_in * mc.d_state * 4 * 2 / m.dp
+                        * n_mamba)       # recurrent state r/w
+    if n_mlstm and cfg.xlstm:
+        d_in = int(d * cfg.xlstm.proj_factor_mlstm)
+        H = cfg.num_heads
+        hd = d_in // H
+        C = min(cfg.scan_chunk, S if shape.kind != "decode" else 1)
+        per_tok = (2 * d * 2 * d_in + 3 * 2 * d_in * hd    # qkv blockdiag
+                   + 2 * d_in * d
+                   + 2 * C * hd * H * 2                     # intra-chunk attn
+                   + 4 * H * hd * hd)                       # state update
+        t.flops += per_tok * T * n_mlstm / width
+        t.hbm_bytes += B * H * hd * hd * 4 * 2 / m.dp * n_mlstm
+    if n_slstm and cfg.xlstm:
+        d_up = int(d * cfg.xlstm.proj_factor_slstm)
+        hd = d // cfg.num_heads
+        per_tok = (2 * d * 4 * d + 2 * cfg.num_heads * hd * 4 * hd
+                   + 2 * d * 2 * d_up + 2 * d_up * d)
+        t.flops += per_tok * T * n_slstm / width
+    return t
+
+
+def head_terms(cfg: ArchConfig, shape: ShapeConfig, m: MeshModel,
+               kind: str) -> Terms:
+    t = Terms()
+    B, S = shape.global_batch, shape.seq_len
+    T = B * (1 if shape.kind == "decode" else S)
+    width = m.dp * (m.model if cfg.vocab_size % m.model == 0 else 1)
+    t.flops = 2 * T * cfg.d_model * cfg.vocab_size / width
+    return t
+
+
+def zero3_terms(cfg: ArchConfig, shape: ShapeConfig, m: MeshModel,
+                params_bytes: float) -> Terms:
+    """FSDP gathers (fwd + bwd re-gather) + grad reduce-scatter, per chip,
+    per microbatch for the gathers."""
+    t = Terms()
+    if shape.kind != "train" or not cfg.zero3_dense:
+        if shape.kind == "train":
+            # pure-DP grad all-reduce of the replicated fraction (small here;
+            # sharded params reduce-scatter over data)
+            t.ici_bytes += 2 * params_bytes / m.chips
+        return t
+    mb = max(cfg.microbatch, 1)
+    per_chip_model_shard = params_bytes / m.model
+    t.ici_bytes += per_chip_model_shard * 2 * mb * (m.data - 1) / m.data
+    t.ici_bytes += per_chip_model_shard * (m.data - 1) / m.data  # grad RS
+    return t
+
+
+def analytic_roofline(arch: str, shape_name: str, multi_pod: bool = False,
+                      baseline: bool = False):
+    """``baseline=True`` disables the beyond-paper optimizations (SSPerf
+    P1 deferred TP-reduce, P2 fp8 expert streaming, P3 head padding)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": reason}
+    m = MeshModel(pod=2 if multi_pod else 1)
+    kind = shape.kind
+
+    total = Terms()
+    groups = build_groups(cfg)
+    n_attn = sum(sum(1 for s in g.layout if s.mixer == "attn") * g.n_periods
+                 for g in groups)
+    n_dense_ffn = sum(sum(1 for s in g.layout if s.ffn == "dense")
+                      * g.n_periods for g in groups)
+    n_moe = sum(sum(1 for s in g.layout if s.ffn == "moe") * g.n_periods
+                for g in groups)
+    n_mamba = sum(sum(1 for s in g.layout if s.mixer == "mamba")
+                  * g.n_periods for g in groups)
+    n_mlstm = sum(sum(1 for s in g.layout if s.mixer == "mlstm")
+                  * g.n_periods for g in groups)
+    n_slstm = sum(sum(1 for s in g.layout if s.mixer == "slstm")
+                  * g.n_periods for g in groups)
+
+    comp = {}
+    if n_attn:
+        a = attention_terms(cfg, shape, m, n_attn, baseline)
+        comp["attention"] = a.seconds()
+        total.add(a)
+    if n_dense_ffn:
+        f = ffn_terms(cfg, shape, m, n_dense_ffn, cfg.d_ff)
+        comp["dense_ffn"] = f.seconds()
+        total.add(f)
+    if n_moe:
+        mo = moe_terms(cfg, shape, m, n_moe, kind, baseline)
+        comp["moe"] = mo.seconds()
+        total.add(mo)
+    if n_mamba or n_mlstm or n_slstm:
+        s = ssm_terms(cfg, shape, m, n_mamba, n_mlstm, n_slstm)
+        comp["ssm"] = s.seconds()
+        total.add(s)
+    h = head_terms(cfg, shape, m, kind)
+    comp["head"] = h.seconds()
+    total.add(h)
+    if cfg.encoder is not None and kind != "decode":
+        enc_T = shape.global_batch * cfg.encoder.source_len
+        e = Terms()
+        e.flops = (cfg.encoder.num_layers
+                   * (8 * enc_T * cfg.d_model ** 2
+                      + 2 * enc_T * cfg.encoder.source_len * cfg.d_model * 2
+                      + 2 * enc_T * cfg.d_model * cfg.d_ff * _mats(cfg))
+                   / (m.dp * 1))
+        comp["encoder"] = e.seconds()
+        total.add(e)
+
+    # params + optimizer HBM traffic
+    params_bytes = cfg.param_count() * BYTES
+    if cfg.is_moe and kind != "train":
+        # serving deployments carry R~2 expert replicas; dense capacity
+        # dispatch streams every resident slot's weights each step
+        moe_l = len(cfg.moe_layer_ids())
+        ebytes = (1 if (cfg.expert_serving_dtype and not baseline
+                        and "8" in cfg.expert_serving_dtype) else BYTES)
+        expert_bytes = (moe_l * cfg.moe.num_experts * _mats(cfg)
+                        * cfg.d_model * cfg.moe.d_expert * ebytes)
+        # replace the bf16 accounting of expert weights inside params_bytes
+        params_bytes -= (moe_l * cfg.moe.num_experts * _mats(cfg)
+                         * cfg.d_model * cfg.moe.d_expert * (BYTES - ebytes))
+        ep_world = int(np.prod([{"data": m.data, "model": m.model}[a]
+                                for a in cfg.ep_axes])) or 1
+        slots = max(ep_world * cfg.slots_per_rank, cfg.moe.num_experts)
+        params_bytes += expert_bytes * (slots / cfg.moe.num_experts - 1)
+    params_per_chip = params_bytes / m.chips if (cfg.is_moe or cfg.zero3_dense
+                                                 ) else params_bytes / (
+        m.model * (m.dp if cfg.zero3_dense else 1))
+    params_per_chip = max(params_per_chip, params_bytes / m.chips)
+    pm = Terms()
+    if kind == "train":
+        mb = max(cfg.microbatch, 1)
+        pm.hbm_bytes = params_per_chip * (2 * mb + 2)  # fwd+bwd reads x mb + upd
+        pm.hbm_bytes += 2 * params_per_chip            # opt state r/w (approx)
+    else:
+        pm.hbm_bytes = params_per_chip                 # one full read per step
+    comp["params"] = pm.seconds()
+    total.add(pm)
+
+    # train fwd+bwd multiplier on compute (bwd ~ 2x fwd matmul flops) and
+    # remat recompute (~+1x fwd)
+    if kind == "train":
+        mult = 3 + (1 if cfg.remat else 0)
+        total.flops *= mult
+        for c in comp.values():
+            c["compute_s"] *= mult
+
+    z = zero3_terms(cfg, shape, m, params_bytes)
+    comp["zero3/gradsync"] = z.seconds()
+    total.add(z)
+
+    # activation HBM traffic (beyond params/caches): ~8 d-vectors per token
+    # per layer in bf16 (reads+writes of block intermediates)
+    B, S = shape.global_batch, shape.seq_len
+    T = B * (1 if kind == "decode" else S)
+    L = cfg.num_layers
+    act = Terms()
+    act.hbm_bytes = 8 * (T / m.dp) * cfg.d_model * BYTES * L
+    if kind == "train":
+        act.hbm_bytes *= 2.5    # saves + bwd reads + recompute writes
+    comp["activations"] = act.seconds()
+    total.add(act)
+
+    sec = total.seconds()
+    bottleneck = max(sec, key=sec.get)
+    n_active = cfg.param_count(active_only=True)
+    model_flops = 2 * n_active * T * (3 if kind == "train" else 1)
+    t_bound = max(sec.values())
+    mfu = model_flops / m.chips / PEAK_FLOPS / max(t_bound, 1e-12)
+    return {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "skipped": False,
+        **{k: v for k, v in sec.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "roofline_fraction": round(min(mfu, 1.0), 4),
+        "model_flops_per_chip": model_flops / m.chips,
+        "hlo_equiv_flops_per_chip": total.flops,
+        "useful_ratio": round(model_flops / m.chips / max(total.flops, 1), 4),
+        "components": comp,
+    }
+
+
+def full_table(multi_pod: bool = False, baseline: bool = False):
+    rows = []
+    for a in list_configs():
+        for s in SHAPES:
+            rows.append(analytic_roofline(a, s, multi_pod, baseline))
+    return rows
+
+
+def validate_against_dryrun(dryrun_json: str):
+    """Cross-check: the analytic MoE a2a per-layer bytes vs the dry-run HLO's
+    per-iteration all-to-all operand sizes."""
+    data = json.load(open(dryrun_json))
+    out = []
+    for r in data:
+        if r.get("skipped") or "error" in r:
+            continue
+        if r["collectives"].get("all-to-all"):
+            cfg = get_config(r["arch"])
+            if not cfg.is_moe:
+                continue
+            ana = analytic_roofline(r["arch"], r["shape"], r["multi_pod"])
+            n_moe = len(cfg.moe_layer_ids()) or 1
+            per_layer_analytic = None
+            if "moe" in ana["components"]:
+                per_layer_analytic = (ana["components"]["moe"]["collective_s"]
+                                      * ICI_BW / n_moe)
+            out.append({
+                "arch": r["arch"], "shape": r["shape"],
+                "hlo_a2a_bytes_per_iter": r["collective_bytes_per_device"],
+                "analytic_a2a_bytes_per_layer": per_layer_analytic,
+            })
+    return out
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="disable the beyond-paper optimizations (SSPerf)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = full_table(args.multi_pod, args.baseline)
+    for r in rows:
+        if r.get("skipped"):
+            print(f"{r['arch']:18s} {r['shape']:12s} SKIP")
+            continue
+        print(f"{r['arch']:18s} {r['shape']:12s} "
+              f"comp={r['compute_s']:.2e} mem={r['memory_s']:.2e} "
+              f"coll={r['collective_s']:.2e} {r['bottleneck']:10s} "
+              f"roofline={r['roofline_fraction']:.3f}")
+    if args.out:
+        json.dump(rows, open(args.out, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Benchmark harness — one section per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV:
+  Fig 9   static serving overhead (elastic vs fixed membership)
+  Fig 10  failure-recovery phases + repair-source mix + post throughput
+  Fig 1/11 reintegration traces (two bounded pauses vs full restart)
+  Kernels  Pallas kernel microbenchmarks (interpret mode on CPU)
+  Roofline analytic three-term table (see benchmarks/roofline.py)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import recovery, reintegration, static_overhead
+
+    print("# === Fig 9: static serving overhead ===")
+    static_overhead.main()
+    print("# === Fig 10: failure recovery ===")
+    recovery.main()
+    print("# === Fig 1/11: reintegration ===")
+    reintegration.main()
+
+    print("# === Pallas kernel microbenchmarks (interpret mode) ===")
+    _kernels()
+
+    print("# === Roofline (analytic; full table in EXPERIMENTS.md) ===")
+    from benchmarks.roofline import full_table
+    for r in full_table():
+        if r.get("skipped"):
+            continue
+        print(f"roofline/{r['arch']}/{r['shape']},0,"
+              f"bottleneck={r['bottleneck']}"
+              f"_fraction={r['roofline_fraction']:.3f}")
+
+
+def _kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import timeit
+    from repro.kernels.moe_gmm import fused_moe_ffn
+    from repro.kernels.topk_router import topk_router
+
+    key = jax.random.key(0)
+    T, E, R = 512, 64, 3
+    logits = jax.random.normal(key, (T, E))
+    e2s = jax.random.randint(jax.random.fold_in(key, 1), (E, R), 0, 128)
+    rc = jnp.full((E,), R, jnp.int32)
+    tid = jnp.arange(T)
+
+    def router():
+        jax.block_until_ready(topk_router(logits, e2s, rc, tid, top_k=8,
+                                          interpret=True))
+    print(f"kernel/topk_router/T512_E64_k8,{timeit(router, iters=5):.0f},"
+          f"interpret_mode")
+
+    S, Rr, d, de = 2, 128, 256, 512
+    x = jax.random.normal(key, (S, Rr, d), jnp.float32)
+    wi = jax.random.normal(jax.random.fold_in(key, 2), (S, d, de)) / 16
+    wg = jax.random.normal(jax.random.fold_in(key, 3), (S, d, de)) / 16
+    wo = jax.random.normal(jax.random.fold_in(key, 4), (S, de, d)) / 22
+
+    def ffn():
+        jax.block_until_ready(fused_moe_ffn(x, wi, wo, wg, interpret=True))
+    print(f"kernel/fused_moe_ffn/S2_R128_d256,{timeit(ffn, iters=5):.0f},"
+          f"interpret_mode")
+
+
+if __name__ == "__main__":
+    main()

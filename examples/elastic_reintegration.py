@@ -1,0 +1,26 @@
+"""The Fig. 10 experiment at your fingertips: failure scales f1..f16 on a
+32-rank instance; prints the recovery phase breakdown and repair-source mix
+(watch GPU relocation give way to DRAM reload as replicas run out).
+
+  PYTHONPATH=src python examples/elastic_reintegration.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.recovery import run
+
+
+def main():
+    for row in run(scales=(1, 2, 4, 8, 16)):
+        m = row["mix"]
+        print(f"f={row['failed']:<3d} total={row['total_s']:.2f}s  "
+              f"xfer={row['weight_transfer_s']:.2f}s  "
+              f"mix: local={m.get('local_reuse', 0)} "
+              f"reloc={m.get('gpu_relocation', 0)} "
+              f"dram={m.get('dram_reload', 0)}  "
+              f"post-throughput={row['post_recovery_throughput_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+from repro.configs.base import (
+    ArchConfig,
+    EncoderConfig,
+    MLAConfig,
+    MambaConfig,
+    MoEArchConfig,
+    ShapeConfig,
+    SHAPES,
+    XLSTMConfig,
+    cell_is_supported,
+    get_config,
+    list_configs,
+    register,
+)
+
+__all__ = [
+    "ArchConfig", "EncoderConfig", "MLAConfig", "MambaConfig",
+    "MoEArchConfig", "ShapeConfig", "SHAPES", "XLSTMConfig",
+    "cell_is_supported", "get_config", "list_configs", "register",
+]

@@ -1,0 +1,363 @@
+"""Architecture configuration system.
+
+Every assigned architecture is expressed as one frozen ``ArchConfig``. The same
+config drives model construction, sharding policy, the serving engine, the
+training loop, and the multi-pod dry-run. ``reduced()`` returns a small
+same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2/V3)."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+    @property
+    def cache_dim(self) -> int:
+        # compressed KV latent + decoupled rope key
+        return self.kv_lora_rank + self.qk_rope_head_dim
+
+
+@dataclass(frozen=True)
+class MoEArchConfig:
+    """MoE structure of the *model* (logical experts; placement is runtime state)."""
+
+    num_experts: int
+    top_k: int
+    d_expert: int                      # hidden dim of each routed expert
+    num_shared_experts: int = 0
+    d_shared_expert: int = 0           # hidden dim of the shared expert(s)
+    moe_layer_period: int = 1          # MoE FFN every k-th layer (jamba: 2)
+    first_dense_layers: int = 0        # deepseek-v3: first 3 layers are dense
+    router_scale: float = 1.0
+    normalize_router_weights: bool = True
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                   # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 4 / 3
+    slstm_period: int = 8              # 1 sLSTM per 8 blocks (7:1 mLSTM:sLSTM)
+    conv1d_kernel: int = 4
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Encoder stack for enc-dec archs (whisper). Frontend is a stub: the
+    model consumes precomputed frame/patch embeddings."""
+
+    num_layers: int
+    source_len: int                    # e.g. 1500 audio frames / vision tokens
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
+ATTENTION_KINDS = ("gqa", "mla", "swa", "none")
+ACTIVATIONS = ("swiglu", "geglu", "gelu", "relu2")
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+    attention: str = "gqa"
+    window: int = 0                    # sliding-window size (swa); 0 = full
+    activation: str = "swiglu"
+    norm: str = "rmsnorm"
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0         # chatglm rope-2d: rotate half the dims
+    tie_embeddings: bool = False
+    moe: Optional[MoEArchConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    attn_layer_period: int = 1         # jamba: 1 attention layer per 8
+    attn_layer_offset: int = 0         # index of attn layer inside the period
+    # ---- runtime / parallelism policy (defaults; overridable per launch) ----
+    ep_axes: Sequence[str] = ("data",)       # mesh axes forming the EP world
+    expert_tp_axes: Sequence[str] = ("model",)  # TP axes *within* each expert
+    slots_per_rank: int = 1
+    zero3_dense: bool = False          # FSDP-gather dense weights over "data"
+    optimizer: str = "adamw"           # giant archs use "adafactor"
+    remat: bool = True
+    remat_block: int = 1               # hierarchical remat: outer scan block
+    scan_chunk: int = 256              # SSM chunked-scan length
+    grad_accum_dtype: str = "float32"  # bf16 for the largest archs (memory)
+    microbatch: int = 1                # grad-accum steps inside train_step
+    capacity_factor: float = 2.0
+    # ---- beyond-paper perf knobs (EXPERIMENTS SSPerf) ----
+    attn_head_pad: int = 0             # zero-pad Q heads to divide the TP axis
+    expert_serving_dtype: str = ""     # e.g. "float8_e4m3fn" weight storage
+    # ---- modality stub ----
+    frontend: Optional[str] = None     # "audio_stub" | "vision_stub"
+    num_frontend_tokens: int = 0       # visual/audio tokens prepended to prompt
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.family in FAMILIES, self.family
+        assert self.attention in ATTENTION_KINDS, self.attention
+        assert self.activation in ACTIVATIONS, self.activation
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe is not None
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode cost is sub-quadratic in context length (SWA bounds
+        the KV cache by the window; SSM/hybrid carry recurrent state)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attention == "swa" and self.window > 0
+
+    @property
+    def has_decode_step(self) -> bool:
+        return True  # all assigned archs have an autoregressive decoder
+
+    def moe_layer_ids(self) -> list[int]:
+        if self.moe is None:
+            return []
+        m = self.moe
+        return [
+            i
+            for i in range(self.num_layers)
+            if i >= m.first_dense_layers and (i % m.moe_layer_period == (m.moe_layer_period - 1) if m.moe_layer_period > 1 else True)
+        ]
+
+    def attn_layer_ids(self) -> list[int]:
+        if self.attention == "none":
+            return []
+        if self.attn_layer_period == 1:
+            return list(range(self.num_layers))
+        return [
+            i
+            for i in range(self.num_layers)
+            if i % self.attn_layer_period == self.attn_layer_offset
+        ]
+
+    # -- parameter count (analytic; used for roofline MODEL_FLOPS) ----------
+    def param_count(self, active_only: bool = False) -> int:
+        d, L = self.d_model, self.num_layers
+        n = self.vocab_size * d  # embeddings
+        if not self.tie_embeddings:
+            n += self.vocab_size * d  # lm head
+        attn_ids = set(self.attn_layer_ids())
+        moe_ids = set(self.moe_layer_ids())
+        for i in range(L):
+            n += 2 * d  # norms
+            # ---- mixer ----
+            if i in attn_ids:
+                if self.attention == "mla":
+                    m = self.mla
+                    n += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * m.qk_head_dim
+                    n += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                    n += m.kv_lora_rank * self.num_heads * (m.qk_nope_head_dim + m.v_head_dim)
+                    n += self.num_heads * m.v_head_dim * d
+                else:
+                    hd = self.head_dim
+                    n += d * self.num_heads * hd  # q
+                    n += 2 * d * self.num_kv_heads * hd  # k, v
+                    n += self.num_heads * hd * d  # o
+            elif self.family in ("ssm", "hybrid") and self.mamba is not None:
+                mc = self.mamba
+                d_in = mc.expand * d
+                dt_rank = mc.dt_rank or -(-d // 16)
+                n += d * 2 * d_in          # in_proj (x, z)
+                n += d_in * mc.d_conv      # conv1d
+                n += d_in * (dt_rank + 2 * mc.d_state)  # x_proj
+                n += dt_rank * d_in + d_in  # dt_proj
+                n += d_in * mc.d_state     # A_log  (d_in x d_state)
+                n += d_in                  # D
+                n += d_in * d              # out_proj
+            elif self.family == "ssm" and self.xlstm is not None:
+                xc = self.xlstm
+                if (i % xc.slstm_period) == xc.slstm_period - 1:
+                    d_in = int(d * xc.proj_factor_slstm)
+                    n += 4 * d * d + 4 * d  # r/z/i/f gates on d
+                    n += d * d_in + d_in * d  # up/down
+                else:
+                    d_in = int(d * xc.proj_factor_mlstm)
+                    h = max(self.num_heads, 1)
+                    n += d * 2 * d_in           # up proj (x, z)
+                    n += 3 * h * (d_in // h) ** 2  # q,k,v block-diagonal per head
+                    n += 2 * d_in               # i, f gate projections (per dim)
+                    n += d_in * d               # down proj
+            # ---- ffn ----
+            mats = 3 if self.activation in ("swiglu", "geglu") else 2
+            if i in moe_ids:
+                m = self.moe
+                n += m.num_experts * mats * d * m.d_expert
+                n += m.num_shared_experts * mats * d * m.d_shared_expert
+                n += d * m.num_experts  # router
+                if active_only:
+                    n -= (m.num_experts - m.top_k) * mats * d * m.d_expert
+            elif self.d_ff > 0:
+                n += mats * d * self.d_ff
+        if self.encoder is not None:
+            e = self.encoder
+            mats = 3 if self.activation in ("swiglu", "geglu") else 2
+            per = 4 * d * d + mats * d * self.d_ff + 2 * d
+            n += e.num_layers * per
+            # cross-attention in every decoder layer
+            n += L * 4 * d * d
+        return n
+
+    # -- smoke-test variant --------------------------------------------------
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        d = 64
+        heads = 4
+        kv = max(1, min(self.num_kv_heads, 2))
+        kwargs = dict(
+            name=self.name + "-smoke",
+            num_layers=max(2, min(4, self.num_layers)),
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=16,
+            d_ff=0 if self.d_ff == 0 else 128,
+            vocab_size=256,
+            window=min(self.window, 32) if self.window else 0,
+            ep_axes=(),
+            expert_tp_axes=(),
+            zero3_dense=False,
+            microbatch=1,
+        )
+        if self.moe is not None:
+            kwargs["moe"] = replace(
+                self.moe,
+                num_experts=4,
+                top_k=min(self.moe.top_k, 2),
+                d_expert=96,
+                d_shared_expert=96 if self.moe.num_shared_experts else 0,
+                first_dense_layers=min(self.moe.first_dense_layers, 1),
+            )
+        if self.mla is not None:
+            kwargs["mla"] = MLAConfig(
+                q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                qk_rope_head_dim=8, v_head_dim=16,
+            )
+        if self.encoder is not None:
+            kwargs["encoder"] = EncoderConfig(num_layers=2, source_len=16)
+        if self.xlstm is not None:
+            kwargs["xlstm"] = replace(self.xlstm, slstm_period=2)
+            kwargs["num_layers"] = 4
+            kwargs["num_heads"] = 2
+            kwargs["num_kv_heads"] = 2
+        if self.mamba is not None:
+            kwargs["mamba"] = replace(self.mamba, d_state=8)
+        if self.attn_layer_period > 1:
+            kwargs["attn_layer_period"] = 2
+            kwargs["attn_layer_offset"] = 1
+            kwargs["num_layers"] = 4
+        if self.num_frontend_tokens:
+            kwargs["num_frontend_tokens"] = 4
+        return replace(self, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+def _ensure_loaded() -> None:
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        mixtral_8x22b, deepseek_v3_671b, whisper_small, yi_34b,
+        phi3_mini_3_8b, chatglm3_6b, nemotron_4_340b, internvl2_26b,
+        xlstm_1_3b, jamba_v0_1_52b,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned shape set; every arch pairs with all four)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch x shape) is a valid dry-run cell; reason if skipped."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, (
+            "pure full-attention arch: 524k dense-KV decode is out of the "
+            "operating envelope (sub-quadratic attention required); see DESIGN.md"
+        )
+    return True, ""

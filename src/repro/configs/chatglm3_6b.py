@@ -1,0 +1,25 @@
+"""ChatGLM3-6B [arXiv:2406.12793; hf].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024, 2d-RoPE (half-rotary).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    attention="gqa",
+    activation="swiglu",
+    rope_theta=1e4,
+    rope_fraction=0.5,          # chatglm rotates half the head dims
+    zero3_dense=True,
+    microbatch=4,
+    ep_axes=(),
+    expert_tp_axes=("model",),
+))

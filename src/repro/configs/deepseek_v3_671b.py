@@ -1,0 +1,46 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437; hf] — the paper's own evaluation model.
+
+61L d_model=7168 128H MLA, vocab=129280, MoE: 1 shared + 256 routed experts
+top-8, expert d_ff=2048, first 3 layers dense (d_ff=18432). MTP head optional.
+Wide-EP deployment (the paper's setting): EP spans the flattened
+(data, model) = 256 ranks, 2 slots/rank -> 512 physical slots, R=2.
+"""
+from repro.configs.base import ArchConfig, MLAConfig, MoEArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,           # MLA: kv=128 logical heads over shared latent
+    head_dim=128,
+    d_ff=18432,                 # dense layers (first 3)
+    vocab_size=129280,
+    attention="mla",
+    activation="swiglu",
+    rope_theta=1e4,
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEArchConfig(
+        num_experts=256,
+        top_k=8,
+        d_expert=2048,
+        num_shared_experts=1,
+        d_shared_expert=2048,
+        first_dense_layers=3,
+    ),
+    ep_axes=("data", "model"),  # wide EP = 256 ranks (the paper's regime)
+    expert_tp_axes=(),          # one whole expert per slot
+    slots_per_rank=2,           # 512 slots: 256 routed x R=2
+    optimizer="adafactor",      # fits 16 GB/chip for train cells
+    microbatch=16,
+    grad_accum_dtype="bfloat16",
+    expert_serving_dtype="float8_e4m3fn",  # SSPerf P2: fp8 expert streaming
+                                           # (DeepSeek-V3 itself serves fp8)
+))

@@ -1,0 +1,29 @@
+"""InternVL2-26B [arXiv:2404.16821; hf] — InternViT-6B + InternLM2-20B.
+
+Backbone (assigned): 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553.
+The InternViT vision frontend is a STUB: ``input_specs`` provides precomputed
+patch embeddings (256 visual tokens after pixel-shuffle) prepended to the
+prompt.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92553,
+    attention="gqa",
+    activation="swiglu",
+    rope_theta=1e6,
+    frontend="vision_stub",
+    num_frontend_tokens=256,
+    ep_axes=(),
+    expert_tp_axes=("model",),
+    zero3_dense=True,
+    microbatch=4,
+))

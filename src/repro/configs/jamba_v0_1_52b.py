@@ -1,0 +1,33 @@
+"""Jamba v0.1 52B [arXiv:2403.19887; hf] — hybrid Mamba + attention + MoE.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536; attention layers at
+1:7 ratio (1 attn per 8-layer period, offset 4); MoE 16 experts top-2 on every
+other layer. Hybrid: long_500k runs (recurrent state + 4 attn layers with
+sequence-sharded distributed decode).
+"""
+from repro.configs.base import ArchConfig, MambaConfig, MoEArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    attention="gqa",
+    activation="swiglu",
+    rope_theta=1e4,
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    moe=MoEArchConfig(num_experts=16, top_k=2, d_expert=14336,
+                      moe_layer_period=2),
+    ep_axes=("data",),
+    expert_tp_axes=("model",),
+    slots_per_rank=2,           # 32 slots: 16 experts x R=2
+    optimizer="adafactor",
+    microbatch=4,
+))

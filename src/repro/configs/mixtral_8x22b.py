@@ -1,0 +1,31 @@
+"""Mixtral 8x22B [arXiv:2401.04088; hf].
+
+56L d_model=6144 48H (GQA kv=8) vocab=32768, MoE 8 experts top-2,
+expert d_ff=16384, sliding-window attention.
+Wide-EP deployment: EP=16 over the ``data`` axis (8 experts, R=2 replication),
+per-expert FFN tensor-parallel over ``model``.
+"""
+from repro.configs.base import ArchConfig, MoEArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,                 # dense-equivalent (unused: all layers MoE)
+    vocab_size=32768,
+    attention="swa",
+    window=4096,
+    activation="swiglu",
+    rope_theta=1e6,
+    moe=MoEArchConfig(num_experts=8, top_k=2, d_expert=16384),
+    ep_axes=("data",),
+    expert_tp_axes=("model",),
+    slots_per_rank=1,           # 16 slots: 8 experts x R=2
+    optimizer="adafactor",      # AdamW fp32 moments on R=2 slots exceed HBM
+    grad_accum_dtype="bfloat16",
+    microbatch=16,
+))

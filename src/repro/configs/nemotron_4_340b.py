@@ -1,0 +1,29 @@
+"""Nemotron-4 340B [arXiv:2402.16819; unverified].
+
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000, squared-ReLU
+(non-gated) FFN. Giant dense: ZeRO-3 parameter sharding over ``data`` +
+TP over ``model``; Adafactor moments for the train cells.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    num_layers=96,
+    d_model=18432,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=192,
+    d_ff=73728,
+    vocab_size=256000,
+    attention="gqa",
+    activation="relu2",
+    rope_theta=1e4,
+    ep_axes=(),
+    expert_tp_axes=("model",),
+    zero3_dense=True,
+    optimizer="adafactor",
+    microbatch=16,
+    remat_block=8,
+    grad_accum_dtype="bfloat16",
+))

@@ -1,0 +1,24 @@
+"""Phi-3-mini 3.8B [arXiv:2404.14219; unverified].
+
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064, RoPE + SwiGLU.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="phi3-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    attention="gqa",
+    activation="swiglu",
+    rope_theta=1e4,
+    zero3_dense=True,
+    microbatch=4,
+    ep_axes=(),
+    expert_tp_axes=("model",),
+))

@@ -1,0 +1,27 @@
+"""Whisper-small [arXiv:2212.04356; unverified].
+
+Enc-dec: 12L encoder + 12L decoder, d_model=768 12H d_ff=3072 vocab=51865.
+Conv frontend is a STUB: ``input_specs`` provides precomputed audio-frame
+embeddings (1500 frames after the 2x conv downsampling).
+"""
+from repro.configs.base import ArchConfig, EncoderConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-small",
+    family="audio",
+    num_layers=12,              # decoder layers
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    attention="gqa",            # MHA == GQA with kv=heads
+    activation="gelu",
+    norm="layernorm",
+    encoder=EncoderConfig(num_layers=12, source_len=1500),
+    frontend="audio_stub",
+    microbatch=2,
+    ep_axes=(),
+    expert_tp_axes=("model",),
+))

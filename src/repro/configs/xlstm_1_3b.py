@@ -1,0 +1,34 @@
+"""xLSTM 1.3B [arXiv:2405.04517; unverified].
+
+48 blocks d_model=2048, 4 heads, vocab=50304, d_ff=0 (blocks carry their own
+up/down projections). 7:1 mLSTM:sLSTM interleave (sLSTM every 8th block).
+Attention-free: decode carries recurrent matrix/scalar memory, so the
+long_500k cell runs.
+"""
+from repro.configs.base import ArchConfig, XLSTMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,               # d_model / heads (mLSTM inner uses 2x)
+    d_ff=0,
+    vocab_size=50304,
+    attention="none",
+    activation="gelu",
+    norm="layernorm",
+    xlstm=XLSTMConfig(
+        proj_factor_mlstm=2.0,
+        proj_factor_slstm=4 / 3,
+        slstm_period=8,
+        conv1d_kernel=4,
+    ),
+    ep_axes=(),
+    expert_tp_axes=("model",),
+    optimizer="adafactor",
+    scan_chunk=512,
+    microbatch=4,
+))

@@ -1,0 +1,26 @@
+"""Yi-34B [arXiv:2403.04652; hf] — llama-architecture GQA dense.
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    attention="gqa",
+    activation="swiglu",
+    rope_theta=5e6,
+    ep_axes=(),
+    expert_tp_axes=("model",),
+    zero3_dense=True,           # 68 GB bf16: shard params over data too
+    microbatch=16,
+    attn_head_pad=8,            # SSPerf P3: 56->64 heads => 16-way attention TP
+                                # (zero-padded heads; exact semantics)
+))

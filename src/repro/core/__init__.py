@@ -1,0 +1,41 @@
+"""EEP core: the paper's contribution — live EP validity under partial
+failures, realized as explicit mutable membership state, elasticity-aware
+placement, three-tier expert-coverage repair, and deferred-join
+reintegration."""
+from repro.core.backup import BackupStore
+from repro.core.elastic_moe import (
+    EPContext,
+    dispatch_combine_dense,
+    elastic_route,
+    expert_load_from_route,
+    fixed_route,
+)
+from repro.core.failure import (
+    FailureDetector,
+    FailureInjector,
+    RankState,
+    SimClock,
+)
+from repro.core.membership import (
+    MembershipState,
+    PeerTable,
+    make_initial_membership,
+)
+from repro.core.placement import eplb_place, placement_overlap
+from repro.core.reintegration import ReintegrationController, WarmupCostModel
+from repro.core.repair import (
+    RecoveryCostModel,
+    RepairPlan,
+    apply_repair,
+    plan_repair,
+)
+from repro.core.validity import ValidityReport, check
+
+__all__ = [
+    "BackupStore", "EPContext", "FailureDetector", "FailureInjector",
+    "MembershipState", "PeerTable", "RankState", "RecoveryCostModel",
+    "ReintegrationController", "RepairPlan", "SimClock", "ValidityReport",
+    "WarmupCostModel", "apply_repair", "check", "dispatch_combine_dense",
+    "elastic_route", "eplb_place", "expert_load_from_route", "fixed_route",
+    "make_initial_membership", "placement_overlap", "plan_repair",
+]

@@ -1,0 +1,204 @@
+"""Membership-elastic MoE dispatch/combine (paper §3.4, §4.1) in JAX.
+
+The paper's GPU-driven path — kernels read a device-resident peer table,
+issue transfers to active peers only, and skip failed ranks by testing one
+active bit — becomes, on TPU:
+
+  * routing consults the mutable ``MembershipState`` arrays (graph-visible,
+    content-mutable) to map logical experts to physical slots on ACTIVE ranks;
+  * dispatch is a capacity-based ``all_to_all`` over the EP mesh axes inside
+    ``shard_map`` (GShard/DeepEP-style); a failed rank's slots simply receive
+    zero traffic because no routing-table entry points at them;
+  * combine returns expert outputs with the same collective and applies the
+    renormalized top-k weights in fp32.
+
+One compiled executable covers steady state, degraded execution, and the
+restored configuration — membership changes update table *contents* only.
+
+Two dispatch layouts:
+  dense  — fixed-capacity buffers [world, spr, cap, d]; predictable collective
+           bytes (used by the dry-run/roofline).
+  The ragged (size-exchange + ragged_all_to_all) variant is a §Perf item.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.membership import MembershipState, REPLICA_HASH_PRIME
+
+
+@dataclass(frozen=True)
+class EPContext:
+    """Static EP deployment geometry (compile-time)."""
+
+    axis_names: tuple[str, ...] = ()   # mesh axes spanning the EP world
+    world: int = 1
+    slots_per_rank: int = 1
+    capacity_factor: float = 2.0
+    min_capacity: int = 8
+
+    @property
+    def num_slots(self) -> int:
+        return self.world * self.slots_per_rank
+
+    def capacity(self, tokens_per_rank: int, top_k: int) -> int:
+        """Per-(dst-slot) capacity of the dense dispatch buffers."""
+        expected = tokens_per_rank * top_k / max(self.num_slots, 1)
+        cap = int(math.ceil(expected * self.capacity_factor))
+        cap = max(cap, self.min_capacity)
+        return int(-(-cap // 8) * 8)  # round up to multiple of 8 (lane-friendly)
+
+
+# ---------------------------------------------------------------------------
+# Elastic routing: logical expert -> (replica) physical slot, active ranks only
+# ---------------------------------------------------------------------------
+
+
+def elastic_route(
+    logits: jax.Array,            # [T, E] router logits
+    membership: MembershipState,
+    top_k: int,
+    token_ids: jax.Array,         # [T] global ids (replica hash)
+    normalize: bool = True,
+):
+    """Top-k over *reachable* experts + replica selection from the mutable
+    expert_to_slot table. Returns (experts[T,k], weights[T,k] f32, slots[T,k]).
+
+    Experts whose replica_count is 0 are masked out — after a repaired
+    placement this never triggers (coverage validity), but during the bounded
+    window between failure detection and repair publication it is exactly the
+    paper's 'route tokens only to valid experts on active ranks'.
+    """
+    valid = membership.replica_count > 0                     # [E]
+    neg = jnp.finfo(jnp.float32).min
+    masked = jnp.where(valid[None, :], logits.astype(jnp.float32), neg)
+    probs = jax.nn.softmax(masked, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)           # [T, k]
+    if normalize:
+        weights = weights / jnp.maximum(
+            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # deterministic replica choice: spread tokens across replicas
+    rc = jnp.maximum(membership.replica_count[experts], 1)   # [T, k]
+    r = (token_ids[:, None] * REPLICA_HASH_PRIME + experts) % rc
+    slots = jnp.take_along_axis(
+        membership.expert_to_slot[experts.reshape(-1)],      # [T*k, MAX_R]
+        r.reshape(-1, 1).astype(jnp.int32), axis=1,
+    ).reshape(experts.shape)
+    return experts, weights, slots
+
+
+# ---------------------------------------------------------------------------
+# Dense capacity-based dispatch/combine
+# ---------------------------------------------------------------------------
+
+
+def _bucket_positions(flat_slot: jax.Array, num_slots: int) -> jax.Array:
+    """Position of each (token, choice) entry within its destination-slot
+    bucket. One-hot cumsum formulation (sort-free; XLA-friendly).
+    flat_slot: int32[N] in [0, num_slots). Returns int32[N]."""
+    onehot = jax.nn.one_hot(flat_slot, num_slots, dtype=jnp.int32)  # [N, S]
+    pos = jnp.cumsum(onehot, axis=0) - 1                            # [N, S]
+    return jnp.take_along_axis(pos, flat_slot[:, None], axis=1)[:, 0]
+
+
+def dispatch_combine_dense(
+    x: jax.Array,                    # [T, d] LOCAL tokens (inside shard_map)
+    slots: jax.Array,                # [T, k] destination physical slots
+    weights: jax.Array,              # [T, k] fp32 combine weights
+    expert_fn: Callable,             # ([S_local, R, d], slot_base) -> [S_local, R, d]
+    ep: EPContext,
+):
+    """Capacity-based dispatch -> expert compute -> combine.
+
+    Dense buffers are laid out [world, spr, cap, d]: dim0 is the all_to_all
+    split axis (destination rank), dim1 the local slot on that rank. Sender
+    computes positions within each destination-slot bucket; entries over
+    capacity are dropped and their combine weight zeroed (GShard semantics;
+    capacity_factor 2.0 makes drops statistically negligible — the drop rate
+    is reported by the aux output and asserted small in tests).
+    """
+    T, d = x.shape
+    k = slots.shape[1]
+    spr = ep.slots_per_rank
+    world = ep.world
+    cap = ep.capacity(T, k)
+    nbuf = world * spr * cap
+
+    flat_slot = slots.reshape(-1).astype(jnp.int32)            # [N]
+    pos = _bucket_positions(flat_slot, ep.num_slots)           # [N]
+    ok = pos < cap                                             # capacity check
+    # flat destination offset; invalid entries pushed out of bounds (dropped
+    # by scatter mode=drop)
+    f = flat_slot * cap + pos
+    f = jnp.where(ok, f, nbuf)
+
+    send = jnp.zeros((nbuf, d), x.dtype)
+    send = send.at[f].set(jnp.repeat(x, k, axis=0), mode="drop")
+    send = send.reshape(world, spr, cap, d)
+
+    if ep.axis_names:
+        recv = jax.lax.all_to_all(send, ep.axis_names, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    else:
+        recv = send                                             # world == 1
+    # recv: [world_src, spr, cap, d] — tokens for MY spr local slots
+    recv = recv.transpose(1, 0, 2, 3).reshape(spr, world * cap, d)
+
+    y = expert_fn(recv)                                         # [spr, world*cap, d]
+
+    y = y.reshape(spr, world, cap, d).transpose(1, 0, 2, 3)
+    if ep.axis_names:
+        back = jax.lax.all_to_all(y, ep.axis_names, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    else:
+        back = y
+    back = back.reshape(nbuf, d)
+
+    # gather each token's k contributions; dropped entries contribute zero
+    gathered = jnp.take(back, jnp.where(ok, f, 0), axis=0)      # [N, d]
+    w = (weights.reshape(-1) * ok.astype(weights.dtype))[:, None]
+    out = jnp.sum((gathered.astype(jnp.float32) * w).reshape(T, k, d), axis=1)
+
+    aux = {
+        "dropped_fraction": 1.0 - jnp.mean(ok.astype(jnp.float32)),
+        "capacity": cap,
+    }
+    return out.astype(x.dtype), aux
+
+
+def expert_load_from_route(experts: jax.Array, weights: jax.Array,
+                           num_experts: int) -> jax.Array:
+    """Per-logical-expert token load of this batch (EPLB telemetry)."""
+    onehot = jax.nn.one_hot(experts.reshape(-1), num_experts, dtype=jnp.float32)
+    return jnp.sum(onehot, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-membership baseline (the DeepEP analogue for Fig. 9)
+# ---------------------------------------------------------------------------
+
+
+def fixed_route(
+    logits: jax.Array,            # [T, E]
+    slot_of_expert: np.ndarray,   # STATIC int32[E] — baked at trace time
+    top_k: int,
+    normalize: bool = True,
+):
+    """Fixed-membership routing: the expert->slot map is a compile-time
+    constant (the analogue of DeepEP's preconfigured EP group). Same math as
+    ``elastic_route`` minus the mutable-table consults."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)
+    if normalize:
+        weights = weights / jnp.maximum(
+            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    table = jnp.asarray(slot_of_expert, jnp.int32)
+    slots = table[experts]
+    return experts, weights, slots

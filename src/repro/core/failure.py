@@ -1,0 +1,126 @@
+"""Failure model, detection and injection (paper §3.1, §4.1).
+
+Fail-stop only: a rank becomes unreachable (process crash, host loss, link
+failure). Detection in the paper happens via GPU-side RDMA-atomic progress
+counters with a 1 s timeout inside the dispatch/combine kernels; on TPU the
+collectives are globally scheduled, so detection moves to the step boundary
+(heartbeats aged against a timeout by the serving loop) — see DESIGN.md §2.
+
+In-flight requests at the moment of failure are reported failed and must be
+retried by the client (paper: EEP does not buffer or internally retry).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class RankState(Enum):
+    ACTIVE = "active"
+    FAILED = "failed"
+    RELAUNCHING = "relaunching"
+    WARMING = "warming"          # deferred-join local-only warmup
+    JOIN_READY = "join_ready"
+    # after join the rank is ACTIVE again
+
+
+@dataclass
+class FailureEvent:
+    time: float
+    ranks: list[int]
+    kind: str = "sigkill"        # paper injects SIGKILL on GPU processes
+
+
+class SimClock:
+    """Deterministic simulated clock shared by detector/controller/engine."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+    def now(self) -> float:
+        return self.t
+
+
+class FailureDetector:
+    """Timeout-based detection over per-rank heartbeats.
+
+    In steady state every completed serving step refreshes all active peers'
+    heartbeats (the analogue of the per-round RDMA-atomic counter arrivals).
+    A failed rank stops refreshing; once its heartbeat age exceeds the
+    timeout, it is deemed unreachable (paper §4.1: 'currently 1 s').
+    """
+
+    def __init__(self, world: int, clock: SimClock, timeout_s: float = 1.0):
+        self.world = world
+        self.clock = clock
+        self.timeout_s = timeout_s
+        self.last_heartbeat = np.zeros(world)
+        self.reachable = np.ones(world, bool)
+        self.reported: set[int] = set()
+
+    def heartbeat(self, ranks=None) -> None:
+        now = self.clock.now()
+        for r in (range(self.world) if ranks is None else ranks):
+            if self.reachable[r]:
+                self.last_heartbeat[r] = now
+
+    def mark_unreachable(self, rank: int) -> None:
+        """Fail-stop injection: the rank stops producing heartbeats."""
+        self.reachable[rank] = False
+
+    def mark_reachable(self, rank: int) -> None:
+        self.reachable[rank] = True
+        self.reported.discard(rank)
+        self.last_heartbeat[rank] = self.clock.now()
+
+    def poll(self) -> list[int]:
+        """NEWLY detected failures (each fail-stop event reported once)."""
+        now = self.clock.now()
+        fresh = [r for r in range(self.world)
+                 if not self.reachable[r] and r not in self.reported
+                 and now - self.last_heartbeat[r] >= self.timeout_s]
+        self.reported.update(fresh)
+        return fresh
+
+    def known_reachable(self) -> np.ndarray:
+        """The control plane's view: a failed rank is 'unreachable' only once
+        detection has fired. During the timeout window the instance
+        unknowingly targets it — the paper's detection-latency window, not a
+        contract violation by the controller."""
+        out = np.ones(self.world, bool)
+        for r in self.reported:
+            out[r] = False
+        return out
+
+
+class FailureInjector:
+    """Scripted fail-stop / repair events for benchmarks and tests."""
+
+    def __init__(self, detector: FailureDetector):
+        self.detector = detector
+        self.schedule: list[FailureEvent] = []
+        self.fired: set[int] = set()
+
+    def inject_at(self, time: float, ranks: list[int]) -> None:
+        self.schedule.append(FailureEvent(time=time, ranks=list(ranks)))
+
+    def step(self) -> list[FailureEvent]:
+        """Fire any events whose time has come; returns them."""
+        now = self.detector.clock.now()
+        fired = []
+        for i, ev in enumerate(self.schedule):
+            if i in self.fired or ev.time > now:
+                continue
+            for r in ev.ranks:
+                self.detector.mark_unreachable(r)
+            self.fired.add(i)
+            fired.append(ev)
+        return fired

@@ -1,0 +1,192 @@
+"""Membership as explicit, mutable runtime state (paper §3.4, §4.1).
+
+The paper's GPU-resident peer table becomes, on TPU/XLA, a pytree of small
+device arrays that are *arguments* of the compiled step function. The compiled
+executable (the CUDA-graph analogue) is compiled once against fixed shapes;
+failure and reintegration only rewrite array *contents* — never structure — so
+healthy ranks never recompile. ``tests/test_elastic_e2e.py`` asserts this by
+counting compilations across a fail/rejoin cycle.
+
+Terminology (mirrors the paper):
+  world            number of EP ranks in the instance (static)
+  slot             physical expert slot; ``num_slots = world * slots_per_rank``
+  logical expert   model-level expert id in [0, E)
+  placement        slot -> logical expert map + its inverse with replicas
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large prime used for deterministic replica selection (token, expert) -> slot.
+REPLICA_HASH_PRIME = 1000003
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class MembershipState:
+    """Graph-visible routing/peer state (paper Fig. 4), as device arrays.
+
+    All fields have static shapes; contents are patched in place across
+    failure and reintegration.
+    """
+
+    active: jax.Array           # bool[world]      peer-table active bits
+    slot_to_expert: jax.Array   # int32[num_slots] -1 = empty/invalid slot
+    expert_to_slot: jax.Array   # int32[E, MAX_R]  -1 = pad
+    replica_count: jax.Array    # int32[E]
+    version: jax.Array          # int32[]          bumped on every patch
+
+    @property
+    def world(self) -> int:
+        return self.active.shape[0]
+
+    @property
+    def num_slots(self) -> int:
+        return self.slot_to_expert.shape[0]
+
+    @property
+    def num_experts(self) -> int:
+        return self.expert_to_slot.shape[0]
+
+    @property
+    def max_replicas(self) -> int:
+        return self.expert_to_slot.shape[1]
+
+    @property
+    def slots_per_rank(self) -> int:
+        return self.num_slots // self.world
+
+
+def max_replicas_for(world: int, slots_per_rank: int, num_experts: int) -> int:
+    """Static bound on replicas per expert. EPLB may over-replicate hot
+    experts, so leave headroom above the uniform ratio."""
+    uniform = max(1, (world * slots_per_rank) // max(num_experts, 1))
+    return min(world * slots_per_rank, uniform + 2)
+
+
+@dataclass
+class PeerEntry:
+    """Host-side mirror of one peer-table entry (paper Fig. 7). Transport
+    metadata is symbolic in this repro: on TPU the fabric is the ICI mesh and
+    'reprogramming the endpoint' is re-establishing the rank's slice of the
+    jit arguments; we keep the fields to model the protocol faithfully."""
+
+    rank: int
+    active: bool = True
+    reachability: str = "ici"      # "ici" (intra-pod) | "dcn" (inter-pod)
+    endpoint_epoch: int = 0        # bumped when metadata is re-exchanged
+    last_heartbeat: float = 0.0
+
+
+class PeerTable:
+    """Host-side control-plane mirror of the device membership arrays.
+
+    The device arrays are the single source of truth for the data path; this
+    mirror is what the controller/EPLB/repair planner mutate, then publish to
+    the device with :meth:`to_device` (one tiny transfer, between steps).
+    """
+
+    def __init__(self, world: int, num_experts: int, slots_per_rank: int = 1,
+                 max_replicas: Optional[int] = None):
+        self.world = world
+        self.num_experts = num_experts
+        self.slots_per_rank = slots_per_rank
+        self.num_slots = world * slots_per_rank
+        self.max_replicas = max_replicas or max_replicas_for(
+            world, slots_per_rank, num_experts)
+        self.entries = [PeerEntry(rank=r) for r in range(world)]
+        self.slot_to_expert = np.full((self.num_slots,), -1, np.int32)
+        self.version = 0
+
+    # -- membership transitions --------------------------------------------
+    def deactivate(self, rank: int) -> None:
+        """Failure: clear the active bit (paper §4.1 'in-place update')."""
+        self.entries[rank].active = False
+        self.version += 1
+
+    def reactivate(self, rank: int) -> None:
+        """Reintegration: refresh metadata and set the bit (paper Fig. 8)."""
+        e = self.entries[rank]
+        e.active = True
+        e.endpoint_epoch += 1
+        self.version += 1
+
+    def set_placement(self, slot_to_expert: np.ndarray) -> None:
+        assert slot_to_expert.shape == (self.num_slots,)
+        self.slot_to_expert = slot_to_expert.astype(np.int32)
+        self.version += 1
+
+    # -- views ---------------------------------------------------------------
+    @property
+    def active_mask(self) -> np.ndarray:
+        return np.array([e.active for e in self.entries], dtype=bool)
+
+    def active_ranks(self) -> list[int]:
+        return [r for r in range(self.world) if self.entries[r].active]
+
+    def rank_of_slot(self, slot: int) -> int:
+        return slot // self.slots_per_rank
+
+    def slots_of_rank(self, rank: int) -> list[int]:
+        s = self.slots_per_rank
+        return list(range(rank * s, (rank + 1) * s))
+
+    def expert_to_slots(self) -> dict[int, list[int]]:
+        """Expert-location metadata (paper §5.1): every physical location of
+        each logical expert, restricted to *active* ranks."""
+        out: dict[int, list[int]] = {e: [] for e in range(self.num_experts)}
+        act = self.active_mask
+        for slot, e in enumerate(self.slot_to_expert):
+            if e >= 0 and act[self.rank_of_slot(slot)]:
+                out[int(e)].append(slot)
+        return out
+
+    # -- device publication ---------------------------------------------------
+    def to_device(self, sharding=None) -> MembershipState:
+        """Publish the mirror as graph-visible device arrays."""
+        e2s = np.full((self.num_experts, self.max_replicas), -1, np.int32)
+        counts = np.zeros((self.num_experts,), np.int32)
+        for e, slots in self.expert_to_slots().items():
+            k = min(len(slots), self.max_replicas)
+            e2s[e, :k] = slots[:k]
+            counts[e] = k
+        def put(x):
+            if sharding is not None:
+                return jax.device_put(x, sharding)
+            return jnp.asarray(x)
+        return MembershipState(
+            active=put(self.active_mask),
+            slot_to_expert=put(self.slot_to_expert),
+            expert_to_slot=put(e2s),
+            replica_count=put(counts),
+            version=put(np.int32(self.version)),
+        )
+
+    def clone(self) -> "PeerTable":
+        t = PeerTable(self.world, self.num_experts, self.slots_per_rank,
+                      self.max_replicas)
+        t.entries = [dataclasses.replace(e) for e in self.entries]
+        t.slot_to_expert = self.slot_to_expert.copy()
+        t.version = self.version
+        return t
+
+
+def make_initial_membership(world: int, num_experts: int,
+                            slots_per_rank: int = 1) -> PeerTable:
+    """Initial placement: round-robin experts over slots; extra slots hold
+    replicas (anti-affine: replica r of expert e lands on a different rank)."""
+    table = PeerTable(world, num_experts, slots_per_rank)
+    s2e = np.full((table.num_slots,), -1, np.int32)
+    for slot in range(table.num_slots):
+        s2e[slot] = slot % num_experts if num_experts > 0 else -1
+    # anti-affinity pass: if a rank holds the same expert twice while some
+    # expert has fewer replicas, this initial map already avoids it because
+    # stride num_experts >= slots_per_rank in all assigned configs.
+    table.set_placement(s2e)
+    return table

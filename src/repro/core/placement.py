@@ -1,0 +1,143 @@
+"""Elasticity-aware expert placement (paper §5.1: 'EPLB variant that takes the
+current active-rank set as input and returns a placement that covers all
+logical experts over the surviving ranks').
+
+The balancer solves: given per-expert load weights and the active rank set,
+produce slot -> expert so that
+  (1) every logical expert has >= 1 replica on an active rank   [coverage]
+  (2) replica counts are ~proportional to load                  [balance]
+  (3) replicas of one expert prefer distinct ranks              [anti-affinity]
+  (4) the new placement maximizes overlap with the previous one [cheap repair]
+Property (4) is what keeps Tier-1 (local reuse) the common case in the repair
+hierarchy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class PlacementResult:
+    slot_to_expert: np.ndarray          # int32[num_slots]; -1 on inactive ranks
+    replicas: dict[int, list[int]]      # expert -> slots
+    rank_load: np.ndarray               # float[world] expected load per rank
+    infeasible: bool = False
+    reason: str = ""
+
+
+def eplb_place(
+    num_experts: int,
+    world: int,
+    slots_per_rank: int,
+    active: np.ndarray,                  # bool[world]
+    load: Optional[np.ndarray] = None,   # float[E] expert load (EMA); None=uniform
+    prev_slot_to_expert: Optional[np.ndarray] = None,
+    max_replicas: Optional[int] = None,
+    rank_capacity: Optional[np.ndarray] = None,  # float[world]: straggler
+                                                 # de-weighting (1.0 = full)
+) -> PlacementResult:
+    num_slots = world * slots_per_rank
+    active = np.asarray(active, bool)
+    active_ranks = np.nonzero(active)[0]
+    usable_slots = [s for r in active_ranks for s in
+                    range(r * slots_per_rank, (r + 1) * slots_per_rank)]
+    S = len(usable_slots)
+    s2e = np.full((num_slots,), -1, np.int32)
+
+    if S < num_experts:
+        # Coverage is impossible: fewer live slots than logical experts.
+        # (Paper assumes the majority of ranks survive; callers treat this as
+        # an unrecoverable-by-shrink event.)
+        return PlacementResult(s2e, {}, np.zeros(world), True,
+                               f"{S} active slots < {num_experts} experts")
+
+    if load is None:
+        load = np.ones((num_experts,), np.float64)
+    load = np.maximum(np.asarray(load, np.float64), 1e-9)
+    load = load / load.sum()
+
+    cap = max_replicas or S  # per-expert replica cap (static table width)
+
+    # ---- step 1: replica counts proportional to load, >= 1 each ------------
+    r = np.maximum(1, np.floor(load * S).astype(int))
+    r = np.minimum(r, cap)
+    # trim or grow to exactly S replicas total
+    while r.sum() > S:
+        # take away from the most over-replicated relative to load
+        over = (r - 1) / np.maximum(load * S, 1e-9)
+        over[r <= 1] = -np.inf
+        r[int(np.argmax(over))] -= 1
+    while r.sum() < S:
+        under = load * S / r
+        under[r >= cap] = -np.inf
+        i = int(np.argmax(under))
+        if not np.isfinite(under[i]):
+            break  # every expert at cap; leave remaining slots empty
+        r[i] += 1
+
+    # ---- step 2: assign replicas to slots ----------------------------------
+    # Greedy: experts in decreasing per-replica load; each replica goes to the
+    # least-loaded active rank that (a) has a free slot and (b) doesn't already
+    # host this expert (anti-affinity), falling back to (a) only.
+    # Preference: a slot that already held this expert (Tier-1 reuse).
+    per_replica = load / r
+    order = np.argsort(-per_replica)
+    rank_load = np.zeros((world,), np.float64)
+    rcap = np.ones(world) if rank_capacity is None else np.maximum(
+        np.asarray(rank_capacity, np.float64), 1e-3)
+    free: dict[int, list[int]] = {int(rr): list(range(rr * slots_per_rank,
+                                                      (rr + 1) * slots_per_rank))
+                                  for rr in active_ranks}
+    prev = prev_slot_to_expert
+    replicas: dict[int, list[int]] = {e: [] for e in range(num_experts)}
+
+    # Pass 0: pin Tier-1 reuse — keep an expert where it already lives, up to
+    # its replica budget, consuming rank budgets.
+    if prev is not None:
+        budget = r.copy()
+        for rr in active_ranks:
+            for s in range(rr * slots_per_rank, (rr + 1) * slots_per_rank):
+                e = int(prev[s])
+                if e >= 0 and budget[e] > 0 and s in free[int(rr)]:
+                    s2e[s] = e
+                    replicas[e].append(s)
+                    budget[e] -= 1
+                    free[int(rr)].remove(s)
+                    rank_load[rr] += per_replica[e]
+        remaining = budget
+    else:
+        remaining = r.copy()
+
+    for e in order:
+        e = int(e)
+        for _ in range(int(remaining[e])):
+            hosts = {s // slots_per_rank for s in replicas[e]}
+            # candidate ranks with free slots, anti-affine first
+            cands = [rr for rr in active_ranks if free[int(rr)] and rr not in hosts]
+            if not cands:
+                cands = [rr for rr in active_ranks if free[int(rr)]]
+            if not cands:
+                break
+            rr = int(min(cands, key=lambda x: rank_load[x] / rcap[x]))
+            s = free[rr].pop(0)
+            s2e[s] = e
+            replicas[e].append(s)
+            rank_load[rr] += per_replica[e]
+
+    covered = all(len(v) >= 1 for v in replicas.values())
+    return PlacementResult(
+        s2e, replicas, rank_load,
+        infeasible=not covered,
+        reason="" if covered else "greedy assignment left an expert uncovered",
+    )
+
+
+def placement_overlap(a: np.ndarray, b: np.ndarray) -> float:
+    """Fraction of slots whose expert is unchanged (Tier-1 reuse rate)."""
+    both = (a >= 0) & (b >= 0)
+    if not both.any():
+        return 0.0
+    return float((a[both] == b[both]).mean())

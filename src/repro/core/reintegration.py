@@ -1,0 +1,98 @@
+"""Deferred-join rank reintegration (paper §3.6, §4.2).
+
+The recovering rank performs its entire warmup — runtime init, communication
+endpoints, weight load, graph (executable) capture — in *isolation*, via a
+local-only group, while healthy ranks keep serving on the reduced peer set.
+Only when it reaches JOIN_READY do healthy ranks incorporate it, with two
+steps that never touch their compiled executables:
+  1. refresh the rank's peer-table entry (re-exchange metadata),
+  2. broadcast the current expert-location metadata and publish the extended
+     active mask + restored placement between forward passes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.failure import RankState, SimClock
+
+
+@dataclass(frozen=True)
+class WarmupCostModel:
+    """Local warmup phases of the recovering rank (off the critical path).
+    Defaults sum to ~ the paper's asynchronous relaunch time scale; only the
+    *join patch* (sub-second) lands on healthy ranks."""
+
+    process_relaunch_s: float = 3.0     # controller restarts the process
+    runtime_init_s: float = 6.0         # python + device runtime + endpoints
+    weight_load_s: float = 12.0         # its shard under the restored placement
+    graph_capture_s: float = 9.0        # executable warm-up (local-only)
+
+    @property
+    def total_s(self) -> float:
+        return (self.process_relaunch_s + self.runtime_init_s
+                + self.weight_load_s + self.graph_capture_s)
+
+
+@dataclass
+class RecoveringRank:
+    rank: int
+    state: RankState
+    t_state_entered: float
+    warmup: WarmupCostModel
+
+
+class ReintegrationController:
+    """Controller that relaunches failed ranks outside the serving critical
+    path and reports join-readiness (paper Fig. 6). Healthy-side join steps
+    are executed by the ElasticEPRuntime, which polls this controller
+    'periodically between forward passes'."""
+
+    def __init__(self, clock: SimClock,
+                 warmup: Optional[WarmupCostModel] = None):
+        self.clock = clock
+        self.warmup = warmup or WarmupCostModel()
+        self.recovering: dict[int, RecoveringRank] = {}
+
+    # -- failure side -----------------------------------------------------------
+    def schedule_relaunch(self, rank: int) -> None:
+        self.recovering[rank] = RecoveringRank(
+            rank=rank, state=RankState.RELAUNCHING,
+            t_state_entered=self.clock.now(), warmup=self.warmup)
+
+    # -- progression (driven by the sim clock) -----------------------------------
+    def _advance(self, rr: RecoveringRank) -> None:
+        now = self.clock.now()
+        w = rr.warmup
+        elapsed = now - rr.t_state_entered
+        if rr.state == RankState.RELAUNCHING and elapsed >= w.process_relaunch_s:
+            rr.state = RankState.WARMING
+            rr.t_state_entered += w.process_relaunch_s
+            elapsed = now - rr.t_state_entered
+        if rr.state == RankState.WARMING:
+            # local-only warmup: runtime init + weight load + capture
+            local = w.runtime_init_s + w.weight_load_s + w.graph_capture_s
+            if elapsed >= local:
+                rr.state = RankState.JOIN_READY
+                rr.t_state_entered += local
+
+    def poll_join_ready(self) -> list[int]:
+        """Healthy ranks poll between forward passes (paper §3.6)."""
+        ready = []
+        for rr in self.recovering.values():
+            self._advance(rr)
+            if rr.state == RankState.JOIN_READY:
+                ready.append(rr.rank)
+        return sorted(ready)
+
+    def complete_join(self, rank: int) -> None:
+        self.recovering.pop(rank, None)
+
+    def state_of(self, rank: int) -> Optional[RankState]:
+        rr = self.recovering.get(rank)
+        if rr is None:
+            return None
+        self._advance(rr)
+        return rr.state

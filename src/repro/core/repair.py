@@ -1,0 +1,187 @@
+"""Three-tier expert-coverage repair (paper §3.5, §5.1).
+
+After the elasticity-aware EPLB computes a covering placement over survivors,
+the repair path satisfies it through the bandwidth-aware hierarchy:
+
+  Tier 1 — local reuse:        slot already holds the expert -> metadata only
+  Tier 2 — GPU-to-GPU reloc:   a surviving replica exists -> one *batched*
+                               gather over the slot axis (on a sharded array
+                               this lowers to EP-axis collectives: the paper's
+                               'batched transfer schedule')
+  Tier 3 — DRAM-backed reload: all live copies died -> fetch from the backup
+                               service into device memory
+
+The planner consults the active bitmap atomically per transfer (paper §5.1):
+if a chosen Tier-2 source died between planning and execution, the expert is
+re-planned to Tier 3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backup import BackupStore
+
+
+@dataclass
+class RepairPlan:
+    num_slots: int
+    tier1: list[int] = field(default_factory=list)            # dst slots reused
+    tier2: list[tuple[int, int]] = field(default_factory=list)  # (dst, src)
+    tier3: list[tuple[int, int]] = field(default_factory=list)  # (dst, expert)
+    cleared: list[int] = field(default_factory=list)           # slots emptied
+    unrecoverable: list[int] = field(default_factory=list)     # experts lost
+    bytes_per_slot: int = 0
+
+    @property
+    def tier2_bytes(self) -> int:
+        return len(self.tier2) * self.bytes_per_slot
+
+    @property
+    def tier3_bytes(self) -> int:
+        return len(self.tier3) * self.bytes_per_slot
+
+    def source_mix(self) -> dict[str, int]:
+        """Repair-source mix (paper Fig. 10 middle)."""
+        return {"local_reuse": len(self.tier1),
+                "gpu_relocation": len(self.tier2),
+                "dram_reload": len(self.tier3)}
+
+
+def plan_repair(
+    old_slot_to_expert: np.ndarray,       # placement before the failure
+    new_slot_to_expert: np.ndarray,       # EPLB output over survivors
+    active: np.ndarray,                    # bool[world] CURRENT active bitmap
+    slots_per_rank: int,
+    backup: Optional[BackupStore] = None,
+    bytes_per_slot: int = 0,
+) -> RepairPlan:
+    num_slots = len(new_slot_to_expert)
+    active = np.asarray(active, bool)
+
+    def rank_of(slot: int) -> int:
+        return slot // slots_per_rank
+
+    # Where does each expert still live, on *active* ranks, under the OLD map?
+    live_sources: dict[int, list[int]] = {}
+    for s, e in enumerate(old_slot_to_expert):
+        e = int(e)
+        if e >= 0 and active[rank_of(s)]:
+            live_sources.setdefault(e, []).append(s)
+
+    plan = RepairPlan(num_slots=num_slots, bytes_per_slot=bytes_per_slot)
+    rr: dict[int, int] = {}  # round-robin cursor per expert over its sources
+    for s in range(num_slots):
+        if not active[rank_of(s)]:
+            if old_slot_to_expert[s] >= 0:
+                plan.cleared.append(s)
+            continue
+        e = int(new_slot_to_expert[s])
+        if e < 0:
+            continue
+        if int(old_slot_to_expert[s]) == e:
+            plan.tier1.append(s)                              # Tier 1
+            continue
+        srcs = [x for x in live_sources.get(e, ())
+                if active[rank_of(x)]]                        # atomic re-check
+        if srcs:
+            i = rr.get(e, 0)
+            src = srcs[i % len(srcs)]
+            rr[e] = i + 1
+            plan.tier2.append((s, src))                       # Tier 2
+        elif backup is not None and backup.has(e):
+            plan.tier3.append((s, e))                         # Tier 3
+        else:
+            plan.unrecoverable.append(e)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+def tier2_gather_indices(plan: RepairPlan) -> np.ndarray:
+    """src index per slot for the single batched Tier-2 gather
+    (identity everywhere except relocated destinations)."""
+    idx = np.arange(plan.num_slots, dtype=np.int32)
+    for dst, src in plan.tier2:
+        idx[dst] = src
+    return idx
+
+
+def apply_tier2(slot_weights, plan: RepairPlan):
+    """One batched gather over the slot axis (axis=1 of every [L, S, ...]
+    leaf). Under EP sharding XLA lowers this to the batched EP-axis transfer
+    schedule; in single-device simulation it is a local gather."""
+    if not plan.tier2:
+        return slot_weights
+    idx = jnp.asarray(tier2_gather_indices(plan))
+    return jax.tree_util.tree_map(lambda a: jnp.take(a, idx, axis=1),
+                                  slot_weights)
+
+
+def apply_tier3(slot_weights, plan: RepairPlan, backup: BackupStore):
+    """Batched DRAM-backed reload: fetch host copies, one scatter per leaf."""
+    if not plan.tier3:
+        return slot_weights
+    dst = jnp.asarray(np.array([d for d, _ in plan.tier3], np.int32))
+    fetched = [backup.fetch(e) for _, e in plan.tier3]   # list of pytrees
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs, axis=1), *fetched)
+    # stacked leaves: [L, n_t3, ...] matching slot axis semantics
+    def scatter(a, upd):
+        return a.at[:, dst].set(jnp.asarray(upd, a.dtype))
+    return jax.tree_util.tree_map(scatter, slot_weights, stacked)
+
+
+def apply_repair(slot_weights, plan: RepairPlan,
+                 backup: Optional[BackupStore] = None):
+    """Full repair: Tier-2 batched relocation, then Tier-3 reloads.
+    Tier 1 requires no data movement (metadata was already updated by the
+    placement publish)."""
+    out = apply_tier2(slot_weights, plan)
+    if plan.tier3:
+        assert backup is not None, "Tier-3 repairs need a backup store"
+        out = apply_tier3(out, plan, backup)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Recovery-time cost model (drives the Fig. 1/10/11 simulations)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RecoveryCostModel:
+    """Bandwidths/latencies for the simulated cluster. Defaults approximate
+    the paper's testbed scaled to the TPU fabric model in DESIGN.md."""
+
+    ici_gbps: float = 50.0          # per-link GB/s (Tier-2 relocation)
+    host_gbps: float = 12.0         # host->device GB/s (Tier-3 reload)
+    detect_s: float = 1.0           # timeout window (paper: 1 s)
+    coordinate_s: float = 0.8       # EPLB + metadata broadcast + publish
+    drain_s: float = 0.5            # in-flight requests failed & drained
+    join_patch_s: float = 0.4       # peer-table refresh + placement broadcast
+
+    def recovery_seconds(self, plan: RepairPlan, world: int,
+                         slots_per_rank: int) -> dict[str, float]:
+        """Phase breakdown, parallelized over ranks: each rank moves the bytes
+        destined to its own slots; the wall time is the max over ranks."""
+        per_rank_t2 = np.zeros(world)
+        per_rank_t3 = np.zeros(world)
+        for dst, _ in plan.tier2:
+            per_rank_t2[dst // slots_per_rank] += plan.bytes_per_slot
+        for dst, _ in plan.tier3:
+            per_rank_t3[dst // slots_per_rank] += plan.bytes_per_slot
+        t2 = float(per_rank_t2.max(initial=0.0)) / (self.ici_gbps * 1e9)
+        t3 = float(per_rank_t3.max(initial=0.0)) / (self.host_gbps * 1e9)
+        return {
+            "detect": self.detect_s,
+            "drain": self.drain_s,
+            "coordinate": self.coordinate_s,
+            "weight_transfer": t2 + t3,
+            "total": self.detect_s + self.drain_s + self.coordinate_s + t2 + t3,
+        }

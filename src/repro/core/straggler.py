@@ -1,0 +1,80 @@
+"""Straggler mitigation on the elastic-membership substrate.
+
+The paper treats transient slowness only via its fail-stop timeout (a rank
+slower than 1 s is declared dead — §4.1). At scale, persistent-but-alive
+stragglers (thermal throttling, noisy neighbours, degraded HBM) are routine
+and killing them wastes capacity. Because EEP's placement is mutable runtime
+state, there is a gentler lever: *de-weight* the straggler in the
+elasticity-aware EPLB so hot experts' replicas migrate to fast ranks, and
+keep only cold/replicated load on the slow rank. No recompile, no
+membership change — the same in-place table patch as failure repair, with
+``active`` bits untouched.
+
+Detection: per-rank step-latency EMA against the fleet median; mitigation:
+capacity weights fed to ``eplb_place`` (a rank at 0.5 capacity receives
+half the expected load). Recovery is symmetric: when the EMA normalizes,
+the preferred placement is restored.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class StragglerConfig:
+    ema: float = 0.8
+    slow_threshold: float = 1.5     # x fleet median => straggler
+    recover_threshold: float = 1.1  # back under this => healthy
+    min_capacity: float = 0.25      # never de-weight below this
+
+
+class StragglerMonitor:
+    """Tracks per-rank step latencies and produces EPLB capacity weights."""
+
+    def __init__(self, world: int, cfg: StragglerConfig | None = None):
+        self.world = world
+        self.cfg = cfg or StragglerConfig()
+        self.latency_ema = np.zeros(world)
+        self.flagged: set[int] = set()
+
+    def observe(self, per_rank_latency: np.ndarray, active: np.ndarray) -> None:
+        a = self.cfg.ema
+        lat = np.asarray(per_rank_latency, np.float64)
+        init = self.latency_ema == 0
+        self.latency_ema = np.where(init, lat,
+                                    a * self.latency_ema + (1 - a) * lat)
+        self.latency_ema = np.where(active, self.latency_ema, 0.0)
+
+    def classify(self, active: np.ndarray) -> set[int]:
+        """Update and return the flagged straggler set (hysteresis)."""
+        live = self.latency_ema[active & (self.latency_ema > 0)]
+        if live.size == 0:
+            return self.flagged
+        med = float(np.median(live))
+        if med <= 0:
+            return self.flagged
+        for r in range(self.world):
+            if not active[r] or self.latency_ema[r] == 0:
+                self.flagged.discard(r)
+                continue
+            ratio = self.latency_ema[r] / med
+            if ratio > self.cfg.slow_threshold:
+                self.flagged.add(r)
+            elif r in self.flagged and ratio < self.cfg.recover_threshold:
+                self.flagged.discard(r)
+        return self.flagged
+
+    def capacity_weights(self, active: np.ndarray) -> np.ndarray:
+        """Per-rank relative capacity for EPLB: a straggler's weight is the
+        fleet-median latency over its own (work-proportional slowdown)."""
+        w = np.ones(self.world)
+        live = self.latency_ema[active & (self.latency_ema > 0)]
+        if live.size == 0:
+            return w
+        med = float(np.median(live))
+        for r in self.flagged:
+            if active[r] and self.latency_ema[r] > 0:
+                w[r] = max(self.cfg.min_capacity, med / self.latency_ema[r])
+        return w

@@ -1,0 +1,205 @@
+"""Flash attention (causal GQA) — Pallas TPU kernels.
+
+Prefill: online-softmax over K/V blocks; grid (B, H, Sq/bq, Sk/bk) with the
+K axis innermost (sequential on TPU) carrying running (max, denom, acc)
+scratch in VMEM. Fully-masked K blocks (k_start > q_end) are skipped via
+pl.when — the causal triangle costs ~S^2/2 instead of S^2.
+
+Decode: one query token against a [B, W, KV, hd] cache with per-batch
+lengths; grid (B, KV, W/bk) accumulating online softmax over cache blocks.
+
+Validated in interpret mode against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                    scale: float, bq: int, bk: int, window: int):
+    kb = pl.program_id(3)
+    qb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qb * bq
+    k_start = kb * bk
+
+    # causal block skip: this K block intersects the triangle iff
+    # k_start <= q_end; with a window also k_end > q_start - window
+    live = k_start <= q_start + bq - 1
+    if window > 0:
+        live = jnp.logical_and(live, k_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _():
+        q = q_ref[0, 0]                    # [bq, hd]
+        k = k_ref[0, 0]                    # [bk, hd]
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [bq, bk]
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos <= qpos
+        if window > 0:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(3) - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_prefill(q, k, v, *, scale: float | None = None,
+                            window: int = 0, block_q: int = 256,
+                            block_k: int = 256, interpret: bool = False):
+    """q: [B, Sq, H, hd]; k/v: [B, Sk, KV, hd]; causal (+optional window).
+    Returns [B, Sq, H, hd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "pad seq to block multiples"
+
+    qh = q.transpose(0, 2, 1, 3)           # [B, H, Sq, hd]
+    kh = k.transpose(0, 2, 1, 3)           # [B, KV, Sk, hd]
+    vh = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_prefill_kernel, scale=scale, bq=bq, bk=bk,
+                               window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh.reshape(B, H, Sq, hd), kh, vh)
+    return out.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, bk: int, G: int):
+    b = pl.program_id(0)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    k_start = kb * bk
+
+    @pl.when(k_start <= length)
+    def _():
+        q = q_ref[0, 0]                    # [G, hd]
+        k = k_ref[0, 0]                    # [bk, hd]
+        v = v_ref[0, 0]
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # [G, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        ok = kpos <= length                # include the just-written token
+        s = jnp.where(ok, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_decode(q, k, v, lengths, *, scale: float | None = None,
+                           block_k: int = 512, interpret: bool = False):
+    """One-token decode. q: [B, H, hd]; k/v: [B, W, KV, hd] (cache already
+    containing the new token at position ``lengths``); lengths: [B].
+    Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    W, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    bk = min(block_k, W)
+    assert W % bk == 0
+
+    qg = q.reshape(B, KV, G, hd)
+    kh = k.transpose(0, 2, 1, 3)           # [B, KV, W, hd]
+    vh = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, W // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, L: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, L: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, j, L: (b, h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, j, L: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, kh, vh)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.membership import REPLICA_HASH_PRIME
+
+
+def topk_router_ref(logits, expert_to_slot, replica_count, token_ids, *,
+                    top_k: int, normalize: bool = True):
+    valid = replica_count > 0
+    neg = jnp.finfo(jnp.float32).min
+    masked = jnp.where(valid[None, :], logits.astype(jnp.float32), neg)
+    probs = jax.nn.softmax(masked, axis=-1)
+    weights, experts = jax.lax.top_k(probs, top_k)
+    if normalize:
+        weights = weights / jnp.maximum(
+            jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    rc = jnp.maximum(replica_count[experts], 1)
+    r = (token_ids[:, None] * REPLICA_HASH_PRIME + experts) % rc
+    slots = jnp.take_along_axis(
+        expert_to_slot[experts.reshape(-1)],
+        r.reshape(-1, 1).astype(jnp.int32), axis=1).reshape(experts.shape)
+    return experts.astype(jnp.int32), weights, slots.astype(jnp.int32)
+
+
+def _act(h, activation):
+    if activation == "swiglu":
+        return jax.nn.silu(h)
+    if activation in ("geglu", "gelu"):
+        return jax.nn.gelu(h, approximate=True)
+    if activation == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(activation)
+
+
+def fused_moe_ffn_ref(x, w_in, w_out, w_gate=None, *, activation="swiglu"):
+    h = jnp.einsum("srd,sde->sre", x, w_in,
+                   preferred_element_type=jnp.float32)
+    if w_gate is not None:
+        g = jnp.einsum("srd,sde->sre", x, w_gate,
+                       preferred_element_type=jnp.float32)
+        h = _act(g, activation) * h
+    else:
+        h = _act(h, activation)
+    y = jnp.einsum("sre,sed->srd", h.astype(w_out.dtype), w_out,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gmm_ref(x, w, group_sizes):
+    """x [T, d] group-sorted; w [G, d, f]; group_sizes [G]."""
+    T = x.shape[0]
+    G = w.shape[0]
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    gid = jnp.searchsorted(starts, jnp.arange(T), side="right") - 1
+    wt = w[gid]                                     # [T, d, f]
+    return jnp.einsum("td,tdf->tf", x, wt,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_prefill_ref(q, k, v, *, scale=None, window: int = 0):
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_attention_decode_ref(q, k, v, lengths, *, scale=None):
+    B, H, hd = q.shape
+    W, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    ok = jnp.arange(W)[None, :] <= lengths[:, None]      # [B, W]
+    s = jnp.where(ok[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, hd).astype(q.dtype)

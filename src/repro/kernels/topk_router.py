@@ -1,0 +1,107 @@
+"""Fused elastic top-k router — Pallas TPU kernel.
+
+The paper's device-side routing consult (Fig. 7: kernels read the mutable
+peer/routing tables at dispatch time) as one fused kernel:
+
+  masked softmax over *reachable* experts  ->  top-k  ->  renormalize
+  ->  replica selection from expert_to_slot
+
+One HBM round trip over the logits; the membership tables live in VMEM for
+the whole grid (they are KBs). Mutable-table reads keep the kernel binary
+valid across failure/reintegration — only table contents change.
+
+Target: TPU (pl.pallas_call + BlockSpec). Validated on CPU in interpret mode
+against ``repro.kernels.ref.topk_router_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.membership import REPLICA_HASH_PRIME
+
+NEG = jnp.finfo(jnp.float32).min
+
+
+def _router_kernel(logits_ref, e2s_ref, rc_ref, tid_ref,
+                   experts_ref, weights_ref, slots_ref, *, top_k: int,
+                   normalize: bool):
+    logits = logits_ref[...].astype(jnp.float32)          # [bt, E]
+    rc = rc_ref[...]                                      # [E]
+    valid = (rc > 0)[None, :]
+    masked = jnp.where(valid, logits, NEG)
+
+    # row softmax (fp32)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+
+    # iterative top-k (k is small and static)
+    bt, E = probs.shape
+    work = probs
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bt, E), 1)
+    tot = jnp.zeros((bt,), jnp.float32)
+    picks = []
+    for j in range(top_k):
+        w = jnp.max(work, axis=-1)                        # [bt]
+        idx = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        picks.append((idx, w))
+        tot = tot + w
+        work = jnp.where(cols == idx[:, None], NEG, work)
+
+    tid = tid_ref[...]                                    # [bt]
+    for j, (idx, w) in enumerate(picks):
+        wj = w / jnp.maximum(tot, 1e-9) if normalize else w
+        experts_ref[:, j] = idx
+        weights_ref[:, j] = wj
+        # replica select from the mutable table
+        rcj = jnp.maximum(rc[idx], 1)
+        r = (tid * REPLICA_HASH_PRIME + idx) % rcj        # [bt]
+        e2s = e2s_ref[...]                                # [E, R]
+        flat = e2s.reshape(-1)
+        slots_ref[:, j] = flat[idx * e2s.shape[1] + r]
+
+
+def topk_router(logits, expert_to_slot, replica_count, token_ids, *,
+                top_k: int, normalize: bool = True, block_t: int = 256,
+                interpret: bool = False):
+    """logits [T, E] -> (experts [T,k] i32, weights [T,k] f32, slots [T,k])."""
+    T, E = logits.shape
+    R = expert_to_slot.shape[1]
+    bt = min(block_t, T)
+    pad = (-T) % bt
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+        token_ids = jnp.pad(token_ids, ((0, pad),))
+    Tp = T + pad
+
+    kernel = functools.partial(_router_kernel, top_k=top_k,
+                               normalize=normalize)
+    experts, weights, slots = pl.pallas_call(
+        kernel,
+        grid=(Tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, E), lambda i: (i, 0)),
+            pl.BlockSpec((E, R), lambda i: (0, 0)),   # table: whole, VMEM
+            pl.BlockSpec((E,), lambda i: (0,)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, top_k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((Tp, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((Tp, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits, expert_to_slot.astype(jnp.int32),
+      replica_count.astype(jnp.int32), token_ids.astype(jnp.int32))
+    return experts[:T], weights[:T], slots[:T]

@@ -1,0 +1,212 @@
+"""Step functions shared by the dry-run, the trainer and the serving engine:
+``train_step`` (microbatched grad accumulation + optimizer update) and
+``serve_step`` (one decode step) / ``prefill_step``.
+
+Every step takes the mutable MembershipState as an argument — the compiled
+executable is membership-agnostic (the paper's contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.elastic_moe import EPContext
+from repro.models.model import (
+    Deployment,
+    decode_step,
+    forward_train,
+    init_caches,
+    param_shapes,
+    prefill,
+)
+from repro.models.moe import MoEDeployment, local_deployment
+from repro.train.optim import OptimizerConfig, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# Deployment construction
+# ---------------------------------------------------------------------------
+
+
+def make_deployment(cfg: ArchConfig, mesh, *, seq_shard: bool = False,
+                    kind: str = "serve") -> Deployment:
+    fixed = None
+    if cfg.is_moe and kind == "train":
+        # training routes to canonical slots only (fixed membership; R=1)
+        fixed = fixed_slot_of_expert(cfg, make_membership_table(
+            cfg, mesh, kind="train"))
+    if mesh is None:
+        dpl = Deployment.local(cfg)
+        return Deployment(moe=dpl.moe, mesh=None, fixed_s2e=fixed)
+    if cfg.is_moe and cfg.ep_axes:
+        world = int(np.prod([mesh.shape[a] for a in cfg.ep_axes]))
+        spr = num_slots(cfg, mesh, kind) // world
+        ep = EPContext(axis_names=tuple(cfg.ep_axes), world=world,
+                       slots_per_rank=spr,
+                       capacity_factor=cfg.capacity_factor)
+        dep = MoEDeployment(ep=ep, tp_axes=tuple(cfg.expert_tp_axes),
+                            mesh=mesh)
+    elif cfg.is_moe:
+        dep = local_deployment(num_slots(cfg, mesh, kind),
+                               cfg.capacity_factor)
+    else:
+        dep = local_deployment(1, cfg.capacity_factor)
+    return Deployment(moe=dep, mesh=mesh,
+                      seq_shard_axis="data" if seq_shard else None,
+                      fixed_s2e=fixed)
+
+
+def ep_world(cfg: ArchConfig, mesh) -> int:
+    if mesh is None or not cfg.ep_axes:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in cfg.ep_axes]))
+
+
+def num_slots(cfg: ArchConfig, mesh, kind: str = "serve") -> int:
+    """Physical expert slots of the deployment. Serving deployments carry
+    replica slots (slots_per_rank) for the repair hierarchy; training uses
+    the minimal covering count (R=1 where possible) — replicated experts
+    would double optimizer/grad memory and desynchronize under SGD."""
+    if not cfg.is_moe:
+        return 1
+    world = ep_world(cfg, mesh)
+    E = cfg.moe.num_experts
+    if kind == "train":
+        spr = max(1, -(-E // max(world, 1)))
+        return max(world * spr, E)
+    return max(world * cfg.slots_per_rank, E)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — no allocation; the dry-run contract)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    """Stand-ins for every model input of the given cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "vision_stub":
+            batch["visual_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_frontend_tokens, cfg.d_model), dtype)
+        if cfg.encoder is not None:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder.source_len, cfg.d_model), dtype)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "vision_stub":
+            batch["visual_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_frontend_tokens, cfg.d_model), dtype)
+        if cfg.encoder is not None:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder.source_len, cfg.d_model), dtype)
+        caches = jax.eval_shape(lambda: init_caches(cfg, B, S, dtype))
+        return {"batch": batch, "caches": caches}
+    # decode: one new token against a seq_len-deep KV cache
+    caches = jax.eval_shape(lambda: init_caches(cfg, B, S, dtype))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "lengths": jax.ShapeDtypeStruct((B,), i32),
+        "caches": caches,
+    }
+
+
+def make_membership_table(cfg: ArchConfig, mesh, kind: str = "serve"):
+    """The canonical PeerTable for this (arch, mesh) deployment — the single
+    source of truth for membership array shapes."""
+    from repro.core.membership import make_initial_membership
+    world = max(ep_world(cfg, mesh), 1)
+    E = cfg.moe.num_experts if cfg.is_moe else 1
+    slots = num_slots(cfg, mesh, kind)
+    return make_initial_membership(world, E, slots // world)
+
+
+def fixed_slot_of_expert(cfg: ArchConfig, table) -> np.ndarray:
+    """Canonical slot per logical expert (first replica in the initial
+    placement) — used for fixed-membership routing (training cells and the
+    Fig. 9 DeepEP-baseline benchmark)."""
+    E = cfg.moe.num_experts if cfg.is_moe else 1
+    out = np.full((E,), -1, np.int32)
+    for slot, e in enumerate(table.slot_to_expert):
+        if e >= 0 and out[int(e)] < 0:
+            out[int(e)] = slot
+    return out
+
+
+def membership_shapes(cfg: ArchConfig, mesh):
+    ms = make_membership_table(cfg, mesh).to_device()
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), ms)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, dpl: Deployment,
+                    opt_cfg: Optional[OptimizerConfig] = None):
+    opt_cfg = opt_cfg or OptimizerConfig(name=cfg.optimizer)
+    _, opt_update = make_optimizer(opt_cfg)
+    mb = max(cfg.microbatch, 1)
+    acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+    def loss_fn(params, batch, membership):
+        loss, metrics = forward_train(cfg, params, batch, membership, dpl)
+        return loss, metrics
+
+    def train_step(params, opt_state, membership, batch):
+        if mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, membership)
+        else:
+            def slice_mb(i, t):
+                return jax.tree_util.tree_map(
+                    lambda a: a.reshape((mb, a.shape[0] // mb) + a.shape[1:])[i],
+                    t)
+            def mb_body(carry, i):
+                acc, loss_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, slice_mb(i, batch), membership)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(acc_dtype), acc, g)
+                return (acc, loss_acc + l), None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb_body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(mb))
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+            loss = loss / mb
+            metrics = {}
+        params, opt_state, opt_metrics = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, dpl: Deployment):
+    def serve_step(params, caches, membership, tokens, lengths):
+        logits, caches = decode_step(cfg, params, tokens, lengths, caches,
+                                     membership, dpl)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, logits, caches
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, dpl: Deployment):
+    def prefill_step(params, caches, membership, batch):
+        logits, caches = prefill(cfg, params, batch, caches, membership, dpl)
+        return logits, caches
+    return prefill_step

@@ -1,0 +1,49 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x22b \
+      --smoke --steps 200 --batch 8 --seq 128
+
+``--smoke`` uses the reduced same-family config (CPU-runnable); without it
+the full config is built (requires the production mesh / real accelerators).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a fail-stop crash at this step")
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.train.loop import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    tcfg = TrainerConfig(steps=args.steps, lr=args.lr,
+                         checkpoint_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, tcfg, batch=args.batch, seq_len=args.seq)
+    if args.resume and trainer.try_restore():
+        print(f"restored from step {trainer.step}")
+    trainer.run(steps=args.steps - trainer.step, fail_at=args.fail_at)
+    trainer.save()
+    print(f"done at step {trainer.step}; "
+          f"final loss {trainer.history[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.models.model import (
+    Deployment,
+    decode_step,
+    forward_train,
+    init_caches,
+    init_params,
+    param_shapes,
+    prefill,
+)
+from repro.models.moe import MoEDeployment, local_deployment, moe_apply
+from repro.models.transformer import ScanGroup, build_groups
+
+__all__ = [
+    "Deployment", "MoEDeployment", "ScanGroup", "build_groups", "decode_step",
+    "forward_train", "init_caches", "init_params", "local_deployment",
+    "moe_apply", "param_shapes", "prefill",
+]

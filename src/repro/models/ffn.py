@@ -1,0 +1,34 @@
+"""Dense FFN variants: SwiGLU/GeGLU (gated), GELU / squared-ReLU (non-gated)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import activation_fn, is_gated
+
+
+def ffn_init(key, d_model: int, d_ff: int, activation: str, dtype):
+    ks = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    p = {
+        "w_in": (jax.random.normal(ks[0], (d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[1], (d_ff, d_model), jnp.float32) * s_out).astype(dtype),
+    }
+    if is_gated(activation):
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff), jnp.float32)
+                       * s_in).astype(dtype)
+    return p
+
+
+def ffn_apply(p, x, activation: str):
+    act = activation_fn(activation)
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if is_gated(activation):
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])

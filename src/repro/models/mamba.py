@@ -1,0 +1,140 @@
+"""Mamba (S6 selective SSM) block [arXiv:2312.00752], for jamba.
+
+Training/prefill uses a chunked parallel scan: sequential ``lax.scan`` over
+chunks with an associative scan inside each chunk (diagonal recurrence
+h_t = a_t * h_{t-1} + b_t), so the materialized state tensor is bounded by
+[B, chunk, d_in, N] instead of [B, S, d_in, N]. Decode is the single-step
+recurrence over carried state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def mamba_init(key, cfg: ArchConfig, dtype):
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dt_rank = mc.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 6)
+    def mk(k, shape, fan):
+        return (jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan)).astype(dtype)
+    # S4D-real initialization for A
+    A = np.tile(np.arange(1, mc.d_state + 1, dtype=np.float32), (d_in, 1))
+    return {
+        "in_proj": mk(ks[0], (d, 2 * d_in), d),
+        "conv_w": mk(ks[1], (mc.d_conv, d_in), mc.d_conv),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": mk(ks[2], (d_in, dt_rank + 2 * mc.d_state), d_in),
+        "dt_proj": mk(ks[3], (dt_rank, d_in), dt_rank),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.random.RandomState(0).uniform(
+                1e-3, 0.1, size=(d_in,)))), dtype),
+        "A_log": jnp.asarray(np.log(A), jnp.float32),     # kept fp32
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": mk(ks[4], (d_in, d), d_in),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: [B,S,d_in]; w: [k,d_in]. Depthwise causal conv. ``state``:
+    [B,k-1,d_in] carried context (decode/chunk boundary)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # [B, S+k-1, d_in]
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return out + b, new_state
+
+
+def _ssm_scan_chunk(h0, dA, dBx):
+    """Associative scan of h_t = dA_t h_{t-1} + dBx_t over a chunk.
+    dA/dBx: [B, C, d_in, N]; h0: [B, d_in, N]. Returns (h_all [B,C,d,N], hC)."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    a, b = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h_all = a * h0[:, None] + b
+    return h_all, h_all[:, -1]
+
+
+def mamba_apply(cfg: ArchConfig, p, x, state=None, chunk: int = 256):
+    """x: [B,S,d]. state: None (train) or dict(conv, h) for streaming decode.
+    Returns (y [B,S,d], new_state)."""
+    mc = cfg.mamba
+    B, S, d = x.shape
+    d_in = mc.expand * d
+    N = mc.d_state
+    dt_rank = mc.dt_rank or -(-d // 16)
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    dbl = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dt_raw = dbl[..., :dt_rank]
+    B_ssm = dbl[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    C_ssm = dbl[..., dt_rank + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsf,fe->bse", dt_raw, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                              # [d_in, N]
+    dA = jnp.exp(dt[..., None] * A)                       # [B,S,d_in,N]
+    u = (dt * xc.astype(jnp.float32))
+    dBx = u[..., None] * B_ssm[:, :, None, :]             # [B,S,d_in,N]
+
+    h0 = (jnp.zeros((B, d_in, N), jnp.float32) if state is None
+          else state["h"])
+
+    if S == 1:
+        h = dA[:, 0] * h0 + dBx[:, 0]
+        ys = jnp.einsum("bdn,bn->bd", h, C_ssm[:, 0])[:, None]
+        hS = h
+    else:
+        # pad S to a multiple of chunk, scan over chunks
+        C = min(chunk, S)
+        pad = (-S) % C
+        if pad:
+            dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                         constant_values=1.0)
+            dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C_pad = jnp.pad(C_ssm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            C_pad = C_ssm
+        nck = (S + pad) // C
+        dA_c = dA.reshape(B, nck, C, d_in, N).transpose(1, 0, 2, 3, 4)
+        dBx_c = dBx.reshape(B, nck, C, d_in, N).transpose(1, 0, 2, 3, 4)
+        Cc = C_pad.reshape(B, nck, C, N).transpose(1, 0, 2, 3)
+
+        def step(h, inp):
+            da, db, cc = inp
+            h_all, hC = _ssm_scan_chunk(h, da, db)
+            y = jnp.einsum("bcdn,bcn->bcd", h_all, cc)
+            return hC, y
+        hS, ys = jax.lax.scan(step, h0, (dA_c, dBx_c, Cc))
+        ys = ys.transpose(1, 0, 2, 3).reshape(B, S + pad, d_in)[:, :S]
+
+    y = ys + p["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = {"conv": new_conv, "h": hS}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, num_layers: int, dtype):
+    mc = cfg.mamba
+    d_in = mc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((num_layers, batch, mc.d_conv - 1, d_in), dtype),
+        "h": jnp.zeros((num_layers, batch, d_in, mc.d_state), jnp.float32),
+    }

@@ -1,0 +1,252 @@
+"""MoE layer: elastic (membership-table-driven) and fixed-membership variants.
+
+Parameters are stored per PHYSICAL SLOT ([num_slots, ...]), not per logical
+expert — the slot axis is what EP-shards, and what the three-tier repair
+executor rewrites. Replicas of one logical expert hold identical weights
+(enforced at init; preserved by repair).
+
+The distributed path is a shard_map island inside the jitted step: tokens
+sharded over the EP axes, slot weights sharded over the slot axis, membership
+arrays replicated. Expert-internal tensor parallelism (mixtral/jamba) shards
+the expert hidden dim over ``tp_axes`` with a psum after the down-projection
+(baseline; §Perf iterates on reduce-scatter variants).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.elastic_moe import (
+    EPContext,
+    dispatch_combine_dense,
+    elastic_route,
+    expert_load_from_route,
+    fixed_route,
+)
+from repro.core.membership import MembershipState
+from repro.models.layers import activation_fn, is_gated
+
+
+@dataclass(frozen=True)
+class MoEDeployment:
+    """Compile-time MoE parallelism geometry."""
+
+    ep: EPContext
+    tp_axes: tuple[str, ...] = ()     # expert-internal TP axes
+    mesh: object = None               # jax Mesh; None -> local path
+    # Beyond-paper (EXPERIMENTS SSPerf P1): reduce the expert-TP partial sums
+    # AFTER the combine all_to_all, on [T_local, d] tokens, instead of inside
+    # the expert on the k*cf-padded [spr, world*cap, d] capacity buffers —
+    # the psum volume drops by the top_k * capacity_factor padding factor.
+    # False = paper-faithful baseline (DeepEP-style reduce-then-combine).
+    defer_tp_reduce: bool = True
+
+    @property
+    def distributed(self) -> bool:
+        return self.mesh is not None and bool(self.ep.axis_names)
+
+
+def local_deployment(num_slots: int, capacity_factor: float = 2.0) -> MoEDeployment:
+    return MoEDeployment(
+        ep=EPContext(axis_names=(), world=1, slots_per_rank=num_slots,
+                     capacity_factor=capacity_factor))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def moe_layer_init(key, cfg: ArchConfig, num_slots: int,
+                   slot_to_expert: np.ndarray, dtype,
+                   expert_dtype: str = ""):
+    """Router + slot-stacked expert weights with replica-consistent contents.
+    ``expert_dtype``: optional narrower storage for routed expert weights
+    (SSPerf P2: fp8 weight streaming on the memory-bound decode path)."""
+    m = cfg.moe
+    d, de, E = cfg.d_model, m.d_expert, m.num_experts
+    e_dtype = jnp.dtype(expert_dtype) if expert_dtype else dtype
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(de)
+
+    def logical(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    w_in = logical(ks[0], (E, d, de), s_in).astype(e_dtype)
+    w_out = logical(ks[1], (E, de, d), s_out).astype(e_dtype)
+    idx = np.clip(np.asarray(slot_to_expert), 0, E - 1)
+    p = {
+        "router": logical(ks[2], (d, E), s_in),
+        "w_in": w_in[idx],       # [S, d, de] replicas share logical weights
+        "w_out": w_out[idx],
+    }
+    if is_gated(cfg.activation):
+        w_gate = logical(ks[3], (E, d, de), s_in).astype(e_dtype)
+        p["w_gate"] = w_gate[idx]
+    if m.num_shared_experts:
+        dse = m.d_shared_expert * m.num_shared_experts
+        p["shared"] = {
+            "w_in": logical(ks[4], (d, dse), s_in),
+            "w_out": logical(jax.random.fold_in(ks[4], 1), (dse, d),
+                             1.0 / np.sqrt(dse)),
+        }
+        if is_gated(cfg.activation):
+            p["shared"]["w_gate"] = logical(jax.random.fold_in(ks[4], 2),
+                                            (d, dse), s_in)
+    return p
+
+
+def slot_weight_keys(p) -> list[str]:
+    return [k for k in ("w_in", "w_gate", "w_out") if k in p]
+
+
+# ---------------------------------------------------------------------------
+# Expert compute (per local slots)
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn(recv, w_in, w_gate, w_out, activation, tp_axes):
+    """recv: [spr, R, d]; w_*: [spr, d, de_local] / [spr, de_local, d].
+    Weights may be stored narrower (fp8) and upcast at use (the HBM read is
+    the narrow dtype; the MXU computes in the activation dtype)."""
+    act = activation_fn(activation)
+    w_in = w_in.astype(recv.dtype)
+    w_out = w_out.astype(recv.dtype)
+    h = jnp.einsum("srd,sde->sre", recv, w_in)
+    if w_gate is not None:
+        g = jnp.einsum("srd,sde->sre", recv, w_gate.astype(recv.dtype))
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = jnp.einsum("sre,sed->srd", h, w_out)
+    if tp_axes:
+        y = jax.lax.psum(y, tp_axes)   # reduce the de-sharded partial sums
+        # (baseline path; the deferred variant reduces after combine instead)
+    return y
+
+
+def _shared_ffn(p, x, activation):
+    act = activation_fn(activation)
+    h = jnp.einsum("td,df->tf", x, p["w_in"])
+    if "w_gate" in p:
+        h = act(jnp.einsum("td,df->tf", x, p["w_gate"])) * h
+    else:
+        h = act(h)
+    return jnp.einsum("tf,fd->td", h, p["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _moe_island(x, router, w_in, w_gate, w_out, shared, membership,
+                *, cfg: ArchConfig, dep: MoEDeployment, fixed_s2e,
+                x_axes: tuple = ()):
+    """Per-EP-rank body (runs under shard_map when distributed).
+    x: [T_local, d]. ``x_axes``: mesh axes the token dim is sharded over
+    (pod + EP axes); pods run independent EP instances — the all_to_all only
+    spans ``ep.axis_names``."""
+    ep = dep.ep
+    m = cfg.moe
+    T = x.shape[0]
+    if x_axes:
+        rank = jax.lax.axis_index(x_axes)
+        token_ids = rank * T + jnp.arange(T, dtype=jnp.int32)
+    else:
+        token_ids = jnp.arange(T, dtype=jnp.int32)
+
+    logits = jnp.einsum("td,de->te", x, router) * m.router_scale
+    if fixed_s2e is not None:
+        experts, weights, slots = fixed_route(
+            logits, fixed_s2e, m.top_k, m.normalize_router_weights)
+    else:
+        experts, weights, slots = elastic_route(
+            logits, membership, m.top_k, token_ids,
+            m.normalize_router_weights)
+
+    inner_tp = () if (dep.defer_tp_reduce and dep.tp_axes) else dep.tp_axes
+    expert_fn = partial(_expert_ffn, w_in=w_in, w_gate=w_gate, w_out=w_out,
+                        activation=cfg.activation, tp_axes=inner_tp)
+    y, aux = dispatch_combine_dense(x, slots, weights,
+                                    lambda r: expert_fn(r), ep)
+    if dep.defer_tp_reduce and dep.tp_axes:
+        # SSPerf P1: TP partial sums ride the combine a2a and reduce here on
+        # [T_local, d] — k*cf-times less psum volume than inside the expert
+        y = jax.lax.psum(y, dep.tp_axes)
+    if shared is not None:
+        ys = _shared_ffn(shared, x, cfg.activation)
+        if dep.tp_axes:
+            ys = jax.lax.psum(ys, dep.tp_axes)
+        y = y + ys
+    load = expert_load_from_route(experts, weights, m.num_experts)
+    if x_axes:
+        load = jax.lax.psum(load, x_axes)
+        aux["dropped_fraction"] = jax.lax.pmean(
+            aux["dropped_fraction"], x_axes)
+    return y, load, aux["dropped_fraction"]
+
+
+def moe_apply(cfg: ArchConfig, p, x, membership: MembershipState,
+              dep: MoEDeployment, fixed_s2e: Optional[np.ndarray] = None):
+    """x: [T, d] tokens (global view). Returns (y [T, d], aux dict).
+
+    The token dim shards over (pod +) EP axes; pods run independent EP
+    instances. T is padded up to that divisor — pad tokens carry zero combine
+    weight (they consume dispatch capacity: the honest cost of wide-EP decode
+    at small global batches)."""
+    shared = p.get("shared")
+    w_gate = p.get("w_gate")
+
+    if not dep.distributed:
+        body = partial(_moe_island, cfg=cfg, dep=dep, fixed_s2e=fixed_s2e)
+        y, load, dropped = body(x, p["router"], p["w_in"], w_gate,
+                                p["w_out"], shared, membership)
+        return y, {"expert_load": load, "dropped_fraction": dropped}
+
+    mesh = dep.mesh
+    ep_axes = tuple(dep.ep.axis_names)
+    x_axes = (("pod",) if "pod" in mesh.axis_names else ()) + ep_axes
+    denom = int(np.prod([mesh.shape[a] for a in x_axes]))
+    T = x.shape[0]
+    T_pad = -(-T // denom) * denom
+    if T_pad != T:
+        x = jnp.pad(x, ((0, T_pad - T), (0, 0)))
+
+    body = partial(_moe_island, cfg=cfg, dep=dep, fixed_s2e=fixed_s2e,
+                   x_axes=x_axes)
+    tp = tuple(dep.tp_axes)
+    tp_spec = tp[0] if len(tp) == 1 else (tp if tp else None)
+    ep_spec = ep_axes[0] if len(ep_axes) == 1 else ep_axes
+    x_spec = x_axes[0] if len(x_axes) == 1 else x_axes
+
+    specs = dict(
+        x=P(x_spec, None),
+        router=P(None, None),
+        w_in=P(ep_spec, None, tp_spec),
+        w_gate=P(ep_spec, None, tp_spec) if w_gate is not None else None,
+        w_out=P(ep_spec, tp_spec, None),
+        shared=({k: (P(tp_spec, None) if k == "w_out" else P(None, tp_spec))
+                 for k in shared} if shared is not None else None),
+        membership=jax.tree_util.tree_map(lambda _: P(), membership),
+    )
+    out_specs = (P(x_spec, None), P(), P())
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(specs["x"], specs["router"], specs["w_in"], specs["w_gate"],
+                  specs["w_out"], specs["shared"], specs["membership"]),
+        out_specs=out_specs,
+        check_vma=False,
+    )
+    y, load, dropped = fn(x, p["router"], p["w_in"], w_gate, p["w_out"],
+                          shared, membership)
+    if T_pad != T:
+        y = y[:T]
+    return y, {"expert_load": load, "dropped_fraction": dropped}

@@ -1,0 +1,76 @@
+"""Layer-group structure: every arch is a sequence of ScanGroups; each group
+scans one *period* of heterogeneous sublayers over stacked parameters. This
+keeps the lowered HLO small (one period body per group) — essential for the
+512-device dry-run compile times — and expresses jamba's 1:7 mamba:attn
+interleave and xlstm's 7:1 mLSTM:sLSTM pattern exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str            # "attn" | "mamba" | "mlstm" | "slstm"
+    ffn: str              # "dense" | "moe" | "none"
+    cross_attn: bool = False
+
+
+@dataclass(frozen=True)
+class ScanGroup:
+    name: str
+    layout: tuple[LayerSpec, ...]
+    n_periods: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layout) * self.n_periods
+
+
+def build_groups(cfg: ArchConfig) -> list[ScanGroup]:
+    """Decoder-stack structure for every assigned arch (encoder handled
+    separately for enc-dec archs)."""
+    L = cfg.num_layers
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        per = cfg.xlstm.slstm_period
+        assert L % per == 0, (L, per)
+        layout = tuple(LayerSpec("mlstm", "none") for _ in range(per - 1)
+                       ) + (LayerSpec("slstm", "none"),)
+        return [ScanGroup("xlstm", layout, L // per)]
+
+    if cfg.family == "hybrid":
+        per = cfg.attn_layer_period
+        assert L % per == 0, (L, per)
+        moe_per = cfg.moe.moe_layer_period if cfg.moe else 0
+        layout = []
+        for i in range(per):
+            mixer = "attn" if i % per == cfg.attn_layer_offset else "mamba"
+            ffn = ("moe" if cfg.moe and (i % moe_per == moe_per - 1)
+                   else "dense")
+            layout.append(LayerSpec(mixer, ffn))
+        return [ScanGroup("hybrid", tuple(layout), L // per)]
+
+    cross = cfg.encoder is not None
+    if cfg.is_moe and cfg.moe.first_dense_layers > 0:
+        k = cfg.moe.first_dense_layers
+        groups = [
+            ScanGroup("dense_head", (LayerSpec("attn", "dense", cross),), k),
+            ScanGroup("moe_body", (LayerSpec("attn", "moe", cross),), L - k),
+        ]
+        return [g for g in groups if g.n_periods > 0]
+    if cfg.is_moe:
+        return [ScanGroup("moe", (LayerSpec("attn", "moe", cross),), L)]
+    return [ScanGroup("dense", (LayerSpec("attn", "dense", cross),), L)]
+
+
+def moe_groups(cfg: ArchConfig) -> list[str]:
+    return [g.name for g in build_groups(cfg)
+            if any(s.ffn == "moe" for s in g.layout)]
+
+
+def total_moe_layers(cfg: ArchConfig) -> int:
+    return sum(sum(1 for s in g.layout if s.ffn == "moe") * g.n_periods
+               for g in build_groups(cfg))

@@ -1,0 +1,250 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, true recurrence), interleaved 7:1 for xlstm-1.3b.
+
+mLSTM uses the stabilized exponential-gating update
+  m_t = max(f~_t + m_{t-1}, i~_t)
+  C_t = exp(f~_t + m_{t-1} - m_t) C_{t-1} + exp(i~_t - m_t) v_t k_t^T
+  n_t = exp(f~_t + m_{t-1} - m_t) n_{t-1} + exp(i~_t - m_t) k_t
+  h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+Training runs a chunked form: ``lax.scan`` over chunks carrying (C, n, m),
+with the intra-chunk part computed in parallel as masked gated attention
+(the standard chunkwise-parallel linear-attention decomposition). Decode is
+the single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import layernorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    H = cfg.num_heads
+    d_in = int(d * xc.proj_factor_mlstm)
+    hd = d_in // H
+    ks = jax.random.split(key, 7)
+    def mk(k, shape, fan):
+        return (jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan)).astype(dtype)
+    return {
+        "up": mk(ks[0], (d, 2 * d_in), d),
+        "conv_w": mk(ks[1], (xc.conv1d_kernel, d_in), xc.conv1d_kernel),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": mk(ks[2], (H, hd, hd), hd),     # block-diagonal per head
+        "wk": mk(ks[3], (H, hd, hd), hd),
+        "wv": mk(ks[4], (H, hd, hd), hd),
+        "w_i": mk(ks[5], (d_in, H), d_in),    # input-gate (per head scalar)
+        "w_f": mk(ks[6], (d_in, H), d_in),    # forget-gate
+        "b_i": jnp.zeros((H,), dtype),
+        "b_f": jnp.asarray(np.linspace(3.0, 6.0, H), dtype),
+        "down": mk(jax.random.fold_in(key, 9), (d_in, d), d_in),
+        "out_norm": jnp.ones((d_in,), dtype),
+    }
+
+
+def _mlstm_chunk_parallel(q, k, v, logi, logf, C0, n0, m0):
+    """One chunk of the stabilized chunkwise-parallel mLSTM.
+    q/k/v: [B,H,C,hd]; logi/logf: [B,H,C]; carries C0 [B,H,hd,hd],
+    n0 [B,H,hd], m0 [B,H]. Returns (h [B,H,C,hd], C1, n1, m1)."""
+    B, H, Cn, hd = q.shape
+    F = jnp.cumsum(logf, axis=-1)                     # [B,H,C] cumulative logf
+    # decay of initial state to position t: F_t ; gate of source s to t:
+    # F_t - F_s + logi_s (s <= t)
+    g = F[..., :, None] - F[..., None, :] + logi[..., None, :]  # [B,H,C,C]
+    mask = jnp.tril(jnp.ones((Cn, Cn), bool))
+    g = jnp.where(mask, g, -jnp.inf)
+    init = F + m0[..., None]                          # [B,H,C] init-state path
+    m_t = jnp.maximum(jnp.max(jnp.where(mask, g, -jnp.inf), axis=-1), init)
+    gexp = jnp.exp(g - m_t[..., None])                # [B,H,C,C]
+    gexp = jnp.where(mask, gexp, 0.0)
+    iexp = jnp.exp(init - m_t)                        # [B,H,C]
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * gexp
+    # C0 convention: C[d,e] = v[d] k[e]  ->  (C0 q)[d] = sum_e C0[d,e] q[e]
+    num = (jnp.einsum("bhts,bhsd->bhtd", scores, v)
+           + iexp[..., None] * jnp.einsum("bhte,bhde->bhtd", q, C0))
+    den = jnp.sum(scores, axis=-1) + iexp * jnp.einsum("bhtd,bhd->bht", q, n0)
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+    # chunk-final state
+    mC = m_t[..., -1]
+    decay_all = jnp.exp(F[..., -1:] - F + logi - mC[..., None])   # [B,H,C]
+    C1 = (jnp.exp(F[..., -1] + m0 - mC)[..., None, None] * C0
+          + jnp.einsum("bhs,bhsd,bhse->bhde", decay_all, v, k))
+    n1 = (jnp.exp(F[..., -1] + m0 - mC)[..., None] * n0
+          + jnp.einsum("bhs,bhsd->bhd", decay_all, k))
+    return h, C1, n1, mC
+
+
+def mlstm_apply(cfg: ArchConfig, p, x, state=None, chunk: int = 128):
+    """x: [B,S,d]. state: dict(C,n,m,conv) or None. Returns (y, new_state)."""
+    xc = cfg.xlstm
+    B, S, d = x.shape
+    H = cfg.num_heads
+    d_in = int(d * xc.proj_factor_mlstm)
+    hd = d_in // H
+
+    from repro.models.mamba import _causal_conv
+    xz = jnp.einsum("bsd,de->bse", x, p["up"])
+    xr, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xconv, new_conv = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    xconv = jax.nn.silu(xconv)
+
+    def heads(t, w):
+        return jnp.einsum("bshe,hef->bhsf", t.reshape(B, S, H, hd), w)
+    q = heads(xconv, p["wq"])
+    k = heads(xconv, p["wk"]) / np.sqrt(hd)
+    v = heads(xr, p["wv"])
+    logi = (jnp.einsum("bse,eh->bsh", xconv, p["w_i"])
+            + p["b_i"]).astype(jnp.float32).transpose(0, 2, 1)   # [B,H,S]
+    logf = jax.nn.log_sigmoid(
+        (jnp.einsum("bse,eh->bsh", xconv, p["w_f"])
+         + p["b_f"]).astype(jnp.float32)).transpose(0, 2, 1)
+
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    Cn = min(chunk, S)
+    pad = (-S) % Cn
+    if pad:
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q2, k2, v2 = padt(q), padt(k), padt(v)
+        logi2 = jnp.pad(logi, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        logf2 = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+    else:
+        q2, k2, v2, logi2, logf2 = q, k, v, logi, logf
+    nck = (S + pad) // Cn
+
+    def resh(t):
+        return t.reshape(B, H, nck, Cn, -1).transpose(2, 0, 1, 3, 4)
+    qc, kc, vc = resh(q2), resh(k2), resh(v2)
+    lic = logi2.reshape(B, H, nck, Cn).transpose(2, 0, 1, 3)
+    lfc = logf2.reshape(B, H, nck, Cn).transpose(2, 0, 1, 3)
+
+    def step(carry, inp):
+        C0_, n0_, m0_ = carry
+        qq, kk, vv, li, lf = inp
+        h, C1, n1, m1 = _mlstm_chunk_parallel(qq, kk, vv, li, lf, C0_, n0_, m0_)
+        return (C1, n1, m1), h
+    (C1, n1, m1), hs = jax.lax.scan(step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S + pad, hd)[:, :, :S]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+
+    h = layernorm(h.astype(x.dtype), p["out_norm"])
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"])
+    return out, {"C": C1, "n": n1, "m": m1, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ArchConfig, dtype):
+    xc = cfg.xlstm
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    d_up = int(d * xc.proj_factor_slstm)
+    ks = jax.random.split(key, 4)
+    def mk(k, shape, fan):
+        return (jax.random.normal(k, shape, jnp.float32) / np.sqrt(fan)).astype(dtype)
+    # gate layout convention: the 4d gate dim is H blocks of [i|f|z|o] x hd
+    b_head = jnp.concatenate([jnp.zeros((hd,), dtype),
+                              jnp.full((hd,), 3.0, dtype),
+                              jnp.zeros((2 * hd,), dtype)])
+    return {
+        "w": mk(ks[0], (d, 4 * d), d),            # i,f,z,o input projections
+        "r": mk(ks[1], (H, hd, 4 * hd), hd),      # block-diag recurrent
+        "b": jnp.tile(b_head, H),
+        "up": mk(ks[2], (d, 2 * d_up), d),
+        "down": mk(ks[3], (d_up, d), d_up),
+        "out_norm": jnp.ones((d,), dtype),
+    }
+
+
+def _slstm_cell(p, xt, carry, H):
+    """One timestep. xt: [B,d]; carry: (c,n,m,h) each [B,d] (m,n fp32)."""
+    c, n, m, h = carry
+    B, d = xt.shape
+    hd = d // H
+    zin = jnp.einsum("bd,de->be", xt, p["w"]) + p["b"]
+    hh = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hh, p["r"])          # [B,H,4*hd]
+    zin = zin.reshape(B, H, 4 * hd) + rec
+    i_, f_, z_, o_ = jnp.split(zin.astype(jnp.float32), 4, axis=-1)
+    i_ = i_.reshape(B, d); f_ = f_.reshape(B, d)
+    z_ = z_.reshape(B, d); o_ = o_.reshape(B, d)
+    m_new = jnp.maximum(f_ + m, i_)
+    ie = jnp.exp(i_ - m_new)
+    fe = jnp.exp(f_ + m - m_new)
+    c_new = fe * c + ie * jnp.tanh(z_)
+    n_new = fe * n + ie
+    h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new.astype(xt.dtype)), h_new
+
+
+def slstm_apply(cfg: ArchConfig, p, x, state=None):
+    """x: [B,S,d]. Sequential scan (true recurrence)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    if state is None:
+        z32 = jnp.zeros((B, d), jnp.float32)
+        carry = (z32, z32, jnp.full((B, d), -1e30, jnp.float32),
+                 jnp.zeros((B, d), x.dtype))
+    else:
+        carry = (state["c"], state["n"], state["m"], state["h"])
+
+    def step(c, xt):
+        return _slstm_cell(p, xt, c, H)
+    carry, hs = jax.lax.scan(step, carry, x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)                  # [B,S,d]
+    h = layernorm(h, p["out_norm"])
+    up = jnp.einsum("bsd,de->bse", h, p["up"])
+    a, b = jnp.split(up, 2, axis=-1)
+    y = jax.nn.gelu(a, approximate=True) * b
+    out = jnp.einsum("bse,ed->bsd", y, p["down"])
+    c, n, m, hh = carry
+    return out, {"c": c, "n": n, "m": m, "h": hh}
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int, nlayers: int, dtype):
+    xc = cfg.xlstm
+    H = cfg.num_heads
+    d_in = int(cfg.d_model * xc.proj_factor_mlstm)
+    hd = d_in // H
+    return {
+        "C": jnp.zeros((nlayers, batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((nlayers, batch, H, hd), jnp.float32),
+        "m": jnp.full((nlayers, batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((nlayers, batch, xc.conv1d_kernel - 1, d_in), dtype),
+    }
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int, nlayers: int, dtype):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((nlayers, batch, d), jnp.float32),
+        "n": jnp.zeros((nlayers, batch, d), jnp.float32),
+        "m": jnp.full((nlayers, batch, d), -1e30, jnp.float32),
+        "h": jnp.zeros((nlayers, batch, d), dtype),
+    }

@@ -1,0 +1,9 @@
+from repro.runtime.sharding import (
+    batch_specs,
+    cache_specs,
+    membership_specs,
+    opt_state_specs,
+    param_shardings,
+    param_specs,
+    specs_to_shardings,
+)

@@ -1,0 +1,287 @@
+"""ElasticEPRuntime — the live EP instance (paper Fig. 5/6 end to end).
+
+Couples the core substrate (membership, EPLB, 3-tier repair, backup,
+detector, deferred-join controller) with the compiled serving step. The
+compiled executable is built ONCE; every failure/reintegration only rewrites
+the membership arrays and the slot-weight contents — the runtime records the
+jit cache size so tests can assert no healthy-rank recompilation (the
+paper's no-CUDA-graph-recapture property).
+
+On this CPU container the EP world is *simulated*: the slot axis lives on
+one device and a deterministic SimClock + RecoveryCostModel supply the
+timing the paper measures on real hardware (recovery phases, reintegration
+pauses, throughput traces). On a real mesh the same runtime drives the
+shard_map deployment — only `deployment` changes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.backup import BackupStore
+from repro.core.failure import FailureDetector, FailureInjector, SimClock
+from repro.core.membership import MembershipState, PeerTable
+from repro.core.placement import eplb_place
+from repro.core.reintegration import ReintegrationController, WarmupCostModel
+from repro.core.straggler import StragglerMonitor
+from repro.core.repair import (
+    RecoveryCostModel,
+    RepairPlan,
+    apply_repair,
+    plan_repair,
+)
+from repro.core.validity import check as validity_check
+from repro.models.model import Deployment
+
+
+@dataclass
+class TimelineEvent:
+    t: float
+    kind: str            # "failure" | "recovery_done" | "join" | ...
+    detail: dict = field(default_factory=dict)
+
+
+def moe_slot_leaves(cfg: ArchConfig, params):
+    """The slot-stacked expert weights: {path: leaf [n_periods, S, ...]}."""
+    out = {}
+    for gname, group in params.get("groups", {}).items():
+        for lname, layer in group.items():
+            moe = layer.get("moe")
+            if moe is None:
+                continue
+            for wname in ("w_in", "w_gate", "w_out"):
+                if wname in moe:
+                    out[(gname, lname, wname)] = moe[wname]
+    return out
+
+
+def set_moe_slot_leaves(params, leaves: dict):
+    import copy
+    params = jax.tree_util.tree_map(lambda x: x, params)  # shallow-ish copy
+    for (gname, lname, wname), leaf in leaves.items():
+        params["groups"][gname][lname]["moe"][wname] = leaf
+    return params
+
+
+class ElasticEPRuntime:
+    """One live EP instance with explicit mutable membership."""
+
+    def __init__(self, cfg: ArchConfig, params, table: PeerTable, *,
+                 deployment: Optional[Deployment] = None,
+                 backup_nodes: int = 2,
+                 cost_model: Optional[RecoveryCostModel] = None,
+                 warmup_model: Optional[WarmupCostModel] = None,
+                 expert_load_ema: float = 0.9,
+                 base_throughput: float = 7200.0):
+        self.cfg = cfg
+        self.params = params
+        self.table = table
+        if deployment is None:
+            from repro.models.moe import local_deployment
+            deployment = Deployment(
+                moe=local_deployment(table.num_slots, cfg.capacity_factor))
+        self.dpl = deployment
+        self.clock = SimClock()
+        self.detector = FailureDetector(table.world, self.clock)
+        self.injector = FailureInjector(self.detector)
+        self.controller = ReintegrationController(self.clock, warmup_model)
+        self.cost_model = cost_model or RecoveryCostModel()
+        self.base_throughput = base_throughput
+        self.expert_load = np.ones(
+            (cfg.moe.num_experts,), np.float64) if cfg.is_moe else None
+        self.load_ema = expert_load_ema
+
+        # DRAM-backed backup service (paper SS5.2)
+        self.backup = BackupStore(num_nodes=backup_nodes)
+        slots = moe_slot_leaves(cfg, params)
+        if slots:
+            self.backup.build_from_slots(slots, table.slot_to_expert)
+
+        self.straggler = StragglerMonitor(table.world)
+        self.rank_slowdown = np.ones(table.world)   # sim: injected slowness
+        self.membership: MembershipState = table.to_device()
+        self.timeline: list[TimelineEvent] = [TimelineEvent(0.0, "start")]
+        self.events_log: list[str] = []
+        self.recompile_count = 0        # must stay 0 across fail/rejoin
+        self._repair_jit_cache = {}
+
+    # ------------------------------------------------------------------
+    # Telemetry
+    # ------------------------------------------------------------------
+    def record(self, kind: str, **detail):
+        self.timeline.append(TimelineEvent(self.clock.now(), kind, detail))
+
+    def active_fraction(self) -> float:
+        return float(self.table.active_mask.mean())
+
+    def throughput_now(self) -> float:
+        """Modeled serving throughput of the current configuration: wide-EP
+        decoding is bandwidth/compute-proportional to the live rank count."""
+        return self.base_throughput * self.active_fraction()
+
+    def update_expert_load(self, load) -> None:
+        if self.expert_load is None:
+            return
+        load = np.asarray(load, np.float64)
+        if load.sum() > 0:
+            self.expert_load = (self.load_ema * self.expert_load
+                                + (1 - self.load_ema) * load)
+
+    # ------------------------------------------------------------------
+    # The failure -> shrink -> repair path (paper SS3.4/3.5)
+    # ------------------------------------------------------------------
+    def poll_failures(self) -> list[int]:
+        self.injector.step()
+        return self.detector.poll()
+
+    def handle_failure(self, failed: list[int]) -> dict:
+        """Restore live-EP validity on the surviving ranks. Returns the
+        phase breakdown (paper Fig. 10 left)."""
+        t0 = self.clock.now()
+        self.record("failure", ranks=list(failed))
+        old_s2e = self.table.slot_to_expert.copy()
+        for r in failed:
+            self.table.deactivate(r)     # peer-set repair: clear active bits
+
+        phases = {"detect": self.cost_model.detect_s,
+                  "drain": self.cost_model.drain_s}
+        plan = None
+        if self.cfg.is_moe:
+            # expert-coverage repair (EPLB over survivors + 3-tier transfer)
+            res = eplb_place(
+                self.cfg.moe.num_experts, self.table.world,
+                self.table.slots_per_rank, self.table.active_mask,
+                load=self.expert_load, prev_slot_to_expert=old_s2e,
+                max_replicas=self.table.max_replicas)
+            if res.infeasible:
+                self.record("unrecoverable", reason=res.reason)
+                raise RuntimeError(f"cannot shrink: {res.reason}")
+            slots = moe_slot_leaves(self.cfg, self.params)
+            bytes_per_slot = int(sum(
+                np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
+                for l in slots.values()))
+            plan = plan_repair(old_s2e, res.slot_to_expert,
+                               self.table.active_mask,
+                               self.table.slots_per_rank, self.backup,
+                               bytes_per_slot=bytes_per_slot)
+            new_leaves = apply_repair(slots, plan, self.backup)
+            self.params = set_moe_slot_leaves(self.params, new_leaves)
+            self.table.set_placement(res.slot_to_expert)
+            ph = self.cost_model.recovery_seconds(
+                plan, self.table.world, self.table.slots_per_rank)
+            phases.update({"coordinate": ph["coordinate"],
+                           "weight_transfer": ph["weight_transfer"]})
+        else:
+            # dense arch: membership substrate only (no experts to repair)
+            phases["coordinate"] = self.cost_model.coordinate_s
+
+        # graph-visible routing repair: publish the tables (content patch)
+        self.membership = self.table.to_device()
+        rep = validity_check(self.table, self.membership,
+                             reachable=self.detector.known_reachable())
+        assert rep.valid, rep.violations
+
+        total = sum(phases.values())
+        self.clock.advance(total)
+        phases["total"] = total
+        self.record("recovery_done", phases=phases,
+                    mix=plan.source_mix() if plan else {},
+                    tier2_bytes=plan.tier2_bytes if plan else 0,
+                    tier3_bytes=plan.tier3_bytes if plan else 0)
+        # relaunch failed ranks asynchronously (deferred join)
+        for r in failed:
+            self.controller.schedule_relaunch(r)
+        return phases
+
+    # ------------------------------------------------------------------
+    # Reintegration (paper SS3.6/4.2)
+    # ------------------------------------------------------------------
+    def poll_reintegration(self) -> list[int]:
+        """Between forward passes, healthy ranks poll for join-ready peers
+        and incorporate them with an in-place table patch."""
+        ready = self.controller.poll_join_ready()
+        joined = []
+        for r in ready:
+            self._join(r)
+            joined.append(r)
+        return joined
+
+    def _join(self, rank: int) -> None:
+        old_s2e = self.table.slot_to_expert.copy()
+        self.detector.mark_reachable(rank)
+        self.table.reactivate(rank)      # refresh peer entry (endpoint epoch)
+        if self.cfg.is_moe:
+            res = eplb_place(
+                self.cfg.moe.num_experts, self.table.world,
+                self.table.slots_per_rank, self.table.active_mask,
+                load=self.expert_load, prev_slot_to_expert=old_s2e,
+                max_replicas=self.table.max_replicas)
+            slots = moe_slot_leaves(self.cfg, self.params)
+            bytes_per_slot = int(sum(
+                np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
+                for l in slots.values()))
+            plan = plan_repair(old_s2e, res.slot_to_expert,
+                               self.table.active_mask,
+                               self.table.slots_per_rank, self.backup,
+                               bytes_per_slot=bytes_per_slot)
+            new_leaves = apply_repair(slots, plan, self.backup)
+            self.params = set_moe_slot_leaves(self.params, new_leaves)
+            self.table.set_placement(res.slot_to_expert)
+        self.membership = self.table.to_device()
+        rep = validity_check(self.table, self.membership,
+                             reachable=self.detector.known_reachable())
+        assert rep.valid, rep.violations
+        self.clock.advance(self.cost_model.join_patch_s)
+        self.controller.complete_join(rank)
+        self.record("join", rank=rank)
+
+    # ------------------------------------------------------------------
+    # Straggler mitigation (beyond the paper's fail-stop timeout: de-weight
+    # persistently slow-but-alive ranks via capacity-aware EPLB re-placement
+    # — an in-place table patch, no membership change, no recompile)
+    # ------------------------------------------------------------------
+    def observe_step_latencies(self, base_step_s: float) -> None:
+        lat = base_step_s * self.rank_slowdown
+        self.straggler.observe(lat, self.table.active_mask)
+
+    def mitigate_stragglers(self) -> list[int]:
+        """Between forward passes: if the flagged set changed, re-place with
+        capacity weights and patch the tables."""
+        before = set(self.straggler.flagged)
+        flagged = self.straggler.classify(self.table.active_mask)
+        if flagged == before or not self.cfg.is_moe:
+            return sorted(flagged)
+        caps = self.straggler.capacity_weights(self.table.active_mask)
+        old_s2e = self.table.slot_to_expert.copy()
+        res = eplb_place(
+            self.cfg.moe.num_experts, self.table.world,
+            self.table.slots_per_rank, self.table.active_mask,
+            load=self.expert_load, prev_slot_to_expert=old_s2e,
+            max_replicas=self.table.max_replicas, rank_capacity=caps)
+        if res.infeasible:
+            return sorted(flagged)
+        slots = moe_slot_leaves(self.cfg, self.params)
+        plan = plan_repair(old_s2e, res.slot_to_expert,
+                           self.table.active_mask,
+                           self.table.slots_per_rank, self.backup)
+        self.params = set_moe_slot_leaves(
+            self.params, apply_repair(slots, plan, self.backup))
+        self.table.set_placement(res.slot_to_expert)
+        self.membership = self.table.to_device()
+        rep = validity_check(self.table, self.membership,
+                             reachable=self.detector.known_reachable())
+        assert rep.valid, rep.violations
+        self.record("straggler_mitigation", flagged=sorted(flagged),
+                    capacities={int(r): round(float(caps[r]), 2)
+                                for r in flagged})
+        return sorted(flagged)
+
+    # ------------------------------------------------------------------
+    def heartbeat(self) -> None:
+        self.detector.heartbeat(self.table.active_ranks())

@@ -1,0 +1,294 @@
+"""Per-arch PartitionSpec policy for params, optimizer state, caches, batch.
+
+Axes: single-pod mesh (16,16) = ("data","model"); multi-pod (2,16,16) =
+("pod","data","model"). Pod = outer DP. Policy per DESIGN.md §5:
+
+  attention     heads TP over "model"; batch over ("pod","data")
+  experts       slot axis over cfg.ep_axes (wide EP); expert hidden over
+                cfg.expert_tp_axes
+  giant dense   ZeRO-3: d_model dim of the big matrices additionally sharded
+                over "data" (per-layer all-gather)
+  caches        batch over dp axes; kv heads over "model" iff divisible,
+                else replicated (TP replicates KV when kv < tp)
+  opt state     same specs as params (factored Adafactor leaves inherit the
+                matching prefix)
+
+All group params carry a leading [n_periods] scan dim -> specs are shifted
+by one (never sharded over the period dim).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _flat(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _ep_spec(cfg: ArchConfig):
+    return _flat(tuple(cfg.ep_axes))
+
+
+def _tp_spec(cfg: ArchConfig):
+    return _flat(tuple(cfg.expert_tp_axes))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(cfg: ArchConfig, mesh: Mesh, path: tuple[str, ...],
+               leaf) -> P:
+    """Spec for one parameter leaf, identified by its dict path."""
+    names = [p for p in path]
+    shape = leaf.shape
+    in_group = "groups" in names or "layers" in names  # leading period dim
+    off = 1 if in_group else 0
+
+    def sz(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            return int(np.prod([_axis_size(mesh, a) for a in ax]))
+        return _axis_size(mesh, ax)
+
+    def fits(ax, dim_idx):
+        """Use axis only if the dim divides evenly (else replicate)."""
+        if ax is None or sz(ax) <= 1:
+            return None
+        return ax if shape[dim_idx + off] % sz(ax) == 0 else None
+
+    z3 = "data" if (cfg.zero3_dense and "data" in mesh.axis_names) else None
+    model = "model" if "model" in mesh.axis_names else None
+
+    def pad(spec_dims):
+        out = []
+        for i, ax in enumerate(spec_dims):
+            out.append(fits(ax, i))
+        return P(*([None] * off + out))
+
+    leafname = names[-1]
+    module = names[-2] if len(names) >= 2 else ""
+    # ---- embeddings / head ----
+    if leafname == "embed":
+        return pad([model, None])
+    if leafname == "lm_head":
+        return pad([None, model])
+    # ---- norms / scalars / small vectors ----
+    if leaf.ndim - off <= 1 or leafname in ("scale", "bias", "b", "b_i", "b_f",
+                                            "q_norm", "kv_norm", "out_norm",
+                                            "conv_b", "dt_bias", "D"):
+        return pad([None] * (leaf.ndim - off))
+    # ---- MoE ----
+    if module in ("moe", "shared"):
+        ep = _ep_spec(cfg)
+        tp = _tp_spec(cfg)
+        if module == "shared":
+            # shared experts are dense FFNs: always model-TP
+            if leafname == "w_out":
+                return pad(["model", None])
+            return pad([None, "model"])
+        if leafname == "router":
+            return pad([None, None])
+        if leafname == "w_out":               # [S, de, d]
+            return pad([ep, tp, None])
+        return pad([ep, None, tp])            # w_in / w_gate [S, d, de]
+    # ---- attention ----
+    if module in ("attn", "cross"):
+        if leafname in ("wq", "wk", "wv"):    # [d, H, hd]
+            H = shape[off + 1]
+            h_ax = model if (model and H % _axis_size(mesh, "model") == 0) else None
+            return pad([z3, h_ax, None])
+        if leafname == "wo":                  # [H, hd, d]
+            H = shape[off]
+            h_ax = model if (model and H % _axis_size(mesh, "model") == 0) else None
+            return pad([h_ax, None, z3])
+        if leafname == "wq_a":                # [d, q_lora]: shard the rank dim
+            return pad([z3, model])
+        if leafname == "wkv_a":               # [d, r+rope]
+            return pad([z3, None])
+        if leafname in ("wq_b", "wkv_b"):     # [r, H, e]
+            return pad([None, model, None])
+    # ---- dense FFN ----
+    if module == "ffn":
+        if leafname == "w_out":               # [dff, d]
+            return pad([model, z3])
+        return pad([z3, model])               # w_in / w_gate [d, dff]
+    # ---- mamba ----
+    if module == "mamba":
+        din_ok = model is not None
+        if leafname == "in_proj":             # [d, 2*d_in]
+            return pad([z3, model])
+        if leafname == "conv_w":              # [k, d_in]
+            return pad([None, model])
+        if leafname == "x_proj":              # [d_in, dt+2N]
+            return pad([model, None])
+        if leafname == "dt_proj":             # [dt, d_in]
+            return pad([None, model])
+        if leafname == "A_log":               # [d_in, N]
+            return pad([model, None])
+        if leafname == "out_proj":            # [d_in, d]
+            return pad([model, z3])
+    # ---- xlstm ----
+    if module == "mlstm":
+        if leafname == "up":                  # [d, 2*d_in]
+            return pad([None, model])
+        if leafname in ("wq", "wk", "wv"):    # [H, hd, hd]
+            return pad([None, None, model])
+        if leafname in ("w_i", "w_f"):        # [d_in, H]
+            return pad([model, None])
+        if leafname == "conv_w":
+            return pad([None, model])
+        if leafname == "down":                # [d_in, d]
+            return pad([model, None])
+    if module == "slstm":
+        if leafname == "w":                   # [d, 4d]
+            return pad([None, model])
+        if leafname == "r":                   # [H, hd, 4hd]
+            return pad([None, None, model])
+        if leafname == "up":
+            return pad([None, model])
+        if leafname == "down":
+            return pad([model, None])
+    # default: replicate
+    return pad([None] * (leaf.ndim - off))
+
+
+def _tree_path_map(fn, tree):
+    """tree_map with string dict paths."""
+    out = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: fn(tuple(
+            k.key if hasattr(k, "key") else str(k.idx) for k in kp), leaf),
+        tree)
+    return out
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_tree):
+    return _tree_path_map(lambda p, l: _leaf_spec(cfg, mesh, p, l), params_tree)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_tree):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  param_specs(cfg, mesh, params_tree))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state specs (moments mirror the param layout; Adafactor factored
+# leaves drop the trailing dim of the param spec)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_specs(cfg: ArchConfig, mesh: Mesh, opt_state, pspecs):
+    """opt_state: as produced by adamw_init/adafactor_init over params whose
+    specs are ``pspecs`` (matching tree structure under each moment key)."""
+    def match(moment_tree):
+        def per_param(spec, leaf_or_sub):
+            if isinstance(leaf_or_sub, dict):       # adafactor factored/un
+                out = {}
+                for k, v in leaf_or_sub.items():
+                    if k == "vr":
+                        out[k] = P(*spec[:-1])
+                    elif k == "vc":
+                        out[k] = P(*(list(spec[:-2]) + [spec[-1]]))
+                    else:
+                        out[k] = spec
+                return out
+            return spec
+        return jax.tree_util.tree_map(per_param, pspecs, moment_tree,
+                                      is_leaf=lambda x: isinstance(x, P))
+    out = {}
+    for k, v in opt_state.items():
+        if k == "step":
+            out[k] = P()
+        else:
+            out[k] = match(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / membership specs
+# ---------------------------------------------------------------------------
+
+
+def _fits_dim(mesh: Mesh, ax, dim: int):
+    if ax is None:
+        return None
+    size = (int(np.prod([_axis_size(mesh, a) for a in ax]))
+            if isinstance(ax, tuple) else _axis_size(mesh, ax))
+    return ax if size > 1 and dim % size == 0 else None
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_tree):
+    dp = _flat(dp_axes(mesh))
+
+    def spec(path, leaf):
+        ax = _fits_dim(mesh, dp, leaf.shape[0])
+        if leaf.ndim == 1:
+            return P(ax)
+        return P(*([ax] + [None] * (leaf.ndim - 1)))
+    return _tree_path_map(spec, batch_tree)
+
+
+def cache_specs(cfg: ArchConfig, mesh: Mesh, caches, seq_shard: bool = False):
+    """Decode caches. Leaves are [n_periods, B, ...]. If ``seq_shard`` the
+    attention KV sequence dim shards over "data" (long-context cells)."""
+    dp = _flat(dp_axes(mesh))
+    model = "model" if "model" in mesh.axis_names else None
+    msz = _axis_size(mesh, "model")
+
+    def spec(path, leaf):
+        name = path[-1]
+        nd = leaf.ndim
+        bax = _fits_dim(mesh, dp, leaf.shape[1]) if nd >= 2 else None
+        if name in ("k", "v"):             # [np, B, W, KV, hd]
+            if seq_shard:
+                return P(None, None, _fits_dim(mesh, "data", leaf.shape[2]),
+                         None, None)
+            h_ax = _fits_dim(mesh, model, leaf.shape[3])
+            if h_ax is not None:
+                return P(None, bax, None, h_ax, None)
+            # kv heads don't divide TP: shard the sequence dim over model
+            # instead (GSPMD distributes the softmax/attention reductions)
+            return P(None, bax, _fits_dim(mesh, model, leaf.shape[2]),
+                     None, None)
+        if name == "pos":                  # [np, B, W]
+            if seq_shard:
+                return P(None, None, _fits_dim(mesh, "data", leaf.shape[2]))
+            return P(None, bax, _fits_dim(mesh, model, leaf.shape[2]))
+        if name in ("latent", "k_rope"):   # [np, B, S, r] — seq over model
+            return P(None, bax, _fits_dim(mesh, model, leaf.shape[2]), None)
+        if name in ("cross_k", "cross_v"):
+            return P(None, bax, None, None, None)
+        if name == "C":                    # mlstm matrix memory [np,B,H,hd,hd]
+            return P(None, bax, None, None,
+                     _fits_dim(mesh, model, leaf.shape[-1]))
+        return P(*([None, bax] + [None] * (nd - 2)))
+    return _tree_path_map(spec, caches)
+
+
+def membership_specs(membership_tree):
+    return jax.tree_util.tree_map(lambda _: P(), membership_tree)
+
+
+def specs_to_shardings(mesh: Mesh, specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+from repro.serving.engine import FullRestartCostModel, ServingEngine, ThroughputSample
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler

@@ -1,0 +1,207 @@
+"""Failure-aware serving engine: continuous batching over ONE compiled step.
+
+Prefill rides the decode step (chunk-size-1 prompt replay), so steady state,
+degraded execution and the restored configuration all replay a single
+compiled executable — the runtime asserts it never recompiles across
+failure/reintegration (the paper's CUDA-graph-stability analogue).
+
+Timing: real compute runs on CPU; serving-time dynamics (step latency,
+recovery pauses, warmup) come from the deterministic SimClock + cost models
+in the elastic runtime, which is what lets the Fig. 1/10/11 traces be
+reproduced on this container. ``fixed_membership=True`` switches to the
+full-restart baseline (the only recovery path of a fixed-membership stack).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.steps import make_serve_step
+from repro.models.model import init_caches
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler
+
+
+@dataclass(frozen=True)
+class FullRestartCostModel:
+    """Fixed-membership baseline: the whole instance rebuilds (paper: 348 s).
+    Phases follow the paper's description of the initialization path."""
+
+    environment_setup_s: float = 40.0
+    model_load_s: float = 180.0
+    jit_warmup_s: float = 80.0
+    graph_capture_s: float = 48.0
+
+    @property
+    def total_s(self) -> float:
+        return (self.environment_setup_s + self.model_load_s
+                + self.jit_warmup_s + self.graph_capture_s)
+
+
+@dataclass
+class ThroughputSample:
+    t: float
+    tokens_per_s: float
+    active_fraction: float
+
+
+class ServingEngine:
+    def __init__(self, runtime: ElasticEPRuntime, *, max_batch: int = 16,
+                 max_len: int = 128, dtype=jnp.float32,
+                 base_step_time: float = 0.05,
+                 fixed_membership: bool = False,
+                 restart_model: Optional[FullRestartCostModel] = None):
+        self.rt = runtime
+        cfg = runtime.cfg
+        self.cfg = cfg
+        self.kv = KVCacheManager(max_batch, max_len)
+        self.sched = Scheduler(self.kv)
+        self.caches = init_caches(cfg, max_batch, max_len, dtype)
+        self.base_step_time = base_step_time
+        self.fixed_membership = fixed_membership
+        self.restart_model = restart_model or FullRestartCostModel()
+        self.trace: list[ThroughputSample] = []
+        self._prompt_pos = np.zeros((max_batch,), np.int64)
+
+        self._step = jax.jit(make_serve_step(cfg, runtime.dpl),
+                             donate_argnums=(1,))
+
+        def reset_slots(caches, mask):
+            def fix(path, leaf):
+                name = path[-1].key if hasattr(path[-1], "key") else ""
+                m = mask[None, :]
+                if name == "pos":
+                    return jnp.where(m[..., None], -1, leaf)
+                if name in ("c", "n", "h", "C", "conv", "latent", "k_rope",
+                            "k", "v"):
+                    shape = (1, mask.shape[0]) + (1,) * (leaf.ndim - 2)
+                    return jnp.where(mask.reshape((1, -1) + (1,) * (leaf.ndim - 2)),
+                                     jnp.zeros_like(leaf), leaf)
+                if name == "m":
+                    return jnp.where(mask.reshape((1, -1) + (1,) * (leaf.ndim - 2)),
+                                     jnp.full_like(leaf, -1e30), leaf)
+                return leaf
+            return jax.tree_util.tree_map_with_path(fix, caches)
+
+        self._reset_slots = jax.jit(reset_slots, donate_argnums=(0,))
+        self._last_input = np.zeros((max_batch, 1), np.int32)
+
+    # ------------------------------------------------------------------
+    def compile_count(self) -> int:
+        """Number of serve-step compilations so far (must be 1 for the whole
+        fail/recover/rejoin lifetime — asserted by tests)."""
+        return self._step._cache_size()
+
+    # ------------------------------------------------------------------
+    def _build_inputs(self):
+        tokens = np.zeros((self.kv.num_slots, 1), np.int32)
+        for slot in self.kv.active_slots():
+            req = self.sched.running[int(self.kv.owner[slot])]
+            pos = self._prompt_pos[slot]
+            if pos < len(req.prompt):
+                tokens[slot, 0] = req.prompt[pos]
+            else:
+                tokens[slot, 0] = req.generated[-1] if req.generated else 0
+        lengths = self.kv.lengths.copy()
+        return tokens, lengths
+
+    def step(self) -> int:
+        """One engine iteration. Returns tokens produced."""
+        rt = self.rt
+        # --- fault handling (between forward passes, paper §3.1) ---
+        failed = rt.poll_failures()
+        if failed:
+            self.sched.fail_inflight()
+            self._prompt_pos[:] = 0
+            if self.fixed_membership:
+                self._full_restart(failed)
+            else:
+                rt.handle_failure(failed)
+            self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+                                               rt.active_fraction()))
+        if not self.fixed_membership:
+            joined = rt.poll_reintegration()
+            if joined:
+                self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+                                                   rt.active_fraction()))
+            rt.observe_step_latencies(self.base_step_time)
+            rt.mitigate_stragglers()
+
+        # --- admit into free slots ---
+        admitted = self.sched.admit()
+        if admitted:
+            mask = np.zeros((self.kv.num_slots,), bool)
+            for req in admitted:
+                mask[req.slot] = True
+                self._prompt_pos[req.slot] = 0
+            self.caches = self._reset_slots(self.caches, jnp.asarray(mask))
+
+        active = self.kv.active_slots()
+        if not active:
+            rt.clock.advance(self.base_step_time)
+            rt.heartbeat()
+            return 0
+
+        tokens, lengths = self._build_inputs()
+        next_tok, logits, self.caches = self._step(
+            rt.params, self.caches, rt.membership,
+            jnp.asarray(tokens), jnp.asarray(lengths))
+        next_tok = np.asarray(next_tok)
+
+        # --- bookkeeping: prefill replay vs real decode ---
+        produced = {}
+        for slot in active:
+            req = self.sched.running.get(int(self.kv.owner[slot]))
+            if req is None:
+                continue
+            pos = self._prompt_pos[slot]
+            if pos + 1 < len(req.prompt):
+                # still consuming the prompt
+                self._prompt_pos[slot] += 1
+                self.kv.lengths[slot] = int(pos + 1)
+            else:
+                if pos + 1 == len(req.prompt):
+                    self._prompt_pos[slot] += 1
+                produced[slot] = int(next_tok[slot, 0]) % self.cfg.vocab_size
+        now = rt.clock.now()
+        self.sched.step_complete(produced, now)
+
+        # --- modeled step latency: wide-EP step time scales with the
+        #     reciprocal of the live-rank fraction (reduced capacity) ---
+        step_t = self.base_step_time / max(rt.active_fraction(), 1e-6)
+        rt.clock.advance(step_t)
+        rt.heartbeat()
+        self.trace.append(ThroughputSample(
+            rt.clock.now(), len(produced) / step_t, rt.active_fraction()))
+        return len(produced)
+
+    def _full_restart(self, failed):
+        """Fixed-membership baseline: one long outage, then full capacity."""
+        rt = self.rt
+        rt.record("full_restart_begin", ranks=list(failed))
+        rt.clock.advance(self.restart_model.total_s)
+        for r in failed:
+            rt.detector.mark_reachable(r)
+            rt.table.reactivate(r)
+        rt.membership = rt.table.to_device()
+        rt.record("full_restart_done", seconds=self.restart_model.total_s)
+
+    # ------------------------------------------------------------------
+    def run(self, *, until: Optional[float] = None,
+            max_steps: int = 10_000) -> None:
+        steps = 0
+        while steps < max_steps:
+            if until is not None and self.rt.clock.now() >= until:
+                break
+            if (self.sched.inflight == 0 and not self.sched.queue
+                    and until is None):
+                break
+            self.step()
+            steps += 1

@@ -1,0 +1,50 @@
+"""Slot-based KV cache manager for continuous batching.
+
+The engine runs a fixed decode batch of ``num_slots`` sequences; the manager
+tracks slot allocation/free and per-slot context lengths. Cache arrays
+themselves live in the compiled step's donated arguments (models.init_caches
+layout); this class owns only the host-side allocation state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+
+class KVCacheManager:
+    def __init__(self, num_slots: int, max_len: int):
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.free = list(range(num_slots))
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self.owner = np.full((num_slots,), -1, np.int64)   # request id
+
+    def allocate(self, rid: int, context_len: int) -> Optional[int]:
+        if not self.free or context_len >= self.max_len:
+            return None
+        slot = self.free.pop(0)
+        self.owner[slot] = rid
+        self.lengths[slot] = context_len
+        return slot
+
+    def release(self, slot: int) -> None:
+        if self.owner[slot] >= 0:
+            self.owner[slot] = -1
+            self.lengths[slot] = 0
+            self.free.append(slot)
+
+    def release_all(self) -> list[int]:
+        """Fail every in-flight sequence (rank-failure semantics)."""
+        owners = [int(r) for r in self.owner if r >= 0]
+        for s in range(self.num_slots):
+            self.release(s)
+        return owners
+
+    def active_slots(self) -> list[int]:
+        return [s for s in range(self.num_slots) if self.owner[s] >= 0]
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.num_slots

@@ -1,0 +1,35 @@
+"""Request/response types for the serving engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Optional
+
+
+class RequestState(Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+    FAILED = "failed"          # in-flight at a rank failure (client retries)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    state: RequestState = RequestState.QUEUED
+    generated: list[int] = field(default_factory=list)
+    slot: int = -1             # KV-cache slot while running
+    t_submit: float = 0.0
+    t_first_token: float = -1.0
+    t_finish: float = -1.0
+    retries: int = 0
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens

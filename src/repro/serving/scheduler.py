@@ -1,0 +1,94 @@
+"""Continuous-batching scheduler: admit queued requests into free KV slots,
+retire finished ones, and fail+requeue in-flight work on rank failures
+(paper §3.1: EEP reports in-flight requests as failed; clients retry)."""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.request import Request, RequestState
+
+
+@dataclass
+class SchedulerStats:
+    admitted: int = 0
+    finished: int = 0
+    failed: int = 0
+    retried: int = 0
+    tokens_out: int = 0
+
+
+class Scheduler:
+    def __init__(self, kv: KVCacheManager, retry_failed: bool = True):
+        self.kv = kv
+        self.queue: deque[Request] = deque()
+        self.running: dict[int, Request] = {}
+        self.stats = SchedulerStats()
+        self.retry_failed = retry_failed
+
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    def admit(self) -> list[Request]:
+        """Move queued requests into free slots (to be prefilled)."""
+        admitted = []
+        while self.queue:
+            req = self.queue[0]
+            slot = self.kv.allocate(req.rid, len(req.prompt))
+            if slot is None:
+                break
+            self.queue.popleft()
+            req.slot = slot
+            req.state = RequestState.DECODING
+            self.running[req.rid] = req
+            self.stats.admitted += 1
+            admitted.append(req)
+        return admitted
+
+    def step_complete(self, new_tokens: dict[int, int], now: float,
+                      eos_id: Optional[int] = None) -> list[Request]:
+        """Record one decode step's outputs {slot: token}. Returns finished."""
+        finished = []
+        for slot, tok in new_tokens.items():
+            rid = int(self.kv.owner[slot])
+            if rid < 0:
+                continue
+            req = self.running[rid]
+            if req.t_first_token < 0:
+                req.t_first_token = now
+            req.generated.append(int(tok))
+            self.kv.lengths[slot] += 1
+            self.stats.tokens_out += 1
+            if req.done() or (eos_id is not None and tok == eos_id):
+                req.state = RequestState.FINISHED
+                req.t_finish = now
+                self.kv.release(slot)
+                del self.running[rid]
+                self.stats.finished += 1
+                finished.append(req)
+        return finished
+
+    def fail_inflight(self) -> list[Request]:
+        """Rank failure: every in-flight request is reported failed and (per
+        client policy) resubmitted from scratch."""
+        failed = []
+        rids = self.kv.release_all()
+        for rid in rids:
+            req = self.running.pop(rid)
+            req.state = RequestState.FAILED
+            req.generated = []
+            req.slot = -1
+            self.stats.failed += 1
+            failed.append(req)
+            if self.retry_failed:
+                req.retries += 1
+                self.submit(req)
+                self.stats.retried += 1
+        return failed
+
+    @property
+    def inflight(self) -> int:
+        return len(self.running)

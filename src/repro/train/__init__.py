@@ -1,0 +1,1 @@
+from repro.train.optim import OptimizerConfig, make_optimizer

@@ -1,0 +1,55 @@
+"""Deterministic, resumable synthetic token pipeline.
+
+Generates structured pseudo-text (Zipf-distributed tokens with local n-gram
+correlations) so the loss curve is meaningfully learnable, not white noise.
+The iterator state is one integer (the step), making data-order recovery
+after checkpoint/restart exact — the fault-tolerance contract tests restore
+a run mid-stream and assert identical batches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class DataConfig:
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+class SyntheticTokenPipeline:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.step = 0
+        rng = np.random.RandomState(cfg.seed)
+        # fixed bigram transition structure: each token has a preferred
+        # successor band, so the LM has real signal to learn
+        self.shift = rng.randint(1, cfg.vocab_size, size=(cfg.vocab_size,))
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / np.power(ranks, cfg.zipf_a)
+        self.zipf_p = p / p.sum()
+
+    def state(self) -> dict:
+        return {"step": self.step}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])
+
+    def next_batch(self) -> dict:
+        cfg = self.cfg
+        rng = np.random.RandomState((cfg.seed * 1_000_003 + self.step)
+                                    % (2**31 - 1))
+        base = rng.choice(cfg.vocab_size, size=(cfg.batch, cfg.seq_len),
+                          p=self.zipf_p).astype(np.int32)
+        # with prob 0.6, token t+1 follows the bigram structure of token t
+        follow = rng.random((cfg.batch, cfg.seq_len - 1)) < 0.6
+        nxt = (base[:, :-1] + self.shift[base[:, :-1]]) % cfg.vocab_size
+        tokens = base.copy()
+        tokens[:, 1:] = np.where(follow, nxt, base[:, 1:])
+        self.step += 1
+        return {"tokens": tokens, "labels": tokens.copy()}

@@ -1,0 +1,105 @@
+"""Fault-tolerant training loop: microbatched train_step + checkpoint/restart
++ elastic-failure handling (failure mid-run -> restore from the latest
+checkpoint, rewind the data iterator, continue — the training-side recovery
+contract; serving-side recovery is the elastic runtime)."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.steps import make_deployment, make_train_step
+from repro.models.model import Deployment, init_params
+from repro.runtime.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticTokenPipeline
+from repro.train.optim import OptimizerConfig, make_optimizer
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    lr: float = 3e-4
+    seed: int = 0
+    dtype: str = "float32"
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 batch: int, seq_len: int,
+                 dpl: Optional[Deployment] = None,
+                 slot_to_expert=None, num_slots=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.dpl = dpl or make_deployment(cfg, None, kind="train")
+        dtype = jnp.dtype(tcfg.dtype)
+        self.params = init_params(cfg, jax.random.key(tcfg.seed), dtype,
+                                  slot_to_expert, num_slots)
+        opt_cfg = OptimizerConfig(name=cfg.optimizer, lr=tcfg.lr,
+                                  warmup_steps=max(tcfg.steps // 10, 1),
+                                  decay_steps=tcfg.steps)
+        opt_init, _ = make_optimizer(opt_cfg)
+        self.opt_state = opt_init(self.params)
+        self.step_fn = jax.jit(make_train_step(cfg, self.dpl, opt_cfg),
+                               donate_argnums=(0, 1))
+        self.data = SyntheticTokenPipeline(DataConfig(
+            vocab_size=cfg.vocab_size, batch=batch, seq_len=seq_len,
+            seed=tcfg.seed))
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir)
+        self.step = 0
+        self.history: list[dict] = []
+        from repro.launch.steps import make_membership_table
+        self.membership = make_membership_table(cfg, None,
+                                                "train").to_device()
+
+    # -- checkpoint/restart --------------------------------------------------
+    def save(self, blocking: bool = True) -> None:
+        tree = {"params": self.params, "opt": self.opt_state}
+        self.ckpt.save(self.step, tree,
+                       metadata={"data": self.data.state(),
+                                 "step": self.step},
+                       blocking=blocking)
+
+    def try_restore(self) -> bool:
+        if self.ckpt.latest_step() is None:
+            return False
+        tree = {"params": self.params, "opt": self.opt_state}
+        tree, step, meta = self.ckpt.restore(tree)
+        self.params = jax.tree_util.tree_map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree_util.tree_map(jnp.asarray, tree["opt"])
+        self.data.restore(meta["data"])
+        self.step = int(meta["step"])
+        return True
+
+    # -- run -------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            fail_at: Optional[int] = None) -> list[dict]:
+        """Train. ``fail_at``: simulate a fail-stop crash at that step
+        (raises); the caller restarts via a fresh Trainer + try_restore."""
+        target = self.step + (steps or self.tcfg.steps)
+        while self.step < target:
+            if fail_at is not None and self.step == fail_at:
+                raise RuntimeError(f"injected fail-stop at step {self.step}")
+            batch = self.data.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, self.membership, batch)
+            loss = float(metrics["loss"])
+            self.step += 1
+            rec = {"step": self.step, "loss": loss,
+                   "wall_s": time.time() - t0}
+            self.history.append(rec)
+            if self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step:5d} loss {loss:.4f} "
+                      f"({rec['wall_s']*1e3:.0f} ms)", flush=True)
+            if self.step % self.tcfg.checkpoint_every == 0:
+                self.save()
+        return self.history

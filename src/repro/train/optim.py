@@ -1,0 +1,162 @@
+"""Optimizers in raw JAX: AdamW and Adafactor (factored second moment,
+no first moment — the memory-fitting choice for the giant dense/MoE archs;
+see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"            # "adamw" | "adafactor"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(np.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params,
+                                  is_leaf=lambda x: isinstance(x, jax.Array))
+    m = jax.tree_util.tree_map(lambda t: t[0], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": m, "v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored v over the two trailing dims; no first moment)
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),         # row
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {
+        "v": jax.tree_util.tree_map(init, params,
+                                    is_leaf=lambda x: isinstance(x, jax.Array)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, v, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + 1e-30
+        if _factored(p):
+            vr = decay * v["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * v["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            pre = jnp.sqrt(rfac)[..., None] * jnp.sqrt(vc)[..., None, :]
+            u = g32 / jnp.maximum(pre, 1e-30)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            vv = decay * v["v"] + (1 - decay) * g2
+            u = g32 / jnp.sqrt(vv + 1e-30)
+            nv = {"v": vv}
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        newp = (p.astype(jnp.float32) * (1 - lr * cfg.weight_decay)
+                - lr * u).astype(p.dtype)
+        return nv, newp
+
+    leaves = jax.tree_util.tree_map(upd, grads, state["v"], params,
+                                    is_leaf=lambda x: isinstance(x, jax.Array))
+    is_pair = lambda x: isinstance(x, tuple)
+    v = jax.tree_util.tree_map(lambda t: t[0], leaves, is_leaf=is_pair)
+    new_p = jax.tree_util.tree_map(lambda t: t[1], leaves, is_leaf=is_pair)
+    return new_p, {"v": v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return adamw_init, partial(adamw_update, cfg)
+    if cfg.name == "adafactor":
+        return adafactor_init, partial(adafactor_update, cfg)
+    raise ValueError(cfg.name)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests run single-device (the dry-run alone forces 512 fake devices)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_matmul_precision", "float32")

@@ -1,0 +1,179 @@
+"""Attention & SSM mixer correctness: cache-path vs full-path equivalence,
+chunked-scan vs step-recurrence consistency, ring-buffer SWA semantics."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, MambaConfig, XLSTMConfig
+from repro.models import attention as attn
+from repro.models.mamba import mamba_apply, mamba_init
+from repro.models.xlstm import (
+    mlstm_apply,
+    mlstm_init,
+    slstm_apply,
+    slstm_init,
+)
+
+
+def _gqa_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=32,
+                num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+                vocab_size=64)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_gqa_decode_matches_full():
+    cfg = _gqa_cfg()
+    key = jax.random.key(0)
+    p = attn.gqa_init(key, cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full = attn.gqa_full(cfg, p, x, pos)
+
+    cache = {
+        "k": jnp.zeros((B, S, 2, 8)), "v": jnp.zeros((B, S, 2, 8)),
+        "pos": jnp.full((B, S), -1, jnp.int32),
+    }
+    outs = []
+    for i in range(S):
+        y, cache = attn.gqa_decode(cfg, p, x[:, i:i + 1],
+                                   jnp.full((B,), i, jnp.int32), cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=1e-4)
+
+
+def test_swa_ring_cache_matches_full_window():
+    cfg = _gqa_cfg(attention="swa", window=4)
+    key = jax.random.key(1)
+    p = attn.gqa_init(key, cfg, jnp.float32)
+    B, S, W = 1, 10, 4
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full = attn.gqa_full(cfg, p, x, pos)
+    cache = {
+        "k": jnp.zeros((B, W, 2, 8)), "v": jnp.zeros((B, W, 2, 8)),
+        "pos": jnp.full((B, W), -1, jnp.int32),
+    }
+    outs = []
+    for i in range(S):
+        y, cache = attn.gqa_decode(cfg, p, x[:, i:i + 1],
+                                   jnp.full((B,), i, jnp.int32), cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=1e-4)
+
+
+def test_qchunked_attention_matches_unchunked():
+    cfg = _gqa_cfg()
+    key = jax.random.key(3)
+    p = attn.gqa_init(key, cfg, jnp.float32)
+    B, S = 1, 64
+    x = jax.random.normal(key, (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = attn.gqa_project_qkv(cfg, p, x, pos)
+    from repro.models.layers import causal_mask
+    ref = attn._sdpa(q, k, v, causal_mask(pos, pos), 1.0 / np.sqrt(8))
+    chunked = attn._sdpa_qchunked(q, k, v, pos, pos, 1.0 / np.sqrt(8),
+                                  chunk=16)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_mla_decode_matches_full():
+    cfg = get_config("deepseek-v3-671b").reduced()
+    key = jax.random.key(2)
+    p = attn.mla_init(key, cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full = attn.mla_full(cfg, p, x, pos)
+    m = cfg.mla
+    cache = {
+        "latent": jnp.zeros((B, S, m.kv_lora_rank)),
+        "k_rope": jnp.zeros((B, S, m.qk_rope_head_dim)),
+        "pos": jnp.full((B, S), -1, jnp.int32),
+    }
+    outs = []
+    for i in range(S):
+        y, cache = attn.mla_decode(cfg, p, x[:, i:i + 1],
+                                   jnp.full((B,), i, jnp.int32), cache)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4)
+
+
+def _mamba_cfg():
+    return ArchConfig(name="m", family="hybrid", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+                      vocab_size=64, attention="gqa",
+                      mamba=MambaConfig(d_state=4, d_conv=3, expand=2))
+
+
+def test_mamba_chunked_matches_stepwise():
+    cfg = _mamba_cfg()
+    key = jax.random.key(4)
+    p = mamba_init(key, cfg, jnp.float32)
+    B, S = 2, 21
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    y_par, _ = mamba_apply(cfg, p, x, None, chunk=8)
+
+    d_in = cfg.mamba.expand * cfg.d_model
+    state = {"conv": jnp.zeros((B, cfg.mamba.d_conv - 1, d_in)),
+             "h": jnp.zeros((B, d_in, cfg.mamba.d_state))}
+    outs = []
+    for i in range(S):
+        y, state = mamba_apply(cfg, p, x[:, i:i + 1], state)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-4)
+
+
+def _xlstm_cfg():
+    return ArchConfig(name="x", family="ssm", num_layers=2, d_model=16,
+                      num_heads=2, num_kv_heads=2, head_dim=8, d_ff=0,
+                      vocab_size=64, attention="none", norm="layernorm",
+                      xlstm=XLSTMConfig(slstm_period=2, conv1d_kernel=3))
+
+
+def test_mlstm_chunked_matches_stepwise():
+    cfg = _xlstm_cfg()
+    key = jax.random.key(5)
+    p = mlstm_init(key, cfg, jnp.float32)
+    B, S = 1, 13
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model)) * 0.5
+    y_par, _ = mlstm_apply(cfg, p, x, None, chunk=4)
+
+    H = cfg.num_heads
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    hd = d_in // H
+    state = {"C": jnp.zeros((B, H, hd, hd)), "n": jnp.zeros((B, H, hd)),
+             "m": jnp.full((B, H), -1e30),
+             "conv": jnp.zeros((B, cfg.xlstm.conv1d_kernel - 1, d_in))}
+    outs = []
+    for i in range(S):
+        y, state = mlstm_apply(cfg, p, x[:, i:i + 1], state, chunk=1)
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_slstm_stateful_continuation():
+    cfg = _xlstm_cfg()
+    key = jax.random.key(6)
+    p = slstm_init(key, cfg, jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, cfg.d_model))
+    y_full, _ = slstm_apply(cfg, p, x, None)
+    y_a, st = slstm_apply(cfg, p, x[:, :5], None)
+    y_b, _ = slstm_apply(cfg, p, x[:, 5:], st)
+    y_cat = jnp.concatenate([y_a, y_b], axis=1)
+    np.testing.assert_allclose(np.asarray(y_cat), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,90 @@
+"""Checkpoint manager + fault-tolerant training loop (crash -> restore ->
+bitwise-identical data order continuation)."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.runtime.checkpoint import CheckpointManager
+from repro.train.data import DataConfig, SyntheticTokenPipeline
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": np.arange(6).reshape(2, 3).astype(np.float32),
+            "b": {"c": np.ones((4,), np.int32)}}
+    mgr.save(5, tree, metadata={"x": 1})
+    mgr.save(10, tree)
+    mgr.save(15, tree)
+    assert mgr.all_steps() == [10, 15]     # keep=2 gc'd step 5
+    restored, step, meta = mgr.restore(tree)
+    assert step == 15
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": np.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore({"a": np.zeros((3, 3))})
+
+
+def test_data_pipeline_resumable():
+    cfg = DataConfig(vocab_size=128, batch=2, seq_len=16, seed=3)
+    p1 = SyntheticTokenPipeline(cfg)
+    batches = [p1.next_batch() for _ in range(5)]
+    state = p1.state()
+    later = [p1.next_batch() for _ in range(3)]
+
+    p2 = SyntheticTokenPipeline(cfg)
+    p2.restore(state)
+    replay = [p2.next_batch() for _ in range(3)]
+    for a, b in zip(later, replay):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_train_crash_restart_continues(tmp_path):
+    """Crash at step 7, restart from the step-5 checkpoint, end state equals
+    data-order-correct continuation."""
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    tcfg = TrainerConfig(steps=10, checkpoint_every=5, log_every=100,
+                         checkpoint_dir=str(tmp_path))
+    t1 = Trainer(cfg, tcfg, batch=2, seq_len=16)
+    with pytest.raises(RuntimeError):
+        t1.run(steps=10, fail_at=7)
+    assert t1.ckpt.latest_step() == 5
+
+    t2 = Trainer(cfg, tcfg, batch=2, seq_len=16)
+    assert t2.try_restore()
+    assert t2.step == 5
+    assert t2.data.state()["step"] == 5    # data order rewound exactly
+    hist = t2.run(steps=5)
+    assert t2.step == 10
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+def test_train_loss_decreases():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    tcfg = TrainerConfig(steps=30, checkpoint_every=1000, log_every=1000,
+                         checkpoint_dir="/tmp/ckpt_unused_loss", lr=3e-3)
+    t = Trainer(cfg, tcfg, batch=4, seq_len=32)
+    hist = t.run(steps=30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first  # synthetic bigram structure is learnable
+
+
+def test_moe_train_loss_decreases():
+    cfg = get_config("mixtral-8x22b").reduced()
+    tcfg = TrainerConfig(steps=25, checkpoint_every=1000, log_every=1000,
+                         checkpoint_dir="/tmp/ckpt_unused_moe", lr=3e-3)
+    t = Trainer(cfg, tcfg, batch=4, seq_len=32)
+    hist = t.run(steps=25)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first

@@ -1,0 +1,183 @@
+"""End-to-end elastic lifecycle: failure -> bounded recovery -> reduced
+serving -> deferred-join reintegration, with the paper's key invariants:
+
+  * the serve step NEVER recompiles across membership changes
+    (CUDA-graph-stability analogue),
+  * model outputs under a repaired degraded placement equal the healthy
+    outputs whenever coverage survives (replica consistency),
+  * in-flight requests are failed and retried (paper §3.1 semantics),
+  * two bounded pauses vs one long restart outage.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.reintegration import WarmupCostModel
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.serving.engine import FullRestartCostModel, ServingEngine
+from repro.serving.request import Request
+
+
+def _runtime(world=8, spr=1, seed=0, **kw):
+    cfg = get_config("mixtral-8x22b").reduced()  # 4 experts, top-2
+    table = make_initial_membership(world, cfg.moe.num_experts, spr)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    return cfg, ElasticEPRuntime(cfg, params, table, **kw)
+
+
+def test_no_recompile_across_membership_changes():
+    cfg, rt = _runtime()
+    eng = ServingEngine(rt, max_batch=4, max_len=40)
+    for i in range(4):
+        eng.sched.submit(Request(rid=i, prompt=[1, 2, 3], max_new_tokens=4))
+    rt.injector.inject_at(0.3, [2])
+    eng.run(until=50.0, max_steps=1500)
+    assert eng.compile_count() == 1
+    kinds = [e.kind for e in rt.timeline]
+    assert "failure" in kinds and "recovery_done" in kinds and "join" in kinds
+    assert rt.table.active_mask.all()      # fully restored
+
+
+def test_degraded_outputs_match_when_replicas_survive():
+    """R=2: one rank failure keeps full coverage; post-repair outputs must be
+    NUMERICALLY identical for tokens routed to surviving replicas of the
+    same logical experts (replica weight consistency)."""
+    cfg, rt = _runtime(world=8, spr=1)   # 8 slots, 4 experts, R=2
+    from repro.models import decode_step, init_caches, Deployment
+    B = 4
+    caches = init_caches(cfg, B, 16, jnp.float32)
+    toks = jnp.ones((B, 1), jnp.int32)
+    lengths = jnp.zeros((B,), jnp.int32)
+    y0, _ = decode_step(cfg, rt.params, toks, lengths, caches, rt.membership,
+                        rt.dpl)
+
+    rt.detector.mark_unreachable(5)
+    rt.clock.advance(2.0)
+    failed = rt.poll_failures()
+    assert failed == [5]
+    rt.handle_failure(failed)
+
+    y1, _ = decode_step(cfg, rt.params, toks, lengths, caches, rt.membership,
+                        rt.dpl)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_recovery_phases_bounded():
+    cfg, rt = _runtime(world=16, spr=2)
+    rt.detector.mark_unreachable(3)
+    rt.detector.mark_unreachable(7)
+    rt.clock.advance(1.5)
+    phases = rt.handle_failure(rt.poll_failures())
+    assert 0 < phases["total"] < 30.0      # paper: 6-21 s at these scales
+    ev = [e for e in rt.timeline if e.kind == "recovery_done"][0]
+    mix = ev.detail["mix"]
+    assert sum(mix.values()) > 0
+
+
+def test_inflight_requests_failed_and_retried():
+    cfg, rt = _runtime()
+    eng = ServingEngine(rt, max_batch=4, max_len=64)
+    for i in range(4):
+        eng.sched.submit(Request(rid=i, prompt=[1] * 8, max_new_tokens=30))
+    # fail while decodes are definitely in flight
+    for _ in range(5):
+        eng.step()
+    assert eng.sched.inflight > 0
+    rt.injector.inject_at(rt.clock.now(), [1])
+    rt.clock.advance(1.2)
+    eng.step()
+    assert eng.sched.stats.failed > 0
+    assert eng.sched.stats.retried == eng.sched.stats.failed
+    eng.run(until=rt.clock.now() + 100.0, max_steps=3000)
+    assert eng.sched.stats.finished == 4   # clients eventually served
+
+
+def test_two_bounded_pauses_vs_full_restart():
+    """The Fig. 1 structure: EEP = two short pauses with a productive plateau
+    between; fixed membership = one long outage."""
+    warm = WarmupCostModel(process_relaunch_s=1, runtime_init_s=2,
+                           weight_load_s=3, graph_capture_s=2)
+    cfg, rt = _runtime(warmup_model=warm)
+    eng = ServingEngine(rt, max_batch=4, max_len=256)
+    for i in range(24):
+        eng.sched.submit(Request(rid=i, prompt=[1] * 4, max_new_tokens=120))
+    rt.injector.inject_at(1.0, [4])
+    eng.run(until=60.0, max_steps=6000)
+    t_rec = [e.t for e in rt.timeline if e.kind == "recovery_done"][0]
+    t_fail = [e.t for e in rt.timeline if e.kind == "failure"][0]
+    t_join = [e.t for e in rt.timeline if e.kind == "join"][0]
+    pause1 = t_rec - t_fail
+    assert pause1 < 15.0
+    # reduced-capacity plateau: throughput nonzero between pauses
+    mid = [s for s in eng.trace if t_rec < s.t < t_join]
+    assert any(s.tokens_per_s > 0 for s in mid)
+    assert any(abs(s.active_fraction - 7 / 8) < 1e-6 for s in mid)
+
+    # fixed-membership baseline on the same workload
+    cfg2, rt2 = _runtime(seed=0)
+    eng2 = ServingEngine(rt2, max_batch=4, max_len=256,
+                         fixed_membership=True,
+                         restart_model=FullRestartCostModel(
+                             environment_setup_s=10, model_load_s=20,
+                             jit_warmup_s=10, graph_capture_s=8))
+    for i in range(24):
+        eng2.sched.submit(Request(rid=i, prompt=[1] * 4, max_new_tokens=120))
+    rt2.injector.inject_at(1.0, [4])
+    eng2.run(until=120.0, max_steps=6000)
+    restart = [e for e in rt2.timeline if e.kind == "full_restart_done"][0]
+    assert restart.detail["seconds"] == 48.0
+    # EEP total off-service << full restart outage
+    assert pause1 + 1.0 < restart.detail["seconds"]
+
+
+def test_repeated_failures_sequential():
+    """Multiple distinct failures over time, each recovered, all rejoined."""
+    cfg, rt = _runtime(world=8, spr=2,
+                       warmup_model=WarmupCostModel(1, 1, 1, 1))
+    eng = ServingEngine(rt, max_batch=2, max_len=512)
+    eng.sched.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=400))
+    rt.injector.inject_at(0.5, [0])
+    rt.injector.inject_at(12.0, [6])
+    eng.run(until=60.0, max_steps=4000)
+    joins = [e for e in rt.timeline if e.kind == "join"]
+    assert len(joins) == 2
+    assert rt.table.active_mask.all()
+    assert eng.compile_count() == 1
+
+
+def test_straggler_mitigation_shifts_load():
+    """A persistently slow (but alive) rank gets de-weighted by the
+    capacity-aware EPLB: hot-expert replicas migrate off it, membership and
+    compiled step untouched (beyond-paper; see core/straggler.py)."""
+    import numpy as np
+    cfg, rt = _runtime(world=8, spr=2)
+    # expert 0 is hot
+    rt.expert_load = np.array([10.0, 1.0, 1.0, 1.0])
+    eng = ServingEngine(rt, max_batch=2, max_len=1024)
+    eng.sched.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=600))
+    rt.rank_slowdown[3] = 3.0          # rank 3 throttles
+    eng.run(until=20.0, max_steps=800)
+    evs = [e for e in rt.timeline if e.kind == "straggler_mitigation"]
+    assert evs and 3 in evs[0].detail["flagged"]
+    # hot expert 0 no longer hosted on the straggler
+    hosts0 = {rt.table.rank_of_slot(s)
+              for s in rt.table.expert_to_slots()[0]}
+    assert 3 not in hosts0
+    # still a valid instance, same executable, all ranks active
+    from repro.core.validity import check
+    assert check(rt.table, rt.membership).valid
+    assert rt.table.active_mask.all()
+    assert eng.compile_count() == 1
+
+    # recovery: rank 3 speeds back up -> flag clears on later steps
+    rt.rank_slowdown[3] = 1.0
+    eng.sched.submit(Request(rid=1, prompt=[1], max_new_tokens=600))
+    eng.run(until=rt.clock.now() + 60.0, max_steps=3000)
+    assert 3 not in rt.straggler.flagged

@@ -1,0 +1,159 @@
+"""Elastic routing + dispatch/combine: correctness and membership semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    EPContext,
+    dispatch_combine_dense,
+    elastic_route,
+    fixed_route,
+    make_initial_membership,
+)
+
+
+def _membership(world, E, spr, failed=()):
+    t = make_initial_membership(world, E, spr)
+    for r in failed:
+        t.deactivate(r)
+    return t
+
+
+def test_routing_targets_only_active_ranks():
+    world, E, spr = 8, 4, 2
+    t = _membership(world, E, spr, failed=[1, 5])
+    # placement must be repaired before routing; simulate publish of the
+    # active-filtered table
+    ms = t.to_device()
+    logits = jax.random.normal(jax.random.key(0), (64, E))
+    _, w, slots = elastic_route(logits, ms, 2, jnp.arange(64))
+    ranks = np.asarray(slots) // spr
+    assert t.active_mask[ranks].all()
+    assert np.allclose(np.asarray(w).sum(-1), 1.0, atol=1e-5)
+
+
+def test_masked_experts_never_selected():
+    world, E = 1, 6
+    t = _membership(world, E, E)
+    ms = t.to_device()
+    # zero replicas for experts 2 and 4
+    rc = np.asarray(ms.replica_count).copy()
+    rc[[2, 4]] = 0
+    import dataclasses
+    ms = dataclasses.replace(ms, replica_count=jnp.asarray(rc))
+    logits = jax.random.normal(jax.random.key(1), (128, E))
+    experts, w, _ = elastic_route(logits, ms, 3, jnp.arange(128))
+    assert not np.isin(np.asarray(experts), [2, 4]).any()
+
+
+def test_replica_selection_spreads_tokens():
+    world, E, spr = 4, 2, 1   # R=2 per expert
+    t = _membership(world, E, spr)
+    ms = t.to_device()
+    logits = jnp.tile(jnp.array([[5.0, 0.0]]), (256, 1))  # all pick expert 0
+    _, _, slots = elastic_route(logits, ms, 1, jnp.arange(256))
+    uniq = np.unique(np.asarray(slots))
+    assert len(uniq) == 2  # both replicas receive traffic
+
+
+def test_dispatch_combine_matches_dense_reference():
+    E, spr, k = 4, 4, 2
+    t = _membership(1, E, spr)
+    ms = t.to_device()
+    d, de, T = 16, 32, 24
+    key = jax.random.key(0)
+    wi = jax.random.normal(key, (spr, d, de)) / np.sqrt(d)
+    wo = jax.random.normal(jax.random.fold_in(key, 1), (spr, de, d)) / np.sqrt(de)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (T, d))
+    logits = jax.random.normal(jax.random.fold_in(key, 3), (T, E))
+    experts, w, slots = elastic_route(logits, ms, k, jnp.arange(T))
+    ep = EPContext(axis_names=(), world=1, slots_per_rank=spr,
+                   capacity_factor=8.0)
+
+    def expert_fn(recv):
+        h = jax.nn.gelu(jnp.einsum("srd,sde->sre", recv, wi))
+        return jnp.einsum("sre,sed->srd", h, wo)
+
+    y, aux = dispatch_combine_dense(x, slots, w, expert_fn, ep)
+    assert float(aux["dropped_fraction"]) == 0.0
+
+    ref = np.zeros((T, d), np.float32)
+    for tk in range(T):
+        for j in range(k):
+            s = int(slots[tk, j])
+            h = jax.nn.gelu(x[tk] @ wi[s])
+            ref[tk] += float(w[tk, j]) * np.asarray(h @ wo[s])
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-4)
+
+
+def test_combine_is_permutation_invariant():
+    """Token order must not change results (positions are bucket-local)."""
+    E, spr, k, T, d, de = 4, 4, 2, 16, 8, 12
+    t = _membership(1, E, spr)
+    ms = t.to_device()
+    key = jax.random.key(7)
+    wi = jax.random.normal(key, (spr, d, de))
+    wo = jax.random.normal(jax.random.fold_in(key, 1), (spr, de, d))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (T, d))
+    logits = jax.random.normal(jax.random.fold_in(key, 3), (T, E))
+    ep = EPContext((), 1, spr, capacity_factor=8.0)
+
+    def expert_fn(recv):
+        return jnp.einsum("sre,sed->srd",
+                          jax.nn.gelu(jnp.einsum("srd,sde->sre", recv, wi)),
+                          wo)
+
+    def run(xp, lp, tid):
+        _, w, slots = elastic_route(lp, ms, k, tid)
+        y, _ = dispatch_combine_dense(xp, slots, w, expert_fn, ep)
+        return y
+
+    perm = np.random.RandomState(0).permutation(T)
+    y1 = run(x, logits, jnp.arange(T))
+    y2 = run(x[perm], logits[perm], jnp.arange(T)[perm])
+    np.testing.assert_allclose(np.asarray(y1)[perm], np.asarray(y2),
+                               atol=1e-4)
+
+
+def test_capacity_drop_semantics():
+    """Over-capacity entries are dropped and renormalized away, never mixed
+    into wrong tokens."""
+    E, spr, k, T, d = 2, 2, 1, 64, 4
+    t = _membership(1, E, spr)
+    ms = t.to_device()
+    wi = jnp.ones((spr, d, d))
+    wo = jnp.ones((spr, d, d))
+    x = jnp.ones((T, d))
+    logits = jnp.tile(jnp.array([[10.0, -10.0]]), (T, 1))  # everyone -> e0
+    _, w, slots = elastic_route(logits, ms, k, jnp.arange(T))
+    ep = EPContext((), 1, spr, capacity_factor=0.25, min_capacity=8)
+
+    def expert_fn(recv):
+        return jnp.einsum("sre,sed->srd", recv @ wi, wo) * 0 + recv
+
+    y, aux = dispatch_combine_dense(x, slots, w, expert_fn, ep)
+    assert float(aux["dropped_fraction"]) > 0
+    # dropped tokens produce zero output; kept ones exactly identity
+    kept = np.asarray(y).sum(-1) != 0
+    np.testing.assert_allclose(np.asarray(y)[kept], np.asarray(x)[kept],
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(1, 40), E=st.integers(2, 8), k=st.integers(1, 3),
+       seed=st.integers(0, 99))
+def test_property_elastic_equals_fixed_when_identity_placement(T, E, k, seed):
+    """With full membership and identity placement, elastic routing ==
+    fixed-membership routing (the Fig. 9 equivalence)."""
+    k = min(k, E)
+    t = _membership(1, E, E)
+    ms = t.to_device()
+    logits = jax.random.normal(jax.random.key(seed), (T, E))
+    e1, w1, s1 = elastic_route(logits, ms, k, jnp.zeros(T, jnp.int32))
+    e2, w2, s2 = fixed_route(logits, np.arange(E, dtype=np.int32), k)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))

@@ -1,0 +1,121 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import (
+    flash_attention_decode,
+    flash_attention_prefill,
+)
+from repro.kernels.moe_gmm import fused_moe_ffn, gmm
+from repro.kernels.topk_router import topk_router
+
+TOL = dict(rtol=3e-2, atol=3e-2)      # bf16: 1-2 ulp accumulation-order noise
+TOL32 = dict(rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,E,R,k", [(64, 8, 2, 2), (100, 16, 3, 4),
+                                     (256, 256, 4, 8), (7, 4, 1, 1)])
+def test_topk_router_sweep(T, E, R, k):
+    key = jax.random.key(T + E)
+    logits = jax.random.normal(key, (T, E), jnp.float32)
+    e2s = jax.random.randint(jax.random.fold_in(key, 1), (E, R), 0, 64)
+    rc = jax.random.randint(jax.random.fold_in(key, 2), (E,), 1, R + 1)
+    rc = rc.at[0].set(0)  # one unreachable expert
+    tid = jnp.arange(T)
+    got = topk_router(logits, e2s, rc, tid, top_k=k, interpret=True)
+    want = ref.topk_router_ref(logits, e2s, rc.astype(jnp.int32), tid, top_k=k)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               **TOL32)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,R,d,de,act,gated", [
+    (2, 64, 128, 256, "swiglu", True),
+    (4, 33, 64, 96, "gelu", False),
+    (1, 128, 256, 128, "relu2", False),
+])
+def test_fused_moe_ffn_sweep(S, R, d, de, act, gated, dtype):
+    key = jax.random.key(S * R)
+    x = jax.random.normal(key, (S, R, d), jnp.float32).astype(dtype)
+    wi = (jax.random.normal(jax.random.fold_in(key, 1), (S, d, de))
+          / np.sqrt(d)).astype(dtype)
+    wg = ((jax.random.normal(jax.random.fold_in(key, 2), (S, d, de))
+           / np.sqrt(d)).astype(dtype) if gated else None)
+    wo = (jax.random.normal(jax.random.fold_in(key, 3), (S, de, d))
+          / np.sqrt(de)).astype(dtype)
+    got = fused_moe_ffn(x, wi, wo, wg, activation=act, block_t=32,
+                        block_f=64, interpret=True)
+    want = ref.fused_moe_ffn_ref(x, wi, wo, wg, activation=act)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("sizes", [[64, 32, 0, 96], [32, 32, 32, 32],
+                                   [0, 0, 128, 0]])
+def test_gmm_sweep(sizes):
+    G, d, f = len(sizes), 64, 48
+    T = int(sum(sizes))
+    key = jax.random.key(T)
+    x = jax.random.normal(key, (T, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (G, d, f)) / np.sqrt(d)
+    got = gmm(x, w, jnp.asarray(sizes), block_t=32, block_k=32,
+              interpret=True)
+    want = ref.gmm_ref(x, w, jnp.asarray(sizes))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Sq,H,KV,hd,window", [
+    (1, 128, 4, 4, 64, 0),
+    (2, 256, 8, 2, 64, 0),
+    (1, 256, 4, 4, 32, 64),   # sliding window
+])
+def test_flash_prefill_sweep(B, Sq, H, KV, hd, window, dtype):
+    key = jax.random.key(Sq + H)
+    q = jax.random.normal(key, (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, Sq, KV, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, Sq, KV, hd), jnp.float32).astype(dtype)
+    got = flash_attention_prefill(q, k, v, window=window, block_q=64,
+                                  block_k=64, interpret=True)
+    want = ref.flash_attention_prefill_ref(q, k, v, window=window)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,W", [(2, 8, 4, 64, 256), (3, 4, 1, 32, 128)])
+def test_flash_decode_sweep(B, H, KV, hd, W):
+    key = jax.random.key(B * H)
+    q = jax.random.normal(key, (B, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, W, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, W, KV, hd))
+    lengths = jnp.asarray(
+        np.random.RandomState(0).randint(1, W - 1, size=(B,)))
+    got = flash_attention_decode(q, k, v, lengths, block_k=64, interpret=True)
+    want = ref.flash_attention_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL32)
+
+
+def test_router_matches_model_path():
+    """The kernel implements exactly models/moe elastic_route semantics."""
+    from repro.core import elastic_route, make_initial_membership
+    t = make_initial_membership(4, 8, 2)
+    ms = t.to_device()
+    T, k = 33, 2
+    logits = jax.random.normal(jax.random.key(5), (T, 8), jnp.float32)
+    tid = jnp.arange(T)
+    e1, w1, s1 = elastic_route(logits, ms, k, tid)
+    e2, w2, s2 = topk_router(logits, ms.expert_to_slot, ms.replica_count,
+                             tid, top_k=k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), **TOL32)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))

@@ -1,0 +1,79 @@
+"""Unit tests: PeerTable, MembershipState, validity contract."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    MembershipState,
+    PeerTable,
+    check,
+    make_initial_membership,
+)
+
+
+def test_initial_membership_covers_all_experts():
+    t = make_initial_membership(world=8, num_experts=4, slots_per_rank=2)
+    e2s = t.expert_to_slots()
+    assert all(len(v) >= 1 for v in e2s.values())
+    assert t.num_slots == 16
+    # replicas land on distinct ranks (anti-affinity of the stride layout)
+    for e, slots in e2s.items():
+        ranks = [t.rank_of_slot(s) for s in slots]
+        assert len(set(ranks)) == len(ranks)
+
+
+def test_deactivate_reactivate_bumps_version():
+    t = make_initial_membership(4, 4, 1)
+    v0 = t.version
+    t.deactivate(2)
+    assert t.version > v0
+    assert not t.entries[2].active
+    epoch = t.entries[2].endpoint_epoch
+    t.reactivate(2)
+    assert t.entries[2].active
+    assert t.entries[2].endpoint_epoch == epoch + 1  # metadata re-exchanged
+
+
+def test_to_device_roundtrip():
+    t = make_initial_membership(4, 8, 2)
+    ms = t.to_device()
+    assert ms.world == 4
+    assert ms.num_slots == 8
+    assert ms.num_experts == 8
+    np.testing.assert_array_equal(np.asarray(ms.slot_to_expert),
+                                  t.slot_to_expert)
+    assert int(np.asarray(ms.replica_count).min()) >= 1
+
+
+def test_expert_location_excludes_inactive_ranks():
+    t = make_initial_membership(4, 4, 1)
+    t.deactivate(0)
+    e2s = t.expert_to_slots()
+    for e, slots in e2s.items():
+        for s in slots:
+            assert t.rank_of_slot(s) != 0
+
+
+def test_validity_contract_detects_each_violation():
+    t = make_initial_membership(4, 4, 1)
+    ms = t.to_device()
+    rep = check(t, ms)
+    assert rep.valid
+
+    # 1. peer-set violation: rank marked active but unreachable
+    reach = t.active_mask.copy()
+    reach[1] = False
+    rep = check(t, ms, reachable=reach)
+    assert not rep.peer_set_valid
+
+    # 2. coverage violation: kill the only host of expert 2
+    t2 = make_initial_membership(4, 4, 1)
+    t2.deactivate(2)   # slot 2 held expert 2 (R=1 layout)
+    rep2 = check(t2)
+    assert not rep2.expert_coverage_valid
+
+    # 3. routing violation: device state stale vs control plane
+    t3 = make_initial_membership(4, 4, 1)
+    ms3 = t3.to_device()
+    t3.deactivate(3)
+    rep3 = check(t3, ms3)
+    assert not rep3.routing_valid
