@@ -36,7 +36,9 @@ def pauses_from_trace(rt):
     t_rec = [e.t for e in rt.timeline if e.kind == "recovery_done"]
     t_join = [e.t for e in rt.timeline if e.kind == "join"]
     p1 = (t_rec[0] - t_fail[0]) if t_fail and t_rec else None
-    p2 = (rt.cost_model.join_patch_s * len(t_join)) if t_join else None
+    # joins ready at the same poll land as ONE batched table patch
+    n_patches = len(set(t_join))
+    p2 = (rt.cost_model.join_patch_s * n_patches) if t_join else None
     return p1, p2, (t_join[-1] if t_join else None)
 
 

@@ -1,0 +1,107 @@
+"""Scenario-registry sweep: multi-failure serving trajectories vs the
+fixed-membership full-restart baseline.
+
+  PYTHONPATH=src python benchmarks/scenarios.py [--smoke] [--out PATH]
+  PYTHONPATH=src python -m benchmarks.scenarios --smoke
+
+Runs every registered fault scenario (``repro.core.scenarios``) through the
+deterministic scenario runner, pairs each with the full-restart baseline on
+the same schedule, and writes a ``BENCH_scenarios.json`` trajectory file:
+per-scenario tokens served, downtime, recovery/join counts, invariant
+status, and the throughput trace. ``--smoke`` runs a 3-scenario subset with
+a single baseline pair — the CI perf-trajectory artifact (< 5 min on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SMOKE_SET = ["concurrent_multi_failure", "cascade_mid_recovery", "rejoin_storm"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI: 3 scenarios, 1 baseline pair")
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="skip the fixed-membership baseline runs")
+    args = ap.parse_args(argv)
+
+    from repro.core.scenarios import get_scenario, list_scenarios
+    from repro.runtime.scenario_runner import run_scenario
+
+    names = SMOKE_SET if args.smoke else list_scenarios()
+    # smoke keeps one baseline pair so the elastic-vs-restart delta is still
+    # in the trajectory without doubling the compile budget
+    baseline_names = [] if args.no_baseline else (
+        names[:1] if args.smoke else names)
+
+    t0 = time.time()
+    rows = []
+    print("name,us_per_call,derived")
+    for name in names:
+        scn = get_scenario(name)
+        res = run_scenario(scn, seed=args.seed, arch=args.arch)
+        row = res.summary()
+        row["trace"] = res.trace
+        row["timeline"] = res.timeline
+        if name in baseline_names:
+            base = run_scenario(scn, seed=args.seed, arch=args.arch,
+                                fixed_membership=True,
+                                check_invariants=False)
+            row["baseline"] = base.summary()
+            row["baseline"]["trace"] = base.trace
+        rows.append(row)
+        ok = "ok" if res.invariants_ok else "INVARIANT_VIOLATION"
+        print(f"scenario/{name}/downtime,{res.downtime_s*1e6:.0f},"
+              f"recoveries={res.recoveries}_rounds={res.recovery_rounds}"
+              f"_joins={res.joins}_aborts={res.warmup_aborts}_{ok}")
+        print(f"scenario/{name}/tokens,0,"
+              f"tokens_out={res.tokens_out}"
+              f"_finished={res.requests_finished}"
+              f"_dropped={res.requests_dropped}")
+        if "baseline" in row:
+            b = row["baseline"]
+            print(f"scenario/{name}/vs_restart,0,"
+                  f"elastic_downtime={res.downtime_s:.1f}s"
+                  f"_restart_downtime={b['downtime_s']:.1f}s"
+                  f"_token_ratio="
+                  f"{res.tokens_out / max(b['tokens_out'], 1):.2f}")
+
+    bad = [r["name"] for r in rows
+           if r["validity_violations"] or r["compile_count"] != 1
+           or r["coverage_loss"] != r["coverage_loss_expected"]]
+    out = {
+        "meta": {
+            "smoke": args.smoke,
+            "arch": args.arch,
+            "seed": args.seed,
+            "scenario_count": len(names),
+            "wall_s": round(time.time() - t0, 1),
+            "invariant_failures": bad,
+        },
+        "scenarios": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"scenario/sweep,0,n={len(names)}_wall={out['meta']['wall_s']}s"
+          f"_wrote={args.out}")
+    if bad:
+        print(f"scenario/sweep/FAILED,0,invariant_failures={bad}",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

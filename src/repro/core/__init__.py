@@ -11,6 +11,7 @@ from repro.core.elastic_moe import (
     fixed_route,
 )
 from repro.core.failure import (
+    CoverageLossError,
     FailureDetector,
     FailureInjector,
     RankState,
@@ -28,14 +29,27 @@ from repro.core.repair import (
     RepairPlan,
     apply_repair,
     plan_repair,
+    revalidate_plan,
+)
+from repro.core.scenarios import (
+    Action,
+    Scenario,
+    format_schedule,
+    get_scenario,
+    list_scenarios,
+    parse_schedule,
+    register,
 )
 from repro.core.validity import ValidityReport, check
 
 __all__ = [
-    "BackupStore", "EPContext", "FailureDetector", "FailureInjector",
-    "MembershipState", "PeerTable", "RankState", "RecoveryCostModel",
-    "ReintegrationController", "RepairPlan", "SimClock", "ValidityReport",
-    "WarmupCostModel", "apply_repair", "check", "dispatch_combine_dense",
-    "elastic_route", "eplb_place", "expert_load_from_route", "fixed_route",
-    "make_initial_membership", "placement_overlap", "plan_repair",
+    "Action", "BackupStore", "CoverageLossError", "EPContext",
+    "FailureDetector", "FailureInjector", "MembershipState", "PeerTable",
+    "RankState", "RecoveryCostModel", "ReintegrationController", "RepairPlan",
+    "Scenario", "SimClock", "ValidityReport", "WarmupCostModel",
+    "apply_repair", "check", "dispatch_combine_dense", "elastic_route",
+    "eplb_place", "expert_load_from_route", "fixed_route", "format_schedule",
+    "get_scenario", "list_scenarios", "make_initial_membership",
+    "parse_schedule", "placement_overlap", "plan_repair", "register",
+    "revalidate_plan",
 ]

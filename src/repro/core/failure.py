@@ -28,6 +28,13 @@ class RankState(Enum):
     # after join the rank is ACTIVE again
 
 
+class CoverageLossError(RuntimeError):
+    """Raised when a shrink cannot preserve expert coverage: fewer live
+    slots than logical experts, or an expert whose every replica AND backup
+    copy is gone. The runtime records a ``coverage_loss`` timeline event
+    before raising so scenario traces capture the loss."""
+
+
 @dataclass
 class FailureEvent:
     time: float
@@ -101,16 +108,30 @@ class FailureDetector:
         return out
 
 
+
 class FailureInjector:
-    """Scripted fail-stop / repair events for benchmarks and tests."""
+    """Scripted fail-stop / repair events for benchmarks and tests.
+
+    Multi-failure aware: several events may fire in one ``step`` (concurrent
+    failures), and an event may target a rank that is mid-warmup — the
+    runtime interprets that as a warmup abort (the relaunched process died
+    again) rather than a fresh detection. ``fired_events`` keeps the ordered
+    log of everything that has fired; the scenario runner harvests it into
+    each result's ``injected`` list."""
 
     def __init__(self, detector: FailureDetector):
         self.detector = detector
         self.schedule: list[FailureEvent] = []
         self.fired: set[int] = set()
+        self.fired_events: list[FailureEvent] = []
 
     def inject_at(self, time: float, ranks: list[int]) -> None:
         self.schedule.append(FailureEvent(time=time, ranks=list(ranks)))
+
+    def clear(self) -> None:
+        self.schedule.clear()
+        self.fired.clear()
+        self.fired_events.clear()
 
     def step(self) -> list[FailureEvent]:
         """Fire any events whose time has come; returns them."""
@@ -123,4 +144,6 @@ class FailureInjector:
                 self.detector.mark_unreachable(r)
             self.fired.add(i)
             fired.append(ev)
+        fired.sort(key=lambda e: e.time)
+        self.fired_events.extend(fired)
         return fired

@@ -42,6 +42,7 @@ class RecoveringRank:
     state: RankState
     t_state_entered: float
     warmup: WarmupCostModel
+    restarts: int = 0            # warmup aborts (rank died again mid-warmup)
 
 
 class ReintegrationController:
@@ -96,3 +97,24 @@ class ReintegrationController:
             return None
         self._advance(rr)
         return rr.state
+
+    # -- re-failure during warmup (flapping / cascades) ---------------------------
+    def is_recovering(self, rank: int) -> bool:
+        return rank in self.recovering
+
+    def restart_warmup(self, rank: int) -> None:
+        """The relaunched process died again before its join patch landed:
+        abort whatever warmup progress it had and restart from RELAUNCHING.
+        Healthy ranks are untouched — the rank simply becomes join-ready
+        later than it would have."""
+        rr = self.recovering.get(rank)
+        if rr is None:                    # died with no relaunch in flight
+            self.schedule_relaunch(rank)
+            return
+        rr.state = RankState.RELAUNCHING
+        rr.t_state_entered = self.clock.now()
+        rr.restarts += 1
+
+    def abort(self, rank: int) -> None:
+        """Cancel a relaunch entirely (rank decommissioned)."""
+        self.recovering.pop(rank, None)

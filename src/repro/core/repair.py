@@ -100,6 +100,73 @@ def plan_repair(
     return plan
 
 
+def revalidate_plan(
+    plan: RepairPlan,
+    new_slot_to_expert: np.ndarray,
+    active: np.ndarray,
+    slots_per_rank: int,
+    backup: Optional[BackupStore] = None,
+) -> RepairPlan:
+    """Atomic bitmap consult at execution time (paper §5.1), generalized to
+    overlapping failures: when a second failure lands between planning and
+    execution, every transfer is re-checked against the CURRENT active bitmap.
+
+      * a Tier-2 transfer whose source rank died is re-sourced from another
+        surviving replica of the same expert when one exists, else escalated
+        to Tier-3 (DRAM reload), else recorded unrecoverable,
+      * any transfer whose destination rank died is dropped (the slot is
+        cleared; the follow-up repair round will re-cover the expert).
+
+    Returns a plan safe to execute against the current membership; identical
+    to the input when nothing changed since planning.
+    """
+    active = np.asarray(active, bool)
+
+    def rank_of(slot: int) -> int:
+        return slot // slots_per_rank
+
+    # surviving slots that (will) hold each expert and can serve as an
+    # alternate gather source: Tier-1 slots already hold the expert, and a
+    # live Tier-2 *source* holds it under the old placement
+    alt_source: dict[int, int] = {}
+    for s in plan.tier1:
+        if active[rank_of(s)]:
+            alt_source.setdefault(int(new_slot_to_expert[s]), s)
+    for d2, s2 in plan.tier2:
+        if active[rank_of(s2)]:
+            alt_source.setdefault(int(new_slot_to_expert[d2]), s2)
+
+    out = RepairPlan(num_slots=plan.num_slots,
+                     bytes_per_slot=plan.bytes_per_slot,
+                     cleared=list(plan.cleared),
+                     unrecoverable=list(plan.unrecoverable))
+    for s in plan.tier1:
+        if active[rank_of(s)]:
+            out.tier1.append(s)
+        else:
+            out.cleared.append(s)
+    for dst, src in plan.tier2:
+        if not active[rank_of(dst)]:
+            out.cleared.append(dst)
+            continue
+        if active[rank_of(src)]:
+            out.tier2.append((dst, src))
+            continue
+        e = int(new_slot_to_expert[dst])
+        if e in alt_source:
+            out.tier2.append((dst, alt_source[e]))        # re-source Tier 2
+        elif backup is not None and e >= 0 and backup.has(e):
+            out.tier3.append((dst, e))                    # escalate to Tier 3
+        else:
+            out.unrecoverable.append(e)
+    for dst, e in plan.tier3:
+        if active[rank_of(dst)]:
+            out.tier3.append((dst, e))
+        else:
+            out.cleared.append(dst)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Executor
 # ---------------------------------------------------------------------------

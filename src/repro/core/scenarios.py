@@ -1,0 +1,251 @@
+"""Fault-scenario DSL + registry: deterministic, scriptable fault schedules.
+
+The paper evaluates one fail -> repair -> rejoin cycle; real fleets see
+concurrent multi-rank failures, cascades during recovery, flapping ranks and
+stragglers that degrade before they die. A *scenario* is a named, fully
+deterministic fault schedule plus the simulated-cluster shape it runs on;
+the scenario runner (``repro.runtime.scenario_runner``) drives an
+``ElasticEPRuntime`` + ``ServingEngine`` through it under the SimClock and
+checks the core invariants at every step boundary.
+
+Schedule DSL — one directive per line, ``#`` comments allowed::
+
+    @1.0  fail 2 5        # fail-stop ranks 2 and 5 at t=1.0s
+    @2.0  slow 3 x3.0     # rank 3 starts running 3.0x slower (straggler)
+    @14.0 restore 3       # rank 3 back to nominal speed
+
+``fail`` actions are fed to the FailureInjector up front; ``slow`` and
+``restore`` are applied by the runner when the SimClock crosses their time.
+Everything is derived from the schedule text + seed, so the same scenario
+always produces the same timeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+VALID_OPS = ("fail", "slow", "restore")
+
+
+@dataclass(frozen=True)
+class Action:
+    t: float
+    op: str                      # "fail" | "slow" | "restore"
+    ranks: tuple[int, ...]
+    factor: float = 1.0          # slowdown multiplier (op == "slow")
+
+    def render(self) -> str:
+        line = f"@{self.t:g} {self.op} {' '.join(str(r) for r in self.ranks)}"
+        if self.op == "slow":
+            line += f" x{self.factor:g}"
+        return line
+
+
+def parse_schedule(text: str) -> tuple[Action, ...]:
+    """Parse the schedule DSL into a time-ordered tuple of actions.
+
+    Raises ``ValueError`` with the offending line on any malformed input —
+    schedules are config, and config errors should fail loudly.
+    """
+    actions: list[Action] = []
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        if not parts[0].startswith("@"):
+            raise ValueError(f"line {lineno}: expected '@<time>', got {raw!r}")
+        try:
+            t = float(parts[0][1:])
+        except ValueError:
+            raise ValueError(f"line {lineno}: bad time in {raw!r}") from None
+        if t < 0:
+            raise ValueError(f"line {lineno}: negative time in {raw!r}")
+        if len(parts) < 2 or parts[1] not in VALID_OPS:
+            raise ValueError(
+                f"line {lineno}: op must be one of {VALID_OPS}, got {raw!r}")
+        op = parts[1]
+        factor = 1.0
+        rank_toks = parts[2:]
+        if op == "slow":
+            if not rank_toks or not rank_toks[-1].startswith("x"):
+                raise ValueError(
+                    f"line {lineno}: 'slow' needs a trailing xFACTOR in {raw!r}")
+            try:
+                factor = float(rank_toks[-1][1:])
+            except ValueError:
+                raise ValueError(
+                    f"line {lineno}: bad factor in {raw!r}") from None
+            if factor <= 0:
+                raise ValueError(f"line {lineno}: factor must be > 0 in {raw!r}")
+            rank_toks = rank_toks[:-1]
+        if not rank_toks:
+            raise ValueError(f"line {lineno}: no ranks in {raw!r}")
+        try:
+            ranks = tuple(int(x) for x in rank_toks)
+        except ValueError:
+            raise ValueError(f"line {lineno}: bad rank in {raw!r}") from None
+        if any(r < 0 for r in ranks):
+            raise ValueError(f"line {lineno}: negative rank in {raw!r}")
+        actions.append(Action(t=t, op=op, ranks=ranks, factor=factor))
+    # stable sort: ties keep source order, so parsing is fully deterministic
+    actions.sort(key=lambda a: a.t)
+    return tuple(actions)
+
+
+def format_schedule(actions: Iterable[Action]) -> str:
+    """Inverse of ``parse_schedule`` (modulo comments/whitespace)."""
+    return "\n".join(a.render() for a in actions)
+
+
+# ---------------------------------------------------------------------------
+# Scenario definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One named fault scenario over a simulated EP instance."""
+
+    name: str
+    description: str
+    schedule: str                    # the DSL text above
+    world: int = 8
+    slots_per_rank: int = 2
+    horizon_s: float = 30.0          # simulated seconds to run
+    # recovering-rank warmup phases (relaunch, runtime init, weight load,
+    # graph capture) — kept short so scenarios are fast under SimClock
+    warmup_s: tuple[float, float, float, float] = (1.0, 1.0, 2.0, 1.0)
+    max_new_tokens: int = 64         # per request fed by the runner
+    expect_coverage_loss: bool = False
+
+    @property
+    def actions(self) -> tuple[Action, ...]:
+        return parse_schedule(self.schedule)
+
+    def validate(self) -> None:
+        for a in self.actions:
+            if any(r >= self.world for r in a.ranks):
+                raise ValueError(
+                    f"scenario {self.name}: rank {max(a.ranks)} out of range "
+                    f"for world={self.world}")
+            if a.t >= self.horizon_s:
+                raise ValueError(
+                    f"scenario {self.name}: action at t={a.t} is beyond "
+                    f"horizon {self.horizon_s}")
+
+
+SCENARIOS: dict[str, Scenario] = {}
+
+
+def register(scn: Scenario) -> Scenario:
+    scn.validate()
+    if scn.name in SCENARIOS:
+        raise ValueError(f"duplicate scenario name: {scn.name}")
+    SCENARIOS[scn.name] = scn
+    return scn
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}") from None
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+# -- the registry -----------------------------------------------------------
+#
+# Timing notes (defaults): failure at t is detected ~1 s later (detector
+# timeout); recovery then takes ~2.3 s (detect 1.0 + drain 0.5 + coordinate
+# 0.8 + ~0 transfer at reduced scale); warmup (1+1+2+1) = 5 s; so a rank
+# failing at t rejoins around t + 8.5 s.
+
+register(Scenario(
+    name="concurrent_multi_failure",
+    description="Two ranks fail at the same instant; one shrink must handle "
+                "the whole batch (paper evaluates only single failures).",
+    schedule="@1.0 fail 2 5",
+))
+
+register(Scenario(
+    name="cascade_mid_recovery",
+    description="A second rank dies while the first failure's repair is in "
+                "flight; the phased recovery must detect it at a phase "
+                "boundary and restart the repair round (composition).",
+    schedule="""
+        @1.0 fail 2
+        @2.4 fail 5        # lands inside rank 2's recovery window
+    """,
+))
+
+register(Scenario(
+    name="failure_during_warmup",
+    description="A recovering rank dies again mid-warmup; its warmup aborts "
+                "and restarts while healthy ranks keep serving.",
+    schedule="""
+        @1.0 fail 3
+        @6.0 fail 3        # rank 3 is WARMING at this point
+    """,
+))
+
+register(Scenario(
+    name="flapping_rank",
+    description="fail -> rejoin -> fail again: the same rank completes a "
+                "full join and then fails once more, exercising repeated "
+                "detection of a previously reintegrated peer.",
+    schedule="""
+        @1.0  fail 4
+        @14.0 fail 4       # after its first rejoin (~t=9.5)
+    """,
+    horizon_s=35.0,
+))
+
+register(Scenario(
+    name="straggler_degrades_then_dies",
+    description="A rank throttles (3x slower), gets de-weighted by the "
+                "capacity-aware EPLB, then fail-stops; mitigation state must "
+                "compose with failure repair.",
+    schedule="""
+        @2.0  slow 3 x3.0
+        @14.0 fail 3
+    """,
+    horizon_s=40.0,
+))
+
+register(Scenario(
+    name="rejoin_storm",
+    description="Three ranks fail together and all come back join-ready at "
+                "the same poll; the join must land as ONE batched table "
+                "patch, not three serial pauses.",
+    schedule="@1.0 fail 1 3 5",
+))
+
+register(Scenario(
+    name="majority_coverage_loss",
+    description="Half the instance dies at once, leaving fewer live slots "
+                "than logical experts: shrink is impossible and the runtime "
+                "must record an explicit coverage-loss event (and stop) "
+                "rather than serve with unhosted experts.",
+    schedule="@1.0 fail 1 3 5",
+    world=6, slots_per_rank=1,        # 3 surviving slots < 4 experts
+    horizon_s=10.0,
+    expect_coverage_loss=True,
+))
+
+register(Scenario(
+    name="rolling_failures",
+    description="Three independent failures spaced so each completes its "
+                "full fail/repair/rejoin cycle before the next lands — the "
+                "sustained-attrition baseline.",
+    schedule="""
+        @1.0  fail 0
+        @13.0 fail 2
+        @25.0 fail 4
+    """,
+    horizon_s=45.0,
+))

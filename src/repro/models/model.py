@@ -363,13 +363,14 @@ def _seqsharded_decode(cfg, p, h, lengths, lc, dpl: Deployment):
     from jax.sharding import PartitionSpec as P
     ax = dpl.seq_shard_axis
     cache_specs = {"k": P(None, ax), "v": P(None, ax), "pos": P(None, ax)}
-    fn = jax.shard_map(
+    from repro.launch.mesh import shard_map_portable
+    fn = shard_map_portable(
         partial(attn.gqa_decode_seqsharded, cfg, axis=ax),
         mesh=dpl.mesh,
         in_specs=(jax.tree_util.tree_map(lambda _: P(), p), P(), P(),
                   cache_specs),
         out_specs=(P(), cache_specs),
-        check_vma=False,
+        check=False,
     )
     return fn(p, h, lengths, {k: lc[k] for k in ("k", "v", "pos")})
 

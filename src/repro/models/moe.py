@@ -238,12 +238,13 @@ def moe_apply(cfg: ArchConfig, p, x, membership: MembershipState,
         membership=jax.tree_util.tree_map(lambda _: P(), membership),
     )
     out_specs = (P(x_spec, None), P(), P())
-    fn = jax.shard_map(
+    from repro.launch.mesh import shard_map_portable
+    fn = shard_map_portable(
         body, mesh=mesh,
         in_specs=(specs["x"], specs["router"], specs["w_in"], specs["w_gate"],
                   specs["w_out"], specs["shared"], specs["membership"]),
         out_specs=out_specs,
-        check_vma=False,
+        check=False,
     )
     y, load, dropped = fn(x, p["router"], p["w_in"], w_gate, p["w_out"],
                           shared, membership)

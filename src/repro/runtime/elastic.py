@@ -15,7 +15,7 @@ shard_map deployment — only `deployment` changes.
 """
 from __future__ import annotations
 
-import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -25,7 +25,13 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.backup import BackupStore
-from repro.core.failure import FailureDetector, FailureInjector, SimClock
+from repro.core.failure import (
+    CoverageLossError,
+    FailureDetector,
+    FailureInjector,
+    RankState,
+    SimClock,
+)
 from repro.core.membership import MembershipState, PeerTable
 from repro.core.placement import eplb_place
 from repro.core.reintegration import ReintegrationController, WarmupCostModel
@@ -35,6 +41,7 @@ from repro.core.repair import (
     RepairPlan,
     apply_repair,
     plan_repair,
+    revalidate_plan,
 )
 from repro.core.validity import check as validity_check
 from repro.models.model import Deployment
@@ -45,6 +52,22 @@ class TimelineEvent:
     t: float
     kind: str            # "failure" | "recovery_done" | "join" | ...
     detail: dict = field(default_factory=dict)
+
+
+@dataclass
+class ControlEvent:
+    """One pending control-plane transition awaiting its handler."""
+    kind: str                    # "failure_detected" | "join_ready"
+    ranks: tuple[int, ...] = ()
+
+
+@dataclass
+class ControlSummary:
+    """What one control pump did — consumed by the serving engine to decide
+    requeue/trace actions without re-deriving runtime state."""
+    failures_handled: list[int] = field(default_factory=list)
+    joined: list[int] = field(default_factory=list)
+    warmups_aborted: list[int] = field(default_factory=list)
 
 
 def moe_slot_leaves(cfg: ArchConfig, params):
@@ -111,6 +134,17 @@ class ElasticEPRuntime:
         self.recompile_count = 0        # must stay 0 across fail/rejoin
         self._repair_jit_cache = {}
 
+        # control-event queue: detections/join-readiness become events
+        # drained FIFO by pump_control() — polling is decoupled from
+        # handling so future event sources (external controllers, deferred
+        # transitions) slot in without touching the handlers. Cascades
+        # detected *mid*-recovery are composed inside handle_failure itself,
+        # not re-queued.
+        self.control_queue: deque[ControlEvent] = deque()
+        # pluggable failure policy: the engine swaps in its full-restart
+        # baseline when fixed_membership=True.
+        self.failure_policy: Callable[[list[int]], dict] = self.handle_failure
+
     # ------------------------------------------------------------------
     # Telemetry
     # ------------------------------------------------------------------
@@ -134,25 +168,78 @@ class ElasticEPRuntime:
                                 + (1 - self.load_ema) * load)
 
     # ------------------------------------------------------------------
-    # The failure -> shrink -> repair path (paper SS3.4/3.5)
+    # The failure -> shrink -> repair path (paper SS3.4/3.5), generalized to
+    # overlapping failures: recovery is a phased state machine that re-polls
+    # the detector at phase boundaries and composes a fresh repair round when
+    # another rank dies mid-recovery (cascade), instead of a one-shot
+    # transition that assumes the failure set is frozen.
     # ------------------------------------------------------------------
     def poll_failures(self) -> list[int]:
-        self.injector.step()
-        return self.detector.poll()
+        fresh, _ = self._poll_transitions()
+        return fresh
+
+    def _poll_transitions(self) -> tuple[list[int], list[int]]:
+        """Fire due injector events, convert re-failures of mid-warmup ranks
+        into warmup aborts, and return (newly detected failures, aborted
+        warmups). The single poll sequence behind poll_failures, the
+        mid-recovery phase boundaries, and pump_control."""
+        fired = self.injector.step()
+        aborted = self._restart_refailed_warmups(fired)
+        return self.detector.poll(), aborted
+
+    def _restart_refailed_warmups(self, fired) -> list[int]:
+        """An injected failure that targets a rank currently mid-warmup is a
+        warmup abort (the relaunched process died again), not a fresh
+        detection: the detector already reported it, so the only action is
+        restarting its local warmup. Returns the aborted ranks."""
+        aborted = []
+        for ev in fired:
+            for r in ev.ranks:
+                if self.controller.is_recovering(r):
+                    self.controller.restart_warmup(r)
+                    self.record("warmup_abort", rank=r)
+                    aborted.append(r)
+        return aborted
+
+    def _poll_mid_recovery(self) -> list[int]:
+        """Phase-boundary poll during an in-flight recovery: fire any
+        injected events whose time has come and report newly detected
+        failures so the current repair round can be restarted."""
+        fresh, _ = self._poll_transitions()
+        return [r for r in fresh if self.table.entries[r].active]
 
     def handle_failure(self, failed: list[int]) -> dict:
-        """Restore live-EP validity on the surviving ranks. Returns the
-        phase breakdown (paper Fig. 10 left)."""
-        t0 = self.clock.now()
+        """Restore live-EP validity on the surviving ranks; composes follow-on
+        failures detected while the repair is in flight. Returns the
+        accumulated phase breakdown (paper Fig. 10 left)."""
         self.record("failure", ranks=list(failed))
-        old_s2e = self.table.slot_to_expert.copy()
-        for r in failed:
-            self.table.deactivate(r)     # peer-set repair: clear active bits
-
+        pending = [r for r in failed if self.table.entries[r].active]
         phases = {"detect": self.cost_model.detect_s,
-                  "drain": self.cost_model.drain_s}
+                  "drain": self.cost_model.drain_s,
+                  "coordinate": 0.0, "weight_transfer": 0.0}
+        self.clock.advance(phases["detect"] + phases["drain"])
+
         plan = None
-        if self.cfg.is_moe:
+        rounds = 0
+        while True:
+            rounds += 1
+            for r in pending:
+                if self.table.entries[r].active:
+                    self.table.deactivate(r)   # peer-set repair: clear bits
+            pending = []
+            old_s2e = self.table.slot_to_expert.copy()
+
+            if not self.cfg.is_moe:
+                # dense arch: membership substrate only (no experts to repair)
+                self.clock.advance(self.cost_model.coordinate_s)
+                phases["coordinate"] += self.cost_model.coordinate_s
+                pending = self._poll_mid_recovery()
+                if pending:
+                    self.record("recovery_restart", ranks=sorted(pending),
+                                round=rounds)
+                    continue
+                break
+
             # expert-coverage repair (EPLB over survivors + 3-tier transfer)
             res = eplb_place(
                 self.cfg.moe.num_experts, self.table.world,
@@ -160,8 +247,8 @@ class ElasticEPRuntime:
                 load=self.expert_load, prev_slot_to_expert=old_s2e,
                 max_replicas=self.table.max_replicas)
             if res.infeasible:
-                self.record("unrecoverable", reason=res.reason)
-                raise RuntimeError(f"cannot shrink: {res.reason}")
+                self.record("coverage_loss", reason=res.reason)
+                raise CoverageLossError(f"cannot shrink: {res.reason}")
             slots = moe_slot_leaves(self.cfg, self.params)
             bytes_per_slot = int(sum(
                 np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
@@ -170,16 +257,58 @@ class ElasticEPRuntime:
                                self.table.active_mask,
                                self.table.slots_per_rank, self.backup,
                                bytes_per_slot=bytes_per_slot)
+
+            # coordination phase (EPLB + metadata broadcast); a failure that
+            # lands here invalidates the plan -> restart the round
+            self.clock.advance(self.cost_model.coordinate_s)
+            phases["coordinate"] += self.cost_model.coordinate_s
+            pending = self._poll_mid_recovery()
+            if pending:
+                self.record("recovery_restart", ranks=sorted(pending),
+                            round=rounds)
+                continue
+
+            # execution: the transfers are in flight for the window the cost
+            # model predicts; a rank can die INSIDE that window, so poll once
+            # it elapses and re-check every transfer against the current
+            # bitmap (paper §5.1's atomic consult): transfers sourced from a
+            # casualty escalate to Tier-3 DRAM reloads before execution, and
+            # a follow-up round re-covers whatever the casualty hosted.
+            ph = self.cost_model.recovery_seconds(
+                plan, self.table.world, self.table.slots_per_rank)
+            self.clock.advance(ph["weight_transfer"])
+            phases["weight_transfer"] += ph["weight_transfer"]
+            pending = self._poll_mid_recovery()
+            if pending:
+                for r in pending:
+                    self.table.deactivate(r)
+                self.record("recovery_restart", ranks=sorted(pending),
+                            round=rounds)
+                n_t3 = len(plan.tier3)
+                plan = revalidate_plan(plan, res.slot_to_expert,
+                                       self.table.active_mask,
+                                       self.table.slots_per_rank, self.backup)
+                if len(plan.tier3) > n_t3:
+                    self.record("transfer_escalation",
+                                escalated=len(plan.tier3) - n_t3)
+                    extra = self.cost_model.recovery_seconds(
+                        plan, self.table.world,
+                        self.table.slots_per_rank)["weight_transfer"] \
+                        - ph["weight_transfer"]
+                    if extra > 0:
+                        self.clock.advance(extra)
+                        phases["weight_transfer"] += extra
+            if plan.unrecoverable:
+                self.record("coverage_loss", experts=sorted(plan.unrecoverable))
+                raise CoverageLossError(
+                    f"experts {sorted(plan.unrecoverable)} lost every live "
+                    f"replica and backup copy")
             new_leaves = apply_repair(slots, plan, self.backup)
             self.params = set_moe_slot_leaves(self.params, new_leaves)
             self.table.set_placement(res.slot_to_expert)
-            ph = self.cost_model.recovery_seconds(
-                plan, self.table.world, self.table.slots_per_rank)
-            phases.update({"coordinate": ph["coordinate"],
-                           "weight_transfer": ph["weight_transfer"]})
-        else:
-            # dense arch: membership substrate only (no experts to repair)
-            phases["coordinate"] = self.cost_model.coordinate_s
+            if pending:
+                continue
+            break
 
         # graph-visible routing repair: publish the tables (content patch)
         self.membership = self.table.to_device()
@@ -187,35 +316,70 @@ class ElasticEPRuntime:
                              reachable=self.detector.known_reachable())
         assert rep.valid, rep.violations
 
-        total = sum(phases.values())
-        self.clock.advance(total)
-        phases["total"] = total
+        phases["total"] = sum(phases.values())
+        phases["rounds"] = rounds
         self.record("recovery_done", phases=phases,
                     mix=plan.source_mix() if plan else {},
                     tier2_bytes=plan.tier2_bytes if plan else 0,
                     tier3_bytes=plan.tier3_bytes if plan else 0)
-        # relaunch failed ranks asynchronously (deferred join)
-        for r in failed:
-            self.controller.schedule_relaunch(r)
+        # relaunch every rank that is now inactive asynchronously (deferred
+        # join) — including casualties of mid-recovery cascades
+        for r in range(self.table.world):
+            if (not self.table.entries[r].active
+                    and not self.controller.is_recovering(r)):
+                self.controller.schedule_relaunch(r)
         return phases
 
     # ------------------------------------------------------------------
-    # Reintegration (paper SS3.6/4.2)
+    # Event-queue control pump: one call per serving step enqueues newly
+    # polled transitions and drains the queue FIFO (observation order).
+    # ------------------------------------------------------------------
+    def pump_control(self) -> ControlSummary:
+        summary = ControlSummary()
+        fresh, aborted = self._poll_transitions()
+        summary.warmups_aborted += aborted
+        if fresh:
+            self._enqueue("failure_detected", fresh)
+        ready = self.controller.poll_join_ready()
+        if ready:
+            self._enqueue("join_ready", ready)
+        while self.control_queue:
+            ev = self.control_queue.popleft()
+            if ev.kind == "failure_detected":
+                ranks = [r for r in ev.ranks if self.table.entries[r].active]
+                if ranks:
+                    self.failure_policy(ranks)
+                    summary.failures_handled += ranks
+            elif ev.kind == "join_ready":
+                ranks = [r for r in ev.ranks
+                         if self.controller.state_of(r) == RankState.JOIN_READY]
+                if ranks:
+                    self._join_batch(ranks)
+                    summary.joined += ranks
+        return summary
+
+    def _enqueue(self, kind: str, ranks) -> None:
+        self.control_queue.append(ControlEvent(kind, tuple(ranks)))
+
+    # ------------------------------------------------------------------
+    # Reintegration (paper SS3.6/4.2), generalized to join storms: every
+    # rank that is JOIN_READY at the same poll is incorporated with ONE
+    # EPLB pass and ONE table patch, so a storm of N rejoiners costs the
+    # healthy ranks a single join pause instead of N.
     # ------------------------------------------------------------------
     def poll_reintegration(self) -> list[int]:
         """Between forward passes, healthy ranks poll for join-ready peers
         and incorporate them with an in-place table patch."""
         ready = self.controller.poll_join_ready()
-        joined = []
-        for r in ready:
-            self._join(r)
-            joined.append(r)
-        return joined
+        if ready:
+            self._join_batch(ready)
+        return ready
 
-    def _join(self, rank: int) -> None:
+    def _join_batch(self, ranks: list[int]) -> None:
         old_s2e = self.table.slot_to_expert.copy()
-        self.detector.mark_reachable(rank)
-        self.table.reactivate(rank)      # refresh peer entry (endpoint epoch)
+        for rank in ranks:
+            self.detector.mark_reachable(rank)
+            self.table.reactivate(rank)  # refresh peer entry (endpoint epoch)
         if self.cfg.is_moe:
             res = eplb_place(
                 self.cfg.moe.num_experts, self.table.world,
@@ -238,8 +402,12 @@ class ElasticEPRuntime:
                              reachable=self.detector.known_reachable())
         assert rep.valid, rep.violations
         self.clock.advance(self.cost_model.join_patch_s)
-        self.controller.complete_join(rank)
-        self.record("join", rank=rank)
+        for rank in ranks:
+            self.controller.complete_join(rank)
+            self.record("join", rank=rank)
+        if len(ranks) > 1:
+            self.record("join_batch", ranks=sorted(ranks),
+                        patch_s=self.cost_model.join_patch_s)
 
     # ------------------------------------------------------------------
     # Straggler mitigation (beyond the paper's fail-stop timeout: de-weight

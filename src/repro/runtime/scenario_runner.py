@@ -1,0 +1,258 @@
+"""Drive ElasticEPRuntime + ServingEngine through a fault scenario.
+
+The runner is the deterministic test/benchmark surface for the fault-scenario
+engine (``repro.core.scenarios``): it builds a simulated EP instance, feeds a
+steady request stream, applies the scenario's fault schedule, and checks the
+core invariants at EVERY engine-step boundary:
+
+  * live-EP validity (peer set, expert coverage, graph-visible routing),
+  * zero recompilations on healthy ranks (one compiled serve step, ever),
+  * every logical expert keeps >= 1 active replica — or the scenario records
+    a coverage-loss event instead of silently serving garbage.
+
+Same scenario + same seed => bit-identical timeline (asserted by tests);
+``fixed_membership=True`` runs the same schedule against the full-restart
+baseline for side-by-side trajectories.
+"""
+from __future__ import annotations
+
+import time as _walltime
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.failure import CoverageLossError
+from repro.core.reintegration import WarmupCostModel
+from repro.core.scenarios import Scenario, get_scenario
+from repro.core.validity import check as validity_check
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    seed: int
+    fixed_membership: bool
+    coverage_loss_expected: bool = False
+    timeline: list[dict] = field(default_factory=list)
+    trace: list[dict] = field(default_factory=list)    # throughput samples
+    injected: list[dict] = field(default_factory=list)  # fired fail events
+    compile_count: int = 0
+    validity_violations: list[str] = field(default_factory=list)
+    coverage_loss_events: list[dict] = field(default_factory=list)
+    min_live_replicas: int = -1
+    tokens_out: int = 0
+    requests_finished: int = 0
+    requests_failed: int = 0
+    requests_retried: int = 0
+    requests_dropped: int = 0
+    recoveries: int = 0
+    recovery_rounds: int = 0        # > recoveries when cascades composed
+    joins: int = 0
+    warmup_aborts: int = 0
+    downtime_s: float = 0.0         # summed recovery/restart pauses
+    final_active_fraction: float = 0.0
+    sim_duration_s: float = 0.0
+    wall_s: float = 0.0
+    steps: int = 0
+
+    @property
+    def invariants_ok(self) -> bool:
+        """Every expert kept >= 1 active replica (unless the scenario is
+        *designed* to lose coverage, in which case the loss must have been
+        recorded), validity held at each step, and nothing recompiled."""
+        coverage_ok = (bool(self.coverage_loss_events)
+                       == self.coverage_loss_expected)
+        return (self.compile_count == 1
+                and not self.validity_violations
+                and coverage_ok)
+
+    def summary(self) -> dict:
+        return {
+            "name": self.name,
+            "fixed_membership": self.fixed_membership,
+            "tokens_out": self.tokens_out,
+            "requests_finished": self.requests_finished,
+            "requests_failed": self.requests_failed,
+            "requests_dropped": self.requests_dropped,
+            "recoveries": self.recoveries,
+            "recovery_rounds": self.recovery_rounds,
+            "joins": self.joins,
+            "warmup_aborts": self.warmup_aborts,
+            "downtime_s": round(self.downtime_s, 3),
+            "compile_count": self.compile_count,
+            "validity_violations": len(self.validity_violations),
+            "coverage_loss": bool(self.coverage_loss_events),
+            "coverage_loss_expected": self.coverage_loss_expected,
+            "min_live_replicas": self.min_live_replicas,
+            "final_active_fraction": self.final_active_fraction,
+            "sim_duration_s": round(self.sim_duration_s, 3),
+            "wall_s": round(self.wall_s, 2),
+            "steps": self.steps,
+        }
+
+
+def _jsonable(x):
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple, set)):
+        return [_jsonable(v) for v in sorted(x)] if isinstance(x, set) \
+            else [_jsonable(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    return x
+
+
+def build_scenario_runtime(scn: Scenario, *, seed: int = 0,
+                           arch: str = "mixtral-8x22b") -> ElasticEPRuntime:
+    """A simulated EP instance shaped by the scenario (reduced config so the
+    compiled step is CPU-cheap; membership dynamics are full-fidelity)."""
+    cfg = get_config(arch).reduced()
+    table = make_initial_membership(scn.world, cfg.moe.num_experts,
+                                    scn.slots_per_rank)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    relaunch, init, load, capture = scn.warmup_s
+    warm = WarmupCostModel(process_relaunch_s=relaunch, runtime_init_s=init,
+                           weight_load_s=load, graph_capture_s=capture)
+    return ElasticEPRuntime(cfg, params, table, warmup_model=warm)
+
+
+def _min_live_replicas(rt: ElasticEPRuntime) -> int:
+    e2s = rt.table.expert_to_slots()
+    if not e2s:
+        return -1
+    return min(len(slots) for slots in e2s.values())
+
+
+def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
+                 fixed_membership: bool = False, max_batch: int = 4,
+                 check_invariants: bool = True,
+                 max_steps: int = 20_000) -> ScenarioResult:
+    """Run one scenario to its horizon. ``scenario`` is a Scenario or a
+    registered name."""
+    scn = get_scenario(scenario) if isinstance(scenario, str) else scenario
+    scn.validate()
+    t_wall = _walltime.perf_counter()
+
+    rt = build_scenario_runtime(scn, seed=seed, arch=arch)
+    eng = ServingEngine(rt, max_batch=max_batch, max_len=scn.max_new_tokens + 8,
+                        fixed_membership=fixed_membership)
+    res = ScenarioResult(name=scn.name, seed=seed,
+                         fixed_membership=fixed_membership,
+                         coverage_loss_expected=scn.expect_coverage_loss)
+
+    # fail-stop events go to the injector up front; slow/restore are applied
+    # by this loop when the SimClock crosses their time
+    deferred = []
+    for a in scn.actions:
+        if a.op == "fail":
+            rt.injector.inject_at(a.t, list(a.ranks))
+        else:
+            deferred.append(a)
+    deferred.sort(key=lambda a: a.t)
+
+    rid = 0
+    next_action = 0
+    coverage_exc = None
+    res.min_live_replicas = _min_live_replicas(rt)
+    while rt.clock.now() < scn.horizon_s and res.steps < max_steps:
+        now = rt.clock.now()
+        while next_action < len(deferred) and deferred[next_action].t <= now:
+            a = deferred[next_action]
+            next_action += 1
+            for r in a.ranks:
+                rt.rank_slowdown[r] = a.factor if a.op == "slow" else 1.0
+            rt.record(a.op, ranks=list(a.ranks),
+                      **({"factor": a.factor} if a.op == "slow" else {}))
+        # steady offered load: keep a full admission queue
+        while len(eng.sched.queue) < max_batch:
+            eng.sched.submit(Request(rid=rid, prompt=[1, 2, 3],
+                                     max_new_tokens=scn.max_new_tokens,
+                                     t_submit=now))
+            rid += 1
+        try:
+            eng.step()
+        except CoverageLossError as e:
+            # the runtime recorded a coverage_loss timeline event before
+            # raising; the harvest below picks it up — just stop serving
+            coverage_exc = str(e)
+            break
+        res.steps += 1
+        if check_invariants:
+            rep = validity_check(rt.table, rt.membership,
+                                 reachable=rt.detector.known_reachable())
+            if not rep.valid:
+                res.validity_violations += [
+                    f"t={rt.clock.now():.3f}: {v}" for v in rep.violations]
+            if eng.compile_count() != 1:
+                res.validity_violations.append(
+                    f"t={rt.clock.now():.3f}: serve step recompiled "
+                    f"({eng.compile_count()} compilations)")
+            res.min_live_replicas = min(res.min_live_replicas,
+                                        _min_live_replicas(rt))
+
+    # -- harvest ------------------------------------------------------------
+    res.compile_count = eng.compile_count()
+    res.timeline = [{"t": round(float(e.t), 6), "kind": e.kind,
+                     "detail": _jsonable(e.detail)} for e in rt.timeline]
+    res.trace = [{"t": round(float(s.t), 6),
+                  "tokens_per_s": round(float(s.tokens_per_s), 3),
+                  "active_fraction": float(s.active_fraction)}
+                 for s in eng.trace]
+    res.injected = [{"t": ev.time, "ranks": list(ev.ranks)}
+                    for ev in rt.injector.fired_events]
+    res.coverage_loss_events = [
+        {"t": e.t, **_jsonable(e.detail)} for e in rt.timeline
+        if e.kind == "coverage_loss"]
+    if coverage_exc and not res.coverage_loss_events:
+        res.coverage_loss_events.append(
+            {"t": rt.clock.now(), "error": coverage_exc})
+    for e in rt.timeline:
+        if e.kind == "recovery_done":
+            res.recoveries += 1
+            res.recovery_rounds += int(e.detail["phases"].get("rounds", 1))
+            res.downtime_s += float(e.detail["phases"]["total"])
+        elif e.kind == "join":
+            res.joins += 1
+        elif e.kind == "warmup_abort":
+            res.warmup_aborts += 1
+        elif e.kind == "full_restart_done":
+            res.recoveries += 1
+            res.downtime_s += float(e.detail["seconds"])
+    st = eng.sched.stats
+    res.tokens_out = st.tokens_out
+    res.requests_finished = st.finished
+    res.requests_failed = st.failed
+    res.requests_retried = st.retried
+    res.requests_dropped = st.dropped
+    res.final_active_fraction = rt.active_fraction()
+    res.sim_duration_s = rt.clock.now()
+    res.wall_s = _walltime.perf_counter() - t_wall
+    return res
+
+
+def run_registry(names: Optional[list[str]] = None, *, seed: int = 0,
+                 with_baseline: bool = False, **kw) -> list[ScenarioResult]:
+    """Run a set of registered scenarios (default: all), optionally paired
+    with the fixed-membership full-restart baseline."""
+    from repro.core.scenarios import list_scenarios
+    base_kw = {**kw, "fixed_membership": True, "check_invariants": False}
+    out = []
+    for name in (names or list_scenarios()):
+        out.append(run_scenario(name, seed=seed, **kw))
+        if with_baseline:
+            out.append(run_scenario(name, seed=seed, **base_kw))
+    return out

@@ -57,16 +57,22 @@ class ServingEngine:
                  max_len: int = 128, dtype=jnp.float32,
                  base_step_time: float = 0.05,
                  fixed_membership: bool = False,
-                 restart_model: Optional[FullRestartCostModel] = None):
+                 restart_model: Optional[FullRestartCostModel] = None,
+                 max_retries: Optional[int] = None):
         self.rt = runtime
         cfg = runtime.cfg
         self.cfg = cfg
         self.kv = KVCacheManager(max_batch, max_len)
-        self.sched = Scheduler(self.kv)
+        self.sched = Scheduler(self.kv, max_retries=max_retries)
         self.caches = init_caches(cfg, max_batch, max_len, dtype)
         self.base_step_time = base_step_time
         self.fixed_membership = fixed_membership
         self.restart_model = restart_model or FullRestartCostModel()
+        # one engine drives a runtime at a time: (re)bind the failure policy
+        # so constructing a new engine over a reused runtime always restores
+        # the matching recovery path (full restart only for the baseline)
+        runtime.failure_policy = (self._full_restart if fixed_membership
+                                  else runtime.handle_failure)
         self.trace: list[ThroughputSample] = []
         self._prompt_pos = np.zeros((max_batch,), np.int64)
 
@@ -115,22 +121,22 @@ class ServingEngine:
     def step(self) -> int:
         """One engine iteration. Returns tokens produced."""
         rt = self.rt
-        # --- fault handling (between forward passes, paper §3.1) ---
-        failed = rt.poll_failures()
-        if failed:
+        # --- fault handling (between forward passes, paper §3.1): one pump
+        # drains every pending control transition — possibly several
+        # overlapping failures and a batch of joins — in event order. ---
+        ctl = rt.pump_control()
+        if ctl.failures_handled:
+            # every in-flight request is failed and requeued, once per
+            # interruption batch (overlapping failures were composed into a
+            # single recovery by the runtime)
             self.sched.fail_inflight()
             self._prompt_pos[:] = 0
-            if self.fixed_membership:
-                self._full_restart(failed)
-            else:
-                rt.handle_failure(failed)
+            self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+                                               rt.active_fraction()))
+        if ctl.joined:
             self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
                                                rt.active_fraction()))
         if not self.fixed_membership:
-            joined = rt.poll_reintegration()
-            if joined:
-                self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
-                                                   rt.active_fraction()))
             rt.observe_step_latencies(self.base_step_time)
             rt.mitigate_stragglers()
 

@@ -17,16 +17,19 @@ class SchedulerStats:
     finished: int = 0
     failed: int = 0
     retried: int = 0
+    dropped: int = 0           # exceeded max_retries under repeated failures
     tokens_out: int = 0
 
 
 class Scheduler:
-    def __init__(self, kv: KVCacheManager, retry_failed: bool = True):
+    def __init__(self, kv: KVCacheManager, retry_failed: bool = True,
+                 max_retries: Optional[int] = None):
         self.kv = kv
         self.queue: deque[Request] = deque()
         self.running: dict[int, Request] = {}
         self.stats = SchedulerStats()
         self.retry_failed = retry_failed
+        self.max_retries = max_retries
 
     def submit(self, req: Request) -> None:
         req.state = RequestState.QUEUED
@@ -73,20 +76,34 @@ class Scheduler:
 
     def fail_inflight(self) -> list[Request]:
         """Rank failure: every in-flight request is reported failed and (per
-        client policy) resubmitted from scratch."""
+        client policy) resubmitted from scratch.
+
+        Overlapping-interruption semantics: retried requests requeue at the
+        FRONT (in rid order) so work interrupted repeatedly by back-to-back
+        failures is not starved by newly arriving requests, and a request
+        that exceeds ``max_retries`` is dropped (counted in stats) instead of
+        retrying forever — e.g. under a flapping rank."""
         failed = []
+        retried = []
         rids = self.kv.release_all()
-        for rid in rids:
+        for rid in sorted(rids):
             req = self.running.pop(rid)
             req.state = RequestState.FAILED
             req.generated = []
             req.slot = -1
             self.stats.failed += 1
             failed.append(req)
-            if self.retry_failed:
-                req.retries += 1
-                self.submit(req)
-                self.stats.retried += 1
+            if not self.retry_failed:
+                continue
+            if self.max_retries is not None and req.retries >= self.max_retries:
+                self.stats.dropped += 1
+                continue
+            req.retries += 1
+            retried.append(req)
+            self.stats.retried += 1
+        for req in reversed(retried):
+            req.state = RequestState.QUEUED
+            self.queue.appendleft(req)
         return failed
 
     @property

@@ -1,6 +1,7 @@
 """Elastic routing + dispatch/combine: correctness and membership semantics."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra not installed: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 import jax

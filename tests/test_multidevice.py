@@ -12,6 +12,10 @@ import sys
 
 import pytest
 
+# multi-device dry-run: spawns a subprocess with 8 fake CPU devices and
+# recompiles everything — minutes of wall time, so nightly CI only
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -26,8 +30,8 @@ from repro.core import make_initial_membership, EPContext
 from repro.models.moe import moe_apply, moe_layer_init, MoEDeployment, local_deployment
 from repro.models import attention as attn
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_portable
+mesh = make_mesh_portable((4, 2), ("data", "model"))
 
 cfg = get_config("mixtral-8x22b").reduced()
 world, spr = 4, 2
@@ -88,7 +92,8 @@ cache = {"k": jax.random.normal(jax.random.key(3), (B, W, acfg.num_kv_heads, acf
 lengths = jnp.array([20, 31], jnp.int32)
 xq = jax.random.normal(jax.random.key(5), (B, 1, acfg.d_model))
 y_ref, _ = attn.gqa_decode(acfg, ap, xq, lengths, cache)
-fn2 = jax.shard_map(
+from repro.launch.mesh import shard_map_portable
+fn2 = shard_map_portable(
     lambda p_, x_, l_, c_: attn.gqa_decode_seqsharded(acfg, p_, x_, l_, c_,
                                                       axis="data"),
     mesh=mesh,
@@ -97,7 +102,7 @@ fn2 = jax.shard_map(
                "pos": P(None, "data")}),
     out_specs=(P(), {"k": P(None, "data"), "v": P(None, "data"),
                      "pos": P(None, "data")}),
-    check_vma=False)
+    check=False)
 y_ss, _ = jax.jit(fn2)(ap, xq, lengths, cache)
 err3 = float(jnp.abs(y_ss - y_ref).max())
 assert err3 < 1e-4, f"seq-sharded decode mismatch {err3}"

@@ -1,6 +1,7 @@
 """EPLB placement + 3-tier repair: unit + hypothesis property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra not installed: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import eplb_place, make_initial_membership, plan_repair

@@ -1,0 +1,294 @@
+"""Fault-scenario engine: DSL parsing, determinism, multi-failure
+composition primitives, and the full-registry e2e invariant sweep.
+
+Invariants asserted across every registered scenario (ISSUE 1):
+  * validity check passes at every step boundary,
+  * zero recompilations on healthy ranks (exactly one compiled serve step),
+  * every expert keeps >= 1 active replica, or the scenario records a
+    coverage-loss event.
+"""
+import numpy as np
+import pytest
+
+from repro.core.failure import CoverageLossError, RankState, SimClock
+from repro.core.reintegration import ReintegrationController, WarmupCostModel
+from repro.core.repair import RepairPlan, revalidate_plan
+from repro.core.scenarios import (
+    Action,
+    SCENARIOS,
+    Scenario,
+    format_schedule,
+    get_scenario,
+    list_scenarios,
+    parse_schedule,
+)
+from repro.core.backup import BackupStore
+from repro.runtime.scenario_runner import (
+    build_scenario_runtime,
+    run_scenario,
+)
+
+
+# ---------------------------------------------------------------------------
+# DSL parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule_basic():
+    acts = parse_schedule("""
+        # warm up for a second
+        @1.0 fail 2 5
+        @2.0 slow 3 x3.0
+        @14.0 restore 3
+    """)
+    assert acts == (
+        Action(1.0, "fail", (2, 5)),
+        Action(2.0, "slow", (3,), 3.0),
+        Action(14.0, "restore", (3,)),
+    )
+
+
+def test_parse_schedule_sorts_by_time_stably():
+    acts = parse_schedule("@5 fail 1\n@1 fail 2\n@5 fail 3")
+    assert [a.t for a in acts] == [1.0, 5.0, 5.0]
+    assert acts[1].ranks == (1,) and acts[2].ranks == (3,)
+
+
+def test_parse_schedule_roundtrip():
+    src = "@1 fail 2 5\n@2 slow 3 x2.5\n@14 restore 3"
+    acts = parse_schedule(src)
+    assert parse_schedule(format_schedule(acts)) == acts
+
+
+@pytest.mark.parametrize("bad", [
+    "fail 2",                 # missing @time
+    "@x fail 2",              # bad time
+    "@-1 fail 2",             # negative time
+    "@1 explode 2",           # unknown op
+    "@1 fail",                # no ranks
+    "@1 slow 3",              # slow without factor
+    "@1 slow 3 x0",           # non-positive factor
+    "@1 fail -2",             # negative rank
+])
+def test_parse_schedule_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_schedule(bad)
+
+
+def test_scenario_validate_rejects_out_of_range_rank():
+    scn = Scenario(name="x", description="", schedule="@1 fail 99", world=8)
+    with pytest.raises(ValueError):
+        scn.validate()
+
+
+def test_registry_contents():
+    names = list_scenarios()
+    assert len(names) >= 6
+    for n in names:
+        scn = get_scenario(n)
+        scn.validate()
+        assert scn.actions, n
+    with pytest.raises(KeyError):
+        get_scenario("no_such_scenario")
+
+
+# ---------------------------------------------------------------------------
+# Composition primitives (unit level)
+# ---------------------------------------------------------------------------
+
+def test_revalidate_plan_escalates_dead_tier2_source():
+    # world=4, spr=1; plan moves expert 7 from slot 1 -> slot 2, expert 8
+    # from slot 0 -> slot 3; then rank 1 dies between plan and execution
+    new_s2e = np.array([5, 6, 7, 8], np.int32)
+    plan = RepairPlan(num_slots=4, tier1=[0, 1], tier2=[(2, 1), (3, 0)],
+                      bytes_per_slot=10)
+    backup = BackupStore(num_nodes=1)
+    backup.store(7, {"w": np.zeros(3)})
+    active = np.array([True, False, True, True])
+    out = revalidate_plan(plan, new_s2e, active, 1, backup)
+    assert out.tier2 == [(3, 0)]           # live source kept
+    assert out.tier3 == [(2, 7)]           # dead source -> DRAM reload
+    assert out.tier1 == [0]                # tier-1 slot on the dead rank
+    assert 1 in out.cleared
+    assert not out.unrecoverable
+
+
+def test_revalidate_plan_resources_tier2_from_surviving_replica():
+    """Dead Tier-2 source, but ANOTHER live slot still holds the expert
+    (a Tier-1 slot here): the transfer re-sources instead of escalating."""
+    new_s2e = np.array([7, -1, 7, 6], np.int32)
+    plan = RepairPlan(num_slots=4, tier1=[0], tier2=[(2, 1)])
+    active = np.array([True, False, True, True])
+    out = revalidate_plan(plan, new_s2e, active, 1, backup=None)
+    assert out.tier2 == [(2, 0)]
+    assert not out.tier3 and not out.unrecoverable
+
+
+def test_revalidate_plan_unrecoverable_without_backup():
+    new_s2e = np.array([5, 6], np.int32)
+    plan = RepairPlan(num_slots=2, tier2=[(0, 1)])
+    active = np.array([True, False])
+    out = revalidate_plan(plan, new_s2e, active, 1, backup=None)
+    assert out.unrecoverable == [5]
+
+
+def test_warmup_restart_on_refailure():
+    clock = SimClock()
+    ctl = ReintegrationController(clock, WarmupCostModel(1, 1, 1, 1))
+    ctl.schedule_relaunch(3)
+    clock.advance(2.0)                     # relaunched, mid-warmup
+    assert ctl.state_of(3) == RankState.WARMING
+    ctl.restart_warmup(3)                  # the process died again
+    assert ctl.state_of(3) == RankState.RELAUNCHING
+    assert ctl.recovering[3].restarts == 1
+    clock.advance(3.9)                     # not yet through the full warmup
+    assert ctl.poll_join_ready() == []
+    clock.advance(0.2)
+    assert ctl.poll_join_ready() == [3]
+
+
+def test_scheduler_requeues_front_and_drops_after_max_retries():
+    from repro.serving.kv_cache import KVCacheManager
+    from repro.serving.request import Request
+    from repro.serving.scheduler import Scheduler
+    kv = KVCacheManager(num_slots=2, max_len=32)
+    sched = Scheduler(kv, max_retries=1)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=[1], max_new_tokens=4))
+    sched.admit()                          # rids 0,1 running; 2 queued
+    sched.fail_inflight()                  # first interruption
+    assert [r.rid for r in sched.queue] == [0, 1, 2]   # retried go FIRST
+    assert sched.stats.retried == 2 and sched.stats.dropped == 0
+    sched.admit()
+    sched.fail_inflight()                  # second interruption: over budget
+    assert sched.stats.dropped == 2
+    assert [r.rid for r in sched.queue] == [2]
+
+
+def test_cascade_composes_into_one_recovery():
+    """Second failure lands inside the first failure's repair window: the
+    phased recovery restarts its round instead of finishing on a stale
+    membership view."""
+    scn = get_scenario("cascade_mid_recovery")
+    rt = build_scenario_runtime(scn)
+    rt.injector.inject_at(0.0, [2])
+    rt.clock.advance(1.1)
+    failed = rt.poll_failures()
+    assert failed == [2]
+    # rank 5 dies during the recovery that is about to run
+    rt.injector.inject_at(rt.clock.now() + 0.1, [5])
+    phases = rt.handle_failure(failed)
+    assert phases["rounds"] >= 2
+    kinds = [e.kind for e in rt.timeline]
+    assert "recovery_restart" in kinds
+    assert kinds.count("recovery_done") == 1        # ONE composed recovery
+    assert not rt.table.entries[2].active and not rt.table.entries[5].active
+    from repro.core.validity import check
+    rep = check(rt.table, rt.membership, reachable=rt.detector.known_reachable())
+    assert rep.valid, rep.violations
+
+
+def test_tier2_source_dies_mid_transfer_escalates_to_tier3():
+    """A rank that dies while it is the SOURCE of in-flight Tier-2 transfers:
+    the execution-time bitmap consult must escalate those transfers to Tier-3
+    DRAM reloads instead of gathering from a corpse."""
+    from repro.core.repair import RecoveryCostModel
+    scn = Scenario(name="tmp_esc", description="", schedule="@0 fail 0",
+                   world=8, slots_per_rank=1)
+    rt = build_scenario_runtime(scn)       # experts 0..3 on ranks 0..7, R=2
+    # ~1 B/s fabric: the transfer window becomes hours of sim time, so a
+    # failure injected inside it is detected at the post-window poll
+    rt.cost_model = RecoveryCostModel(ici_gbps=1e-9, host_gbps=1e-9)
+    rt.detector.mark_unreachable(0)
+    rt.clock.advance(1.5)
+    failed = rt.poll_failures()
+    assert failed == [0]
+    # rank 4 holds expert 0's surviving replica -> it will be the Tier-2
+    # source; kill it just after the coordinate phase ends
+    rt.injector.inject_at(rt.clock.now() + 2.4, [4])
+    rt.handle_failure(failed)
+    kinds = [e.kind for e in rt.timeline]
+    assert "transfer_escalation" in kinds, kinds
+    assert "recovery_restart" in kinds
+    from repro.core.validity import check
+    rep = check(rt.table, rt.membership, reachable=rt.detector.known_reachable())
+    assert rep.valid, rep.violations
+    assert not rt.table.entries[0].active and not rt.table.entries[4].active
+
+
+def test_failure_policy_rebinds_on_engine_construction():
+    """A baseline engine must not permanently hijack a reused runtime's
+    failure policy: the most recently constructed engine wins."""
+    from repro.serving.engine import ServingEngine
+    scn = get_scenario("concurrent_multi_failure")
+    rt = build_scenario_runtime(scn)
+    eng_base = ServingEngine(rt, max_batch=2, max_len=16,
+                             fixed_membership=True)
+    assert rt.failure_policy == eng_base._full_restart
+    ServingEngine(rt, max_batch=2, max_len=16)
+    assert rt.failure_policy == rt.handle_failure
+
+
+def test_run_registry_baseline_pairing():
+    from repro.runtime.scenario_runner import run_registry
+    res = run_registry(["majority_coverage_loss"], with_baseline=True,
+                       check_invariants=False)
+    assert [r.fixed_membership for r in res] == [False, True]
+    assert res[0].coverage_loss_events        # elastic: explicit loss event
+    assert not res[1].coverage_loss_events    # restart baseline never loses
+
+
+def test_coverage_loss_recorded_and_raised():
+    """Fewer live slots than experts: shrink is impossible and must be
+    reported as an explicit coverage-loss event, not silent corruption."""
+    scn = Scenario(name="tmp_loss", description="", schedule="@1 fail 0",
+                   world=8, slots_per_rank=1)
+    rt = build_scenario_runtime(scn)     # 8 slots, 4 experts
+    for r in range(1, 7):
+        rt.detector.mark_unreachable(r)  # 6 ranks die -> 2 slots < 4 experts
+    rt.clock.advance(1.5)
+    failed = rt.poll_failures()
+    with pytest.raises(CoverageLossError):
+        rt.handle_failure(failed)
+    assert any(e.kind == "coverage_loss" for e in rt.timeline)
+
+
+# ---------------------------------------------------------------------------
+# Determinism + full-registry e2e
+# ---------------------------------------------------------------------------
+
+def test_same_seed_identical_timeline():
+    a = run_scenario("cascade_mid_recovery", seed=7)
+    b = run_scenario("cascade_mid_recovery", seed=7)
+    assert a.timeline == b.timeline
+    assert a.trace == b.trace
+    assert a.tokens_out == b.tokens_out
+
+
+def test_registry_e2e_invariants():
+    """Every registered scenario: validity at each step boundary, exactly one
+    compiled serve step, >= 1 live replica per expert throughout (or an
+    explicit coverage-loss event), and full reintegration by the horizon."""
+    expected_kinds = {
+        "cascade_mid_recovery": "recovery_restart",
+        "failure_during_warmup": "warmup_abort",
+        "rejoin_storm": "join_batch",
+        "straggler_degrades_then_dies": "straggler_mitigation",
+    }
+    for name in list_scenarios():
+        res = run_scenario(name)
+        scn = SCENARIOS[name]
+        assert res.compile_count == 1, (name, res.compile_count)
+        assert not res.validity_violations, (name, res.validity_violations[:3])
+        assert res.invariants_ok, name
+        if scn.expect_coverage_loss:
+            assert res.coverage_loss_events, name
+        else:
+            assert not res.coverage_loss_events, (name,
+                                                  res.coverage_loss_events)
+            assert res.min_live_replicas >= 1, name
+            assert res.final_active_fraction == 1.0, name
+            assert res.recoveries >= 1, name
+        assert res.tokens_out > 0, name
+        kinds = {e["kind"] for e in res.timeline}
+        if name in expected_kinds:
+            assert expected_kinds[name] in kinds, (name, sorted(kinds))

@@ -3,6 +3,7 @@ user sees it): serving driver with failover, elastic properties under
 hypothesis-driven failure schedules, and backup-service accounting."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="dev extra not installed: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 import jax
