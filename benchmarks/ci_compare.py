@@ -1,0 +1,116 @@
+"""Compare a benchmark JSON artifact against the previous run's and fail on
+regression — ROADMAP's "track trajectory, not just green/red".
+
+  python benchmarks/ci_compare.py --kind dispatch \
+      --prev baseline/BENCH_dispatch.json --cur BENCH_dispatch.json
+  python benchmarks/ci_compare.py --kind scenarios \
+      --prev baseline/BENCH_scenarios.json --cur BENCH_scenarios.json
+
+Per kind, a set of (metric, direction) pairs is extracted from both files;
+any metric that moved in the BAD direction by more than ``--tolerance``
+(default 15%) fails the run. Improvements and new/removed metrics never
+fail (the trajectory grows with the repo). A missing --prev file passes
+trivially: the first run of a new branch has no baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# direction: "lower" = smaller is better, "higher" = bigger is better
+Metric = tuple[float, str]
+
+
+def _dispatch_metrics(doc: dict) -> dict[str, Metric]:
+    out: dict[str, Metric] = {}
+    for name, cell in doc.get("cells", {}).items():
+        if "us_per_call" in cell:
+            out[f"{name}/us_per_call"] = (cell["us_per_call"], "lower")
+        if "dense_over_ragged" in cell:
+            out[f"{name}/dense_over_ragged"] = (cell["dense_over_ragged"],
+                                                "higher")
+        if "dropped_fraction" in cell and name.startswith("machinery/ragged"):
+            # dropless is a hard property, not a trend: any nonzero fails
+            out[f"{name}/dropped_fraction"] = (cell["dropped_fraction"],
+                                               "zero")
+    return out
+
+
+def _scenario_metrics(doc: dict) -> dict[str, Metric]:
+    out: dict[str, Metric] = {}
+    for row in doc.get("scenarios", []):
+        name = row["name"]
+        out[f"{name}/tokens_out"] = (float(row["tokens_out"]), "higher")
+        out[f"{name}/downtime_s"] = (float(row["downtime_s"]), "lower")
+    return out
+
+
+EXTRACTORS = {"dispatch": _dispatch_metrics, "scenarios": _scenario_metrics}
+
+
+def compare(prev: dict[str, Metric], cur: dict[str, Metric],
+            tolerance: float) -> list[str]:
+    """Returns the list of regression descriptions (empty = pass)."""
+    bad = []
+    for name, (value, direction) in sorted(cur.items()):
+        if direction == "zero":
+            if value != 0.0:
+                bad.append(f"{name}: expected 0, got {value}")
+            continue
+        if name not in prev:
+            continue                       # new metric: no baseline yet
+        base = prev[name][0]
+        if base == 0:
+            # a zero baseline on a lower-is-better metric (e.g. downtime_s
+            # of a clean scenario) must not hide regressions: any increase
+            # from 0 is infinite-percent worse
+            if direction == "lower" and value > 0:
+                bad.append(f"{name}: 0 -> {value:.3f} (was zero)")
+            continue
+        delta = (value - base) / abs(base)
+        worse = delta > tolerance if direction == "lower" \
+            else delta < -tolerance
+        arrow = "+" if delta >= 0 else ""
+        line = f"{name}: {base:.3f} -> {value:.3f} ({arrow}{delta * 100:.1f}%)"
+        if worse:
+            bad.append(line)
+        else:
+            print(f"  ok {line}")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--kind", choices=sorted(EXTRACTORS), required=True)
+    ap.add_argument("--prev", required=True,
+                    help="previous run's artifact (may not exist yet)")
+    ap.add_argument("--cur", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.15)
+    args = ap.parse_args(argv)
+
+    extract = EXTRACTORS[args.kind]
+    with open(args.cur) as f:
+        cur = extract(json.load(f))
+    if not os.path.exists(args.prev):
+        print(f"[{args.kind}] no baseline at {args.prev}; "
+              f"recording {len(cur)} metrics as the new trajectory start")
+        return 0
+    with open(args.prev) as f:
+        prev = extract(json.load(f))
+
+    print(f"[{args.kind}] comparing {len(cur)} metrics "
+          f"(baseline has {len(prev)}; tolerance {args.tolerance:.0%})")
+    bad = compare(prev, cur, args.tolerance)
+    if bad:
+        print(f"[{args.kind}] REGRESSIONS:", file=sys.stderr)
+        for line in bad:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"[{args.kind}] trajectory ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

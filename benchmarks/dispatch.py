@@ -1,0 +1,146 @@
+"""Dense vs ragged dispatch/combine: wall time, modeled collective bytes,
+drop behavior — the steady-state dispatch perf trajectory.
+
+  PYTHONPATH=src python benchmarks/dispatch.py [--out BENCH_dispatch.json]
+  PYTHONPATH=src python -m benchmarks.dispatch
+
+Three sections, all deterministic:
+  * machinery  — jitted dispatch_combine_{dense,ragged} on identical routing
+    with the SAME cheap grouped expert_fn, so the time delta is pure dispatch
+    machinery (buffers/scatter for dense; sort/size-exchange for ragged).
+  * model step — moe_apply on the reduced mixtral config, both modes (what
+    the serving engine actually compiles on this container).
+  * bytes      — analytic per-device collective bytes at the production
+    geometry (core.elastic_moe.dispatch_bytes_model): the ragged layout must
+    move >= 2x fewer bytes than dense at the default top_k=2 / cf=2.0 cell,
+    and its dropped_fraction is identically 0 even under skew.
+
+The JSON artifact is compared across CI runs by benchmarks/ci_compare.py
+(>15% regression on any us_per_call / bytes-ratio metric fails the build).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_dispatch.json")
+    ap.add_argument("--iters", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import timeit
+    from repro.configs import get_config
+    from repro.core import (
+        EPContext,
+        dispatch_bytes_model,
+        dispatch_combine_dense,
+        dispatch_combine_ragged,
+        elastic_route,
+        make_initial_membership,
+    )
+    from repro.models.moe import local_deployment, moe_apply, moe_layer_init
+
+    t0 = time.time()
+    cells: dict[str, dict] = {}
+    print("name,us_per_call,derived")
+
+    # ---- machinery: same routing, same expert math, two layouts ----------
+    E, spr, k, T, d = 8, 8, 2, 256, 64
+    table = make_initial_membership(1, E, spr)
+    ms = table.to_device()
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (T, d), jnp.float32)
+    logits_flat = jax.random.normal(jax.random.fold_in(key, 1), (T, E))
+    # skew: two experts take ~all traffic (the dense capacity killer)
+    logits_skew = logits_flat.at[:, :2].add(8.0)
+    ep = EPContext(axis_names=(), world=1, slots_per_rank=spr,
+                   capacity_factor=2.0)
+
+    def expert_dense(recv):
+        return recv * 1.5
+
+    def expert_ragged(xg, group_sizes):
+        return xg * 1.5
+
+    for load, logits in (("balanced", logits_flat), ("skewed", logits_skew)):
+        _, w, slots = elastic_route(logits, ms, k, jnp.arange(T))
+        dense = jax.jit(lambda x, s, w: dispatch_combine_dense(
+            x, s, w, expert_dense, ep))
+        ragged = jax.jit(lambda x, s, w: dispatch_combine_ragged(
+            x, s, w, expert_ragged, ep))
+        for mode, fn in (("dense", dense), ("ragged", ragged)):
+            out, aux = fn(x, slots, w)
+            jax.block_until_ready(out)
+            us = timeit(lambda: jax.block_until_ready(fn(x, slots, w)[0]),
+                        iters=args.iters)
+            dropped = float(aux["dropped_fraction"])
+            name = f"machinery/{mode}/{load}"
+            cells[name] = {"us_per_call": us, "dropped_fraction": dropped}
+            print(f"dispatch/{name},{us:.0f},dropped={dropped:.4f}")
+        assert cells[f"machinery/ragged/{load}"]["dropped_fraction"] == 0.0
+
+    # ---- model step: the compiled moe layer both ways --------------------
+    cfg = get_config("mixtral-8x22b").reduced()
+    mspr = cfg.moe.num_experts * 2
+    mtable = make_initial_membership(1, cfg.moe.num_experts, mspr)
+    params = moe_layer_init(jax.random.key(2), cfg, mspr,
+                            mtable.slot_to_expert, jnp.float32)
+    mms = mtable.to_device()
+    xm = jax.random.normal(jax.random.key(3), (T, cfg.d_model), jnp.float32)
+    for mode in ("dense", "ragged"):
+        dep = local_deployment(mspr, cfg.capacity_factor, dispatch=mode)
+        step = jax.jit(lambda x, p, m: moe_apply(cfg, p, x, m, dep)[0])
+        jax.block_until_ready(step(xm, params, mms))
+        us = timeit(lambda: jax.block_until_ready(step(xm, params, mms)),
+                    iters=args.iters)
+        cells[f"moe_apply/{mode}"] = {"us_per_call": us}
+        print(f"dispatch/moe_apply/{mode},{us:.0f},T={T}")
+
+    # ---- bytes: production geometry (per device, analytic) ---------------
+    geometries = {
+        "mixtral_k2_cf2": dict(world=64, spr=2, t_local=128, k=2, d=6144),
+        "deepseek_k8_cf2": dict(world=256, spr=2, t_local=128, k=8, d=7168),
+    }
+    for name, g in geometries.items():
+        gep = EPContext(axis_names=("data",), world=g["world"],
+                        slots_per_rank=g["spr"], capacity_factor=2.0)
+        m = dispatch_bytes_model(gep, g["t_local"], g["k"], g["d"])
+        cells[f"bytes/{name}"] = m
+        print(f"dispatch/bytes/{name},0,"
+              f"dense={m['dense_bytes']}_ragged={m['ragged_bytes']}"
+              f"_ratio={m['dense_over_ragged']:.2f}")
+
+    ratio = cells["bytes/mixtral_k2_cf2"]["dense_over_ragged"]
+    ok = ratio >= 2.0
+    out = {
+        "meta": {
+            "wall_s": round(time.time() - t0, 1),
+            "iters": args.iters,
+            "ragged_at_least_2x_fewer_bytes": ok,
+        },
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"dispatch/sweep,0,cells={len(cells)}_wrote={args.out}")
+    if not ok:
+        print(f"dispatch/sweep/FAILED,0,ratio={ratio:.2f}<2.0",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -14,7 +14,7 @@ from __future__ import annotations
 import sys
 
 
-def main() -> None:
+def main() -> int:
     from benchmarks import recovery, reintegration, static_overhead
 
     print("# === Fig 9: static serving overhead ===")
@@ -27,6 +27,10 @@ def main() -> None:
     print("# === Pallas kernel microbenchmarks (interpret mode) ===")
     _kernels()
 
+    print("# === Dispatch layouts: dense vs ragged (BENCH_dispatch.json) ===")
+    from benchmarks import dispatch as dispatch_bench
+    rc = dispatch_bench.main(["--iters", "10"])
+
     print("# === Roofline (analytic; full table in EXPERIMENTS.md) ===")
     from benchmarks.roofline import full_table
     for r in full_table():
@@ -35,6 +39,7 @@ def main() -> None:
         print(f"roofline/{r['arch']}/{r['shape']},0,"
               f"bottleneck={r['bottleneck']}"
               f"_fraction={r['roofline_fraction']:.3f}")
+    return rc
 
 
 def _kernels() -> None:
@@ -72,4 +77,4 @@ def _kernels() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -122,6 +122,7 @@ class ArchConfig:
     grad_accum_dtype: str = "float32"  # bf16 for the largest archs (memory)
     microbatch: int = 1                # grad-accum steps inside train_step
     capacity_factor: float = 2.0
+    dispatch_mode: str = "dense"       # "dense" | "ragged" (dropless) dispatch
     # ---- beyond-paper perf knobs (EXPERIMENTS SSPerf) ----
     attn_head_pad: int = 0             # zero-pad Q heads to divide the TP axis
     expert_serving_dtype: str = ""     # e.g. "float8_e4m3fn" weight storage
@@ -135,6 +136,7 @@ class ArchConfig:
         assert self.family in FAMILIES, self.family
         assert self.attention in ATTENTION_KINDS, self.attention
         assert self.activation in ACTIVATIONS, self.activation
+        assert self.dispatch_mode in ("dense", "ragged"), self.dispatch_mode
 
     # -- derived -----------------------------------------------------------
     @property

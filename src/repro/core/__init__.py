@@ -5,7 +5,9 @@ reintegration."""
 from repro.core.backup import BackupStore
 from repro.core.elastic_moe import (
     EPContext,
+    dispatch_bytes_model,
     dispatch_combine_dense,
+    dispatch_combine_ragged,
     elastic_route,
     expert_load_from_route,
     fixed_route,
@@ -47,7 +49,8 @@ __all__ = [
     "FailureDetector", "FailureInjector", "MembershipState", "PeerTable",
     "RankState", "RecoveryCostModel", "ReintegrationController", "RepairPlan",
     "Scenario", "SimClock", "ValidityReport", "WarmupCostModel",
-    "apply_repair", "check", "dispatch_combine_dense", "elastic_route",
+    "apply_repair", "check", "dispatch_bytes_model", "dispatch_combine_dense",
+    "dispatch_combine_ragged", "elastic_route",
     "eplb_place", "expert_load_from_route", "fixed_route", "format_schedule",
     "get_scenario", "list_scenarios", "make_initial_membership",
     "parse_schedule", "placement_overlap", "plan_repair", "register",

@@ -17,8 +17,16 @@ restored configuration — membership changes update table *contents* only.
 
 Two dispatch layouts:
   dense  — fixed-capacity buffers [world, spr, cap, d]; predictable collective
-           bytes (used by the dry-run/roofline).
-  The ragged (size-exchange + ragged_all_to_all) variant is a §Perf item.
+           bytes (used by the dry-run/roofline), tokens over capacity dropped.
+  ragged — dropless size-exchange dispatch (the DeepEP analogue): (token,
+           choice) pairs are sorted by destination slot, per-destination
+           counts are exchanged first, and only REAL tokens move (via
+           ``ragged_all_to_all`` where jax provides it, a tight dense
+           exchange otherwise); expert compute runs on group-sorted tokens
+           through the ``gmm`` grouped-matmul kernel and the combine applies
+           the inverse permutation with fp32 weights. Elastic semantics are
+           identical: failed ranks receive zero traffic because no table
+           entry points at them, and membership changes never recompile.
 """
 from __future__ import annotations
 
@@ -99,13 +107,33 @@ def elastic_route(
 # ---------------------------------------------------------------------------
 
 
-def _bucket_positions(flat_slot: jax.Array, num_slots: int) -> jax.Array:
-    """Position of each (token, choice) entry within its destination-slot
-    bucket. One-hot cumsum formulation (sort-free; XLA-friendly).
-    flat_slot: int32[N] in [0, num_slots). Returns int32[N]."""
+def _bucket_positions_onehot(flat_slot: jax.Array, num_slots: int) -> jax.Array:
+    """Reference formulation of ``_bucket_positions``: one-hot cumsum.
+    Materializes an [N, num_slots] int32 intermediate — O(N*S) memory, which
+    dominates the dispatch prologue at wide-EP slot counts. Kept as the
+    correctness oracle for the sort-based version below."""
     onehot = jax.nn.one_hot(flat_slot, num_slots, dtype=jnp.int32)  # [N, S]
     pos = jnp.cumsum(onehot, axis=0) - 1                            # [N, S]
     return jnp.take_along_axis(pos, flat_slot[:, None], axis=1)[:, 0]
+
+
+def _bucket_positions(flat_slot: jax.Array, num_slots: int) -> jax.Array:
+    """Position of each (token, choice) entry within its destination-slot
+    bucket. Sort-based: a stable argsort groups equal slots into runs, a
+    running maximum over run-start indices yields each entry's offset within
+    its run — O(N log N) and O(N) memory (vs the one-hot cumsum's O(N*S)).
+    flat_slot: int32[N] in [0, num_slots). Returns int32[N]."""
+    n = flat_slot.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.int32)
+    order = jnp.argsort(flat_slot, stable=True)                     # [N]
+    sorted_slot = flat_slot[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_slot[1:] != sorted_slot[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    pos_sorted = idx - run_start                                    # [N]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
 
 
 def dispatch_combine_dense(
@@ -171,6 +199,129 @@ def dispatch_combine_dense(
         "capacity": cap,
     }
     return out.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Ragged (dropless, size-exchange) dispatch/combine — the DeepEP analogue
+# ---------------------------------------------------------------------------
+
+
+def _inverse_permutation(order: jax.Array) -> jax.Array:
+    n = order.shape[0]
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def dispatch_combine_ragged(
+    x: jax.Array,                    # [T, d] LOCAL tokens (inside shard_map)
+    slots: jax.Array,                # [T, k] destination physical slots
+    weights: jax.Array,              # [T, k] fp32 combine weights
+    grouped_expert_fn: Callable,     # ([R, d] group-sorted, group_sizes[spr])
+                                     #   -> [R, d]
+    ep: EPContext,
+):
+    """Dropless dispatch: sort (token, choice) pairs by destination slot,
+    exchange per-destination counts, move only real tokens, run expert
+    compute on group-sorted tokens (``gmm``-shaped: contiguous per-local-slot
+    groups + group_sizes), combine via the inverse permutation in fp32.
+
+    No capacity, no drops: every routed pair is served regardless of load
+    skew (``aux["dropped_fraction"]`` is identically 0). The receive buffer
+    uses the exact worst case (world × local pairs), so correctness never
+    depends on a tuning factor; balanced load fills ~1/world of it and the
+    wire carries only real rows (see ``dispatch_bytes_model``).
+
+    Elastic semantics match the dense path: slots only ever point at ACTIVE
+    ranks (elastic_route consults the mutable table), so failed ranks get
+    zero traffic, and a membership patch changes only array contents.
+    """
+    T, d = x.shape
+    k = slots.shape[1]
+    n_pairs = T * k
+    spr = ep.slots_per_rank
+    world = ep.world
+
+    flat_slot = slots.reshape(-1).astype(jnp.int32)            # [N]
+    order = jnp.argsort(flat_slot, stable=True)                # dst-sorted
+    inv = _inverse_permutation(order)
+    xs = jnp.repeat(x, k, axis=0)[order]                       # [N, d]
+    counts = jnp.bincount(flat_slot, length=ep.num_slots).astype(jnp.int32)
+
+    aux = {"dropped_fraction": jnp.asarray(0.0, jnp.float32),
+           "pairs": n_pairs}
+
+    if not ep.axis_names or world == 1:
+        # local: every slot is resident; the sort IS the dispatch
+        y_sorted = grouped_expert_fn(xs, counts)
+        y = y_sorted[inv]                                      # per pair
+    else:
+        cmat = counts.reshape(world, spr)                      # send counts
+        send_sizes = cmat.sum(axis=1)                          # [world]
+        # ---- size exchange: who sends how much to whom ----
+        recv_cmat = jax.lax.all_to_all(cmat, ep.axis_names, split_axis=0,
+                                       concat_axis=0, tiled=False)
+        recv_sizes = recv_cmat.sum(axis=1)                     # [world] by src
+        r_buf = n_pairs * world                                # exact bound
+        from repro.launch.mesh import ragged_all_to_all_portable
+        xr = ragged_all_to_all_portable(xs, send_sizes, recv_sizes,
+                                        ep.axis_names, world=world,
+                                        out_rows=r_buf)
+        # received rows are source-major; within one source chunk they are
+        # local-slot-sorted (the sender sorted by global slot id). Recover
+        # each row's local slot from the count matrix, then group-sort.
+        roff = jnp.cumsum(recv_sizes) - recv_sizes
+        ridx = jnp.arange(r_buf)
+        src = jnp.clip(jnp.searchsorted(roff, ridx, side="right") - 1,
+                       0, world - 1)
+        pos = ridx - roff[src]
+        cum_ls = jnp.cumsum(recv_cmat, axis=1)                 # [world, spr]
+        ls = (pos[:, None] >= cum_ls[src]).sum(axis=1)         # [r_buf]
+        ls = jnp.where(ridx < recv_sizes.sum(), ls, spr)       # slack -> end
+        order2 = jnp.argsort(ls, stable=True)
+        inv2 = _inverse_permutation(order2)
+        group_sizes = recv_cmat.sum(axis=0).astype(jnp.int32)  # [spr]
+        yg = grouped_expert_fn(xr[order2], group_sizes)
+        # back to source-major, then the mirror exchange returns each pair's
+        # output to its sender in the original dst-sorted order. Each
+        # destination gets back exactly what it sent (<= its n_pairs), so
+        # the fallback's per-destination chunk bound is n_pairs, not r_buf.
+        y_back = ragged_all_to_all_portable(yg[inv2], recv_sizes, send_sizes,
+                                            ep.axis_names, world=world,
+                                            out_rows=n_pairs,
+                                            chunk_rows=n_pairs)
+        y = y_back[inv]
+
+    w = weights.reshape(-1).astype(jnp.float32)[:, None]
+    out = jnp.sum((y.astype(jnp.float32) * w).reshape(T, k, d), axis=1)
+    return out.astype(x.dtype), aux
+
+
+def dispatch_bytes_model(ep: EPContext, tokens_per_rank: int, top_k: int,
+                         d_model: int, itemsize: int = 2) -> dict:
+    """Per-device on-wire bytes of one dispatch+combine round trip, both
+    layouts (analytic; the ragged fallback's HLO shows dense buffers, so
+    accounting must come from here — see ragged_all_to_all_portable).
+
+    dense:  both all_to_alls carry the full capacity-padded buffer
+            [world, spr, cap, d] regardless of how many slots are real.
+    ragged: both exchanges carry only the T*k real (token, choice) pairs
+            (balanced load; skew moves the same global total), plus the
+            int32 count exchange. At the default top_k=2 / cf=2.0 geometry
+            dense pads by ~capacity_factor (and the lane/min-capacity
+            round-up), so ragged moves >= 2x fewer bytes.
+    """
+    cap = ep.capacity(tokens_per_rank, top_k)
+    n_pairs = tokens_per_rank * top_k
+    dense = 2 * ep.world * ep.slots_per_rank * cap * d_model * itemsize
+    size_exchange = 2 * ep.world * ep.slots_per_rank * 4
+    ragged = 2 * n_pairs * d_model * itemsize + size_exchange
+    return {
+        "capacity": int(cap),
+        "pairs_per_rank": int(n_pairs),
+        "dense_bytes": int(dense),
+        "ragged_bytes": int(ragged),
+        "dense_over_ragged": float(dense / max(ragged, 1)),
+    }
 
 
 def expert_load_from_route(experts: jax.Array, weights: jax.Array,

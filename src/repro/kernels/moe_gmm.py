@@ -110,7 +110,44 @@ def fused_moe_ffn(x, w_in, w_out, w_gate=None, *, activation: str = "swiglu",
 # ---------------------------------------------------------------------------
 
 
-def _gmm_kernel(block_group_ref, x_ref, w_ref, o_ref, acc_ref, *, bk: int):
+def _gmm_metadata(group_sizes, bt: int, nblocks: int):
+    """Logical-tile schedule for groups of ARBITRARY (traced) size.
+
+    A logical tile is one (group, row-block) pair whose row ranges intersect:
+    a row block straddling a group boundary is visited once per overlapping
+    group, each visit masked to its own rows (megablocks-style). The tile
+    count is data-dependent but bounded by ``nblocks + G - 1`` (each interior
+    group boundary adds at most one shared block), so the grid is static;
+    logical tiles past the real schedule degenerate into masked no-op
+    revisits of the last row block.
+
+    Returns (tile_group, tile_block) int32[nblocks + G - 1], both
+    non-decreasing in tile order (Pallas output-block revisits stay
+    consecutive).
+    """
+    G = group_sizes.shape[0]
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    starts = ends - sizes
+    first_tile = starts // bt
+    last_tile = (ends + bt - 1) // bt               # exclusive
+    tiles_of = jnp.where(sizes > 0, last_tile - first_tile, 0)
+    seq_start = jnp.cumsum(tiles_of) - tiles_of     # tile index where each
+    ntiles = nblocks + G - 1                        # group's run begins
+    t = jnp.arange(ntiles, dtype=jnp.int32)
+    # side="right" skips zero-tile groups at ties (their run is empty)
+    tile_group = jnp.clip(
+        jnp.searchsorted(seq_start, t, side="right") - 1, 0, G - 1
+    ).astype(jnp.int32)
+    off = t - seq_start[tile_group]
+    tile_block = jnp.clip(first_tile[tile_group] + off, 0, nblocks - 1
+                          ).astype(jnp.int32)
+    return tile_group, tile_block, starts, ends
+
+
+def _gmm_kernel(tg_ref, tb_ref, gs_ref, ge_ref, x_ref, w_ref, o_ref, acc_ref,
+                *, bt: int):
+    i = pl.program_id(0)
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -123,26 +160,37 @@ def _gmm_kernel(block_group_ref, x_ref, w_ref, o_ref, acc_ref, *, bk: int):
 
     @pl.when(k == pl.num_programs(1) - 1)
     def _():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        # blend-store only the rows belonging to this tile's group: a
+        # boundary block is completed by its other group's visit(s), and
+        # degenerate trailing tiles rewrite identical values (idempotent)
+        g = tg_ref[i]
+        rows = tb_ref[i] * bt + jax.lax.broadcasted_iota(
+            jnp.int32, acc_ref.shape, 0)
+        mask = (rows >= gs_ref[g]) & (rows < ge_ref[g])
+        o_ref[...] = jnp.where(mask, acc_ref[...],
+                               o_ref[...].astype(jnp.float32)
+                               ).astype(o_ref.dtype)
 
 
 def gmm(x, w, group_sizes, *, block_t: int = 128, block_k: int = 512,
         interpret: bool = False):
-    """Grouped matmul: x [T, d] sorted by group; w [G, d, f];
-    group_sizes [G] ints summing to T, each a multiple of ``block_t``
-    (dispatch pads per-group token counts to the block size).
-    Returns [T, f]."""
+    """Grouped matmul over group-sorted rows: the first ``group_sizes[0]``
+    rows of x [T, d] belong to group 0, and so on; w [G, d, f].
+
+    ``group_sizes`` may be traced, contain zeros, and need not be multiples
+    of ``block_t`` — boundary row blocks are revisited once per overlapping
+    group with a row mask, so ragged dispatch needs NO per-group padding.
+    Rows beyond ``sum(group_sizes)`` (receive-buffer slack) produce
+    unspecified output; callers must never read them. Returns [T, f]."""
     T, d = x.shape
     G, _, f = w.shape
-    bt = block_t
-    assert T % bt == 0, "caller pads T to block_t"
-    nblocks = T // bt
-    # block -> group map (host-computable only when group_sizes is static;
-    # for traced sizes we compute it with a cumsum comparison)
-    starts = jnp.cumsum(group_sizes) - group_sizes          # [G]
-    block_starts = jnp.arange(nblocks) * bt
-    block_group = (jnp.searchsorted(starts, block_starts, side="right") - 1
-                   ).astype(jnp.int32)                      # [nblocks]
+    if T == 0:
+        return jnp.zeros((0, f), x.dtype)
+    bt = min(block_t, max(8, T))
+    pad_t = (-T) % bt
+    if pad_t:
+        x = jnp.pad(x, ((0, pad_t), (0, 0)))
+    nblocks = (T + pad_t) // bt
 
     bk = min(block_k, d)
     pad_k = (-d) % bk
@@ -151,21 +199,25 @@ def gmm(x, w, group_sizes, *, block_t: int = 128, block_k: int = 512,
         w = jnp.pad(w, ((0, 0), (0, pad_k), (0, 0)))
     dp = d + pad_k
 
-    kernel = functools.partial(_gmm_kernel, bk=bk)
+    tile_group, tile_block, starts, ends = _gmm_metadata(group_sizes, bt,
+                                                         nblocks)
+    kernel = functools.partial(_gmm_kernel, bt=bt)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nblocks, dp // bk),
+        num_scalar_prefetch=4,
+        grid=(nblocks + G - 1, dp // bk),
         in_specs=[
-            pl.BlockSpec((bt, bk), lambda i, k, bg: (i, k)),
-            pl.BlockSpec((1, bk, f), lambda i, k, bg: (bg[i], k, 0)),
+            pl.BlockSpec((bt, bk), lambda i, k, tg, tb, gs, ge: (tb[i], k)),
+            pl.BlockSpec((1, bk, f),
+                         lambda i, k, tg, tb, gs, ge: (tg[i], k, 0)),
         ],
-        out_specs=pl.BlockSpec((bt, f), lambda i, k, bg: (i, 0)),
+        out_specs=pl.BlockSpec((bt, f),
+                               lambda i, k, tg, tb, gs, ge: (tb[i], 0)),
         scratch_shapes=[pltpu.VMEM((bt, f), jnp.float32)],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, f), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((T + pad_t, f), x.dtype),
         interpret=interpret,
-    )(block_group, x, w)
-    return out
+    )(tile_group, tile_block, starts, ends, x, w)
+    return out[:T]

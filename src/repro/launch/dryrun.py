@@ -90,7 +90,32 @@ def collective_bytes(hlo_text: str) -> tuple[int, Counter]:
     return total, kinds
 
 
-def lower_cell(arch: str, shape_name: str, multi_pod: bool, dtype=jnp.bfloat16):
+def dispatch_model(cfg, shape, mesh, dpl, dtype_bytes: int = 2):
+    """Analytic dense-vs-ragged dispatch bytes for one MoE cell (per device,
+    one dispatch+combine round trip per MoE layer). HLO byte counting cannot
+    see the ragged saving on jax versions where ragged_all_to_all falls back
+    to the dense exchange, so this model is the trajectory source of truth
+    (see core.elastic_moe.dispatch_bytes_model)."""
+    from repro.core.elastic_moe import dispatch_bytes_model
+    ep = dpl.moe.ep
+    if not cfg.is_moe or not ep.axis_names:
+        return None
+    x_axes = ((("pod",) if "pod" in mesh.axis_names else ())
+              + tuple(ep.axis_names))
+    denom = int(np.prod([mesh.shape[a] for a in x_axes]))
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.kind in ("train", "prefill")
+                                   else 1)
+    t_local = max(1, -(-tokens // denom))
+    m = dispatch_bytes_model(ep, t_local, cfg.moe.top_k, cfg.d_model,
+                             itemsize=dtype_bytes)
+    m["tokens_per_rank"] = t_local
+    m["moe_layers"] = len(cfg.moe_layer_ids())
+    return m
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, dtype=jnp.bfloat16,
+               dispatch=None):
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     ok, reason = cell_is_supported(cfg, shape)
@@ -101,7 +126,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, dtype=jnp.bfloat16):
     mesh = make_production_mesh(multi_pod=multi_pod)
     seq_shard = (shape.name == "long_500k" and cfg.family == "hybrid")
     kind = "train" if shape.kind == "train" else "serve"
-    dpl = make_deployment(cfg, mesh, seq_shard=seq_shard, kind=kind)
+    dpl = make_deployment(cfg, mesh, seq_shard=seq_shard, kind=kind,
+                          dispatch=dispatch)
     table = make_membership_table(cfg, mesh, kind)
     ms_shapes = jax.tree_util.tree_map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), table.to_device())
@@ -195,6 +221,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool, dtype=jnp.bfloat16):
     result = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
         "skipped": False,
+        "dispatch": dpl.moe.dispatch if cfg.is_moe else None,
+        "dispatch_model": dispatch_model(cfg, shape, mesh, dpl),
         "chips": chips,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
@@ -238,6 +266,10 @@ def main(argv=None):
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dispatch", choices=["dense", "ragged"], default=None,
+                    help="dispatch layout to lower (default: cfg policy); "
+                    "the analytic dense-vs-ragged byte model is reported "
+                    "either way")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="dryrun_results.json")
@@ -266,7 +298,7 @@ def main(argv=None):
             continue
         print(f"[dryrun] {a} x {s} multi_pod={mp} ...", flush=True)
         try:
-            r = lower_cell(a, s, mp)
+            r = lower_cell(a, s, mp, dispatch=args.dispatch)
         except Exception as e:
             traceback.print_exc()
             r = {"arch": a, "shape": s, "multi_pod": mp, "skipped": False,
@@ -278,12 +310,15 @@ def main(argv=None):
             print(f"  ERROR: {r['error']}")
         else:
             rl = r["roofline"]
+            dm = r.get("dispatch_model")
+            disp = (f" a2a_dense/ragged={dm['dense_over_ragged']:.1f}x"
+                    if dm else "")
             print(f"  ok compile={r['compile_s']}s "
                   f"static/dev={r['memory']['static_per_device_gb']}GB "
                   f"(+cpu-temp {r['memory']['temp_bytes_cpu_backend']/1e9:.1f}) "
                   f"compute={rl['compute_s']:.2e}s memory={rl['memory_s']:.2e}s "
                   f"collective={rl['collective_s']:.2e}s "
-                  f"bottleneck={rl['bottleneck']}", flush=True)
+                  f"bottleneck={rl['bottleneck']}{disp}", flush=True)
         with open(args.out, "w") as f:
             json.dump(results, f, indent=1)
     print(f"wrote {args.out} ({len(results)} cells)")

@@ -27,6 +27,9 @@ def main(argv=None):
     ap.add_argument("--fail-at", type=float, default=None)
     ap.add_argument("--fixed-membership", action="store_true",
                     help="full-restart baseline instead of EEP")
+    ap.add_argument("--dispatch", choices=["dense", "ragged"], default=None,
+                    help="capacity-padded vs dropless size-exchange dispatch "
+                    "(default: the arch config's dispatch_mode)")
     ap.add_argument("--until", type=float, default=600.0)
     args = ap.parse_args(argv)
 
@@ -44,7 +47,7 @@ def main(argv=None):
     table = make_initial_membership(args.world, E, args.slots_per_rank)
     params = init_params(cfg, jax.random.key(0), jnp.float32,
                          table.slot_to_expert, table.num_slots)
-    rt = ElasticEPRuntime(cfg, params, table)
+    rt = ElasticEPRuntime(cfg, params, table, dispatch=args.dispatch)
     eng = ServingEngine(rt, max_batch=args.max_batch,
                         max_len=args.prompt_len + args.max_new + 8,
                         fixed_membership=args.fixed_membership)
@@ -62,7 +65,7 @@ def main(argv=None):
     print(f"finished={s.finished} failed={s.failed} retried={s.retried} "
           f"tokens={s.tokens_out}")
     print(f"serve-step compilations: {eng.compile_count()} (no recompile "
-          f"across membership changes)")
+          f"across membership changes; dispatch={eng.dispatch})")
     for ev in rt.timeline:
         print(f"  t={ev.t:8.2f}s {ev.kind} {ev.detail if ev.detail else ''}")
 

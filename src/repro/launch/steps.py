@@ -35,7 +35,12 @@ from repro.train.optim import OptimizerConfig, make_optimizer
 
 
 def make_deployment(cfg: ArchConfig, mesh, *, seq_shard: bool = False,
-                    kind: str = "serve") -> Deployment:
+                    kind: str = "serve",
+                    dispatch: Optional[str] = None) -> Deployment:
+    """``dispatch`` overrides ``cfg.dispatch_mode`` ("dense" | "ragged") —
+    the same compiled-step contract holds on both layouts; only the
+    dispatch/combine collectives and expert-compute shape change."""
+    dispatch = dispatch or cfg.dispatch_mode
     fixed = None
     if cfg.is_moe and kind == "train":
         # training routes to canonical slots only (fixed membership; R=1)
@@ -43,7 +48,9 @@ def make_deployment(cfg: ArchConfig, mesh, *, seq_shard: bool = False,
             cfg, mesh, kind="train"))
     if mesh is None:
         dpl = Deployment.local(cfg)
-        return Deployment(moe=dpl.moe, mesh=None, fixed_s2e=fixed)
+        from dataclasses import replace as _replace
+        return Deployment(moe=_replace(dpl.moe, dispatch=dispatch),
+                          mesh=None, fixed_s2e=fixed)
     if cfg.is_moe and cfg.ep_axes:
         world = int(np.prod([mesh.shape[a] for a in cfg.ep_axes]))
         spr = num_slots(cfg, mesh, kind) // world
@@ -51,10 +58,10 @@ def make_deployment(cfg: ArchConfig, mesh, *, seq_shard: bool = False,
                        slots_per_rank=spr,
                        capacity_factor=cfg.capacity_factor)
         dep = MoEDeployment(ep=ep, tp_axes=tuple(cfg.expert_tp_axes),
-                            mesh=mesh)
+                            mesh=mesh, dispatch=dispatch)
     elif cfg.is_moe:
         dep = local_deployment(num_slots(cfg, mesh, kind),
-                               cfg.capacity_factor)
+                               cfg.capacity_factor, dispatch=dispatch)
     else:
         dep = local_deployment(1, cfg.capacity_factor)
     return Deployment(moe=dep, mesh=mesh,

@@ -26,12 +26,19 @@ from repro.configs.base import ArchConfig
 from repro.core.elastic_moe import (
     EPContext,
     dispatch_combine_dense,
+    dispatch_combine_ragged,
     elastic_route,
     expert_load_from_route,
     fixed_route,
 )
 from repro.core.membership import MembershipState
+from repro.kernels.moe_gmm import fused_moe_ffn, gmm
 from repro.models.layers import activation_fn, is_gated
+
+
+def _interpret_kernels() -> bool:
+    """Pallas kernels run in interpret mode off-TPU (CPU CI / smoke tests)."""
+    return jax.default_backend() != "tpu"
 
 
 @dataclass(frozen=True)
@@ -47,16 +54,31 @@ class MoEDeployment:
     # the psum volume drops by the top_k * capacity_factor padding factor.
     # False = paper-faithful baseline (DeepEP-style reduce-then-combine).
     defer_tp_reduce: bool = True
+    # Dispatch layout (ISSUE 2 tentpole): "dense" = capacity-padded buffers
+    # (predictable bytes, drops over capacity); "ragged" = dropless
+    # size-exchange dispatch riding the gmm grouped-matmul kernel.
+    dispatch: str = "dense"
+    # Dense-path expert compute through the fused Pallas FFN kernel instead
+    # of the unfused einsum chain (interpret mode off-TPU).
+    use_fused_ffn: bool = False
+    # Ragged-path grouped matmul: True = gmm Pallas kernel, False = pure-jnp
+    # grouped einsum, None = auto (kernel on TPU; the jnp form on CPU, where
+    # interpret-mode Pallas is orders of magnitude slower than XLA and would
+    # dominate simulation wall time).
+    use_pallas_gmm: Optional[bool] = None
+    gmm_block_t: int = 128
 
     @property
     def distributed(self) -> bool:
         return self.mesh is not None and bool(self.ep.axis_names)
 
 
-def local_deployment(num_slots: int, capacity_factor: float = 2.0) -> MoEDeployment:
+def local_deployment(num_slots: int, capacity_factor: float = 2.0,
+                     dispatch: str = "dense", **kw) -> MoEDeployment:
     return MoEDeployment(
         ep=EPContext(axis_names=(), world=1, slots_per_rank=num_slots,
-                     capacity_factor=capacity_factor))
+                     capacity_factor=capacity_factor),
+        dispatch=dispatch, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -112,23 +134,70 @@ def slot_weight_keys(p) -> list[str]:
 # ---------------------------------------------------------------------------
 
 
-def _expert_ffn(recv, w_in, w_gate, w_out, activation, tp_axes):
+def _expert_ffn(recv, w_in, w_gate, w_out, activation, tp_axes,
+                use_fused: bool = False):
     """recv: [spr, R, d]; w_*: [spr, d, de_local] / [spr, de_local, d].
     Weights may be stored narrower (fp8) and upcast at use (the HBM read is
     the narrow dtype; the MXU computes in the activation dtype)."""
-    act = activation_fn(activation)
     w_in = w_in.astype(recv.dtype)
     w_out = w_out.astype(recv.dtype)
-    h = jnp.einsum("srd,sde->sre", recv, w_in)
-    if w_gate is not None:
-        g = jnp.einsum("srd,sde->sre", recv, w_gate.astype(recv.dtype))
-        h = act(g) * h
+    w_gate = w_gate.astype(recv.dtype) if w_gate is not None else None
+    if use_fused:
+        # fused Pallas kernel: the [R, de] expert-hidden activation never
+        # leaves VMEM (two HBM round trips saved vs the einsum chain)
+        y = fused_moe_ffn(recv, w_in, w_out, w_gate, activation=activation,
+                          interpret=_interpret_kernels())
     else:
-        h = act(h)
-    y = jnp.einsum("sre,sed->srd", h, w_out)
+        act = activation_fn(activation)
+        h = jnp.einsum("srd,sde->sre", recv, w_in)
+        if w_gate is not None:
+            g = jnp.einsum("srd,sde->sre", recv, w_gate)
+            h = act(g) * h
+        else:
+            h = act(h)
+        y = jnp.einsum("sre,sed->srd", h, w_out)
     if tp_axes:
         y = jax.lax.psum(y, tp_axes)   # reduce the de-sharded partial sums
         # (baseline path; the deferred variant reduces after combine instead)
+    return y
+
+
+def _grouped_matmul(x, w, group_sizes, dep: MoEDeployment):
+    """Ragged-path building block: x [R, d] group-sorted, w [G, d_in, d_out].
+    Dispatches to the gmm Pallas kernel (TPU, or explicitly requested) or a
+    pure-jnp grouped einsum with identical semantics (CPU default —
+    interpret-mode Pallas inside the serve step would dominate sim time)."""
+    use = dep.use_pallas_gmm
+    if use is None:
+        use = not _interpret_kernels()
+    if use:
+        return gmm(x, w, group_sizes, block_t=dep.gmm_block_t,
+                   interpret=_interpret_kernels())
+    starts = jnp.cumsum(group_sizes) - group_sizes
+    gid = jnp.clip(jnp.searchsorted(starts, jnp.arange(x.shape[0]),
+                                    side="right") - 1, 0, w.shape[0] - 1)
+    return jnp.einsum("td,tdf->tf", x, w[gid],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _expert_ffn_grouped(xg, group_sizes, w_in, w_gate, w_out, activation,
+                        tp_axes, dep: MoEDeployment):
+    """Ragged-path expert compute: xg [R, d] sorted by local slot with
+    contiguous per-slot groups (sizes in group_sizes [spr]); the three
+    projections each run as one grouped matmul over the real tokens only —
+    no capacity padding anywhere."""
+    act = activation_fn(activation)
+    w_in = w_in.astype(xg.dtype)
+    w_out = w_out.astype(xg.dtype)
+    h = _grouped_matmul(xg, w_in, group_sizes, dep)
+    if w_gate is not None:
+        g = _grouped_matmul(xg, w_gate.astype(xg.dtype), group_sizes, dep)
+        h = act(g) * h
+    else:
+        h = act(h)
+    y = _grouped_matmul(h.astype(xg.dtype), w_out, group_sizes, dep)
+    if tp_axes:
+        y = jax.lax.psum(y, tp_axes)
     return y
 
 
@@ -173,10 +242,17 @@ def _moe_island(x, router, w_in, w_gate, w_out, shared, membership,
             m.normalize_router_weights)
 
     inner_tp = () if (dep.defer_tp_reduce and dep.tp_axes) else dep.tp_axes
-    expert_fn = partial(_expert_ffn, w_in=w_in, w_gate=w_gate, w_out=w_out,
-                        activation=cfg.activation, tp_axes=inner_tp)
-    y, aux = dispatch_combine_dense(x, slots, weights,
-                                    lambda r: expert_fn(r), ep)
+    if dep.dispatch == "ragged":
+        grouped_fn = partial(_expert_ffn_grouped, w_in=w_in, w_gate=w_gate,
+                             w_out=w_out, activation=cfg.activation,
+                             tp_axes=inner_tp, dep=dep)
+        y, aux = dispatch_combine_ragged(x, slots, weights, grouped_fn, ep)
+    else:
+        expert_fn = partial(_expert_ffn, w_in=w_in, w_gate=w_gate,
+                            w_out=w_out, activation=cfg.activation,
+                            tp_axes=inner_tp, use_fused=dep.use_fused_ffn)
+        y, aux = dispatch_combine_dense(x, slots, weights,
+                                        lambda r: expert_fn(r), ep)
     if dep.defer_tp_reduce and dep.tp_axes:
         # SSPerf P1: TP partial sums ride the combine a2a and reduce here on
         # [T_local, d] — k*cf-times less psum volume than inside the expert

@@ -101,15 +101,22 @@ class ElasticEPRuntime:
                  cost_model: Optional[RecoveryCostModel] = None,
                  warmup_model: Optional[WarmupCostModel] = None,
                  expert_load_ema: float = 0.9,
-                 base_throughput: float = 7200.0):
+                 base_throughput: float = 7200.0,
+                 dispatch: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.table = table
         if deployment is None:
             from repro.models.moe import local_deployment
             deployment = Deployment(
-                moe=local_deployment(table.num_slots, cfg.capacity_factor))
+                moe=local_deployment(table.num_slots, cfg.capacity_factor,
+                                     dispatch=dispatch or cfg.dispatch_mode))
+        elif dispatch is not None and dispatch != deployment.moe.dispatch:
+            raise ValueError(
+                f"dispatch={dispatch!r} conflicts with the provided "
+                f"deployment's mode {deployment.moe.dispatch!r}")
         self.dpl = deployment
+        self.dispatch = deployment.moe.dispatch
         self.clock = SimClock()
         self.detector = FailureDetector(table.world, self.clock)
         self.injector = FailureInjector(self.detector)

@@ -41,6 +41,7 @@ class ScenarioResult:
     name: str
     seed: int
     fixed_membership: bool
+    dispatch: str = "dense"
     coverage_loss_expected: bool = False
     timeline: list[dict] = field(default_factory=list)
     trace: list[dict] = field(default_factory=list)    # throughput samples
@@ -79,6 +80,7 @@ class ScenarioResult:
         return {
             "name": self.name,
             "fixed_membership": self.fixed_membership,
+            "dispatch": self.dispatch,
             "tokens_out": self.tokens_out,
             "requests_finished": self.requests_finished,
             "requests_failed": self.requests_failed,
@@ -116,9 +118,12 @@ def _jsonable(x):
 
 
 def build_scenario_runtime(scn: Scenario, *, seed: int = 0,
-                           arch: str = "mixtral-8x22b") -> ElasticEPRuntime:
+                           arch: str = "mixtral-8x22b",
+                           dispatch: str = "dense") -> ElasticEPRuntime:
     """A simulated EP instance shaped by the scenario (reduced config so the
-    compiled step is CPU-cheap; membership dynamics are full-fidelity)."""
+    compiled step is CPU-cheap; membership dynamics are full-fidelity).
+    ``dispatch`` selects the dense or ragged (dropless) layout — every
+    scenario invariant must hold on both."""
     cfg = get_config(arch).reduced()
     table = make_initial_membership(scn.world, cfg.moe.num_experts,
                                     scn.slots_per_rank)
@@ -127,7 +132,8 @@ def build_scenario_runtime(scn: Scenario, *, seed: int = 0,
     relaunch, init, load, capture = scn.warmup_s
     warm = WarmupCostModel(process_relaunch_s=relaunch, runtime_init_s=init,
                            weight_load_s=load, graph_capture_s=capture)
-    return ElasticEPRuntime(cfg, params, table, warmup_model=warm)
+    return ElasticEPRuntime(cfg, params, table, warmup_model=warm,
+                            dispatch=dispatch)
 
 
 def _min_live_replicas(rt: ElasticEPRuntime) -> int:
@@ -139,7 +145,7 @@ def _min_live_replicas(rt: ElasticEPRuntime) -> int:
 
 def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                  fixed_membership: bool = False, max_batch: int = 4,
-                 check_invariants: bool = True,
+                 check_invariants: bool = True, dispatch: str = "dense",
                  max_steps: int = 20_000) -> ScenarioResult:
     """Run one scenario to its horizon. ``scenario`` is a Scenario or a
     registered name."""
@@ -147,11 +153,12 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     scn.validate()
     t_wall = _walltime.perf_counter()
 
-    rt = build_scenario_runtime(scn, seed=seed, arch=arch)
+    rt = build_scenario_runtime(scn, seed=seed, arch=arch, dispatch=dispatch)
     eng = ServingEngine(rt, max_batch=max_batch, max_len=scn.max_new_tokens + 8,
                         fixed_membership=fixed_membership)
     res = ScenarioResult(name=scn.name, seed=seed,
                          fixed_membership=fixed_membership,
+                         dispatch=dispatch,
                          coverage_loss_expected=scn.expect_coverage_loss)
 
     # fail-stop events go to the injector up front; slow/restore are applied

@@ -62,6 +62,10 @@ class ServingEngine:
         self.rt = runtime
         cfg = runtime.cfg
         self.cfg = cfg
+        # dispatch layout of the compiled step ("dense" | "ragged"): fixed at
+        # engine construction — recovery/reintegration patch membership
+        # contents only, so the mode survives the whole fail/rejoin lifetime
+        self.dispatch = getattr(runtime.dpl.moe, "dispatch", "dense")
         self.kv = KVCacheManager(max_batch, max_len)
         self.sched = Scheduler(self.kv, max_retries=max_retries)
         self.caches = init_caches(cfg, max_batch, max_len, dtype)

@@ -14,6 +14,7 @@ from repro.core import (
     fixed_route,
     make_initial_membership,
 )
+from repro.core.elastic_moe import _bucket_positions, _bucket_positions_onehot
 
 
 def _membership(world, E, spr, failed=()):
@@ -141,6 +142,18 @@ def test_capacity_drop_semantics():
     kept = np.asarray(y).sum(-1) != 0
     np.testing.assert_allclose(np.asarray(y)[kept], np.asarray(x)[kept],
                                atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(N=st.integers(1, 200), S=st.integers(1, 16), seed=st.integers(0, 99))
+def test_bucket_positions_sort_matches_onehot(N, S, seed):
+    """The sort-based bucket-position computation must be bit-identical to
+    the one-hot cumsum reference it replaced (O(N) memory vs O(N*S))."""
+    rng = np.random.RandomState(seed)
+    flat = jnp.asarray(rng.randint(0, S, size=(N,)), jnp.int32)
+    got = _bucket_positions(flat, S)
+    want = _bucket_positions_onehot(flat, S)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 @settings(max_examples=25, deadline=None)

@@ -57,18 +57,54 @@ def test_fused_moe_ffn_sweep(S, R, d, de, act, gated, dtype):
                                np.asarray(want, np.float32), **tol)
 
 
-@pytest.mark.parametrize("sizes", [[64, 32, 0, 96], [32, 32, 32, 32],
-                                   [0, 0, 128, 0]])
+@pytest.mark.parametrize("sizes", [
+    # block-multiple sizes (the original contract)
+    [64, 32, 0, 96], [32, 32, 32, 32], [0, 0, 128, 0],
+    # ragged: zero-size groups and non-multiple-of-block_t boundaries
+    [5, 17, 0, 30], [1, 0, 63], [0, 0, 0, 7], [3], [129, 31, 40],
+    [31, 1, 1, 31],
+])
 def test_gmm_sweep(sizes):
     G, d, f = len(sizes), 64, 48
     T = int(sum(sizes))
-    key = jax.random.key(T)
+    key = jax.random.key(T + G)
     x = jax.random.normal(key, (T, d), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 1), (G, d, f)) / np.sqrt(d)
     got = gmm(x, w, jnp.asarray(sizes), block_t=32, block_k=32,
               interpret=True)
     want = ref.gmm_ref(x, w, jnp.asarray(sizes))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL32)
+
+
+def test_gmm_receive_buffer_slack_rows():
+    """Rows past sum(group_sizes) (static receive-buffer slack in the ragged
+    dispatch) are unspecified but must not corrupt the real rows."""
+    sizes = [10, 0, 12]
+    T_buf, d, f = 64, 32, 24
+    total = sum(sizes)
+    key = jax.random.key(7)
+    x = jax.random.normal(key, (T_buf, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, d, f)) / np.sqrt(d)
+    got = gmm(x, w, jnp.asarray(sizes), block_t=16, block_k=32,
+              interpret=True)
+    want = ref.gmm_ref(x[:total], w, jnp.asarray(sizes))
+    np.testing.assert_allclose(np.asarray(got)[:total], np.asarray(want),
+                               **TOL32)
+
+
+def test_gmm_traced_group_sizes_under_jit():
+    """group_sizes may be a traced value (the size exchange's output): one
+    compiled executable serves every load distribution."""
+    d, f, G = 48, 32, 4
+    key = jax.random.key(11)
+    x = jax.random.normal(key, (52, d), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (G, d, f)) / np.sqrt(d)
+    fn = jax.jit(lambda x, w, s: gmm(x, w, s, block_t=32, block_k=32,
+                                     interpret=True))
+    for sizes in ([5, 17, 0, 30], [52, 0, 0, 0], [13, 13, 13, 13]):
+        got = fn(x, w, jnp.asarray(sizes))
+        want = ref.gmm_ref(x, w, jnp.asarray(sizes))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL32)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -80,6 +80,19 @@ txt = fn.lower(x, p, ms2).compile().as_text()
 assert "all-to-all" in txt, "expected all-to-all over the EP axis"
 print("a2a present OK")
 
+# --- ragged (dropless) dispatch: distributed == local == dense ----------
+dep_rd = dataclasses.replace(dep_d, dispatch="ragged")
+dep_rl = dataclasses.replace(dep_l, dispatch="ragged")
+for label, table_ms in (("healthy", ms), ("degraded", ms2)):
+    yrd, _ = jax.jit(lambda x, p, m: moe_apply(cfg, p, x, m, dep_rd))(x, p, table_ms)
+    yrl, _ = jax.jit(lambda x, p, m: moe_apply(cfg, p, x, m, dep_rl))(x, p, table_ms)
+    ydd, _ = jax.jit(lambda x, p, m: moe_apply(cfg, p, x, m, dep_d))(x, p, table_ms)
+    e_dl = float(jnp.abs(yrd - yrl).max())
+    e_dd = float(jnp.abs(yrd - ydd).max())
+    assert e_dl < 1e-4, f"ragged {label} dist vs local mismatch {e_dl}"
+    assert e_dd < 1e-4, f"ragged {label} vs dense mismatch {e_dd}"
+    print(f"ragged {label} dist==local==dense OK", e_dl, e_dd)
+
 # --- seq-sharded LSE-merged decode == plain decode ------------------------
 acfg = dataclasses.replace(get_config("jamba-v0.1-52b").reduced(),
                            attention="gqa", attn_layer_period=1,

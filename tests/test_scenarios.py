@@ -264,10 +264,13 @@ def test_same_seed_identical_timeline():
     assert a.tokens_out == b.tokens_out
 
 
-def test_registry_e2e_invariants():
-    """Every registered scenario: validity at each step boundary, exactly one
-    compiled serve step, >= 1 live replica per expert throughout (or an
-    explicit coverage-loss event), and full reintegration by the horizon."""
+@pytest.mark.parametrize("dispatch", ["dense", "ragged"])
+def test_registry_e2e_invariants(dispatch):
+    """Every registered scenario, on BOTH dispatch layouts: validity at each
+    step boundary, exactly one compiled serve step, >= 1 live replica per
+    expert throughout (or an explicit coverage-loss event), and full
+    reintegration by the horizon. The ragged (dropless) step must honor the
+    identical recovery/revalidation contract — only the collectives differ."""
     expected_kinds = {
         "cascade_mid_recovery": "recovery_restart",
         "failure_during_warmup": "warmup_abort",
@@ -275,7 +278,7 @@ def test_registry_e2e_invariants():
         "straggler_degrades_then_dies": "straggler_mitigation",
     }
     for name in list_scenarios():
-        res = run_scenario(name)
+        res = run_scenario(name, dispatch=dispatch)
         scn = SCENARIOS[name]
         assert res.compile_count == 1, (name, res.compile_count)
         assert not res.validity_violations, (name, res.validity_violations[:3])
