@@ -39,11 +39,23 @@ def _dispatch_metrics(doc: dict) -> dict[str, Metric]:
 
 
 def _scenario_metrics(doc: dict) -> dict[str, Metric]:
+    """Per scenario x dispatch mode: tokens, downtime, the per-phase
+    recovery breakdown (detect/replan/repair-transfer/warmup/table-patch
+    seconds from the telemetry spans) and the restore-to-95%-throughput
+    time. Metric keys embed the dispatch mode so the dense and ragged rows
+    of one scenario track separate trajectories."""
     out: dict[str, Metric] = {}
     for row in doc.get("scenarios", []):
-        name = row["name"]
-        out[f"{name}/tokens_out"] = (float(row["tokens_out"]), "higher")
-        out[f"{name}/downtime_s"] = (float(row["downtime_s"]), "lower")
+        key = f"{row['name']}[{row.get('dispatch', 'dense')}]"
+        out[f"{key}/tokens_out"] = (float(row["tokens_out"]), "higher")
+        out[f"{key}/downtime_s"] = (float(row["downtime_s"]), "lower")
+        for ph, secs in (row.get("phases") or {}).items():
+            out[f"{key}/phase/{ph}_s"] = (float(secs), "lower")
+        r95 = row.get("restore_95_s", -1.0)
+        if r95 is not None and float(r95) >= 0:
+            # -1 means "never restored" (e.g. designed coverage loss): not a
+            # trajectory point, and comparing it as a magnitude is nonsense
+            out[f"{key}/restore_95_s"] = (float(r95), "lower")
     return out
 
 

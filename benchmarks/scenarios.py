@@ -1,15 +1,23 @@
 """Scenario-registry sweep: multi-failure serving trajectories vs the
 fixed-membership full-restart baseline.
 
-  PYTHONPATH=src python benchmarks/scenarios.py [--smoke] [--out PATH]
+  PYTHONPATH=src python benchmarks/scenarios.py [--smoke] [--modes both] \
+      [--out PATH]
   PYTHONPATH=src python -m benchmarks.scenarios --smoke
 
 Runs every registered fault scenario (``repro.core.scenarios``) through the
-deterministic scenario runner, pairs each with the full-restart baseline on
+deterministic scenario runner — by default under BOTH dispatch layouts
+(dense and ragged) — pairs each scenario with the full-restart baseline on
 the same schedule, and writes a ``BENCH_scenarios.json`` trajectory file:
 per-scenario tokens served, downtime, recovery/join counts, invariant
-status, and the throughput trace. ``--smoke`` runs a 3-scenario subset with
-a single baseline pair — the CI perf-trajectory artifact (< 5 min on CPU).
+status, the throughput trace, AND the phase telemetry the report generator
+consumes (per-incident spans, summed per-phase seconds, restore-to-95%
+time — see docs/recovery-lifecycle.md for the phase vocabulary).
+
+``--smoke`` runs a 3-scenario dense-only subset with a single baseline pair
+— the CI PR perf-trajectory artifact (< 5 min on CPU). The nightly job runs
+the full registry x both modes and renders it into REPORT.md via
+``python -m repro.launch.report`` (see docs/benchmarks.md).
 """
 from __future__ import annotations
 
@@ -29,7 +37,12 @@ SMOKE_SET = ["concurrent_multi_failure", "cascade_mid_recovery", "rejoin_storm"]
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sweep for CI: 3 scenarios, 1 baseline pair")
+                    help="tiny sweep for CI PRs: 3 scenarios, dense only, "
+                    "1 baseline pair")
+    ap.add_argument("--modes", choices=["dense", "ragged", "both"],
+                    default=None,
+                    help="dispatch layouts to sweep (default: dense for "
+                    "--smoke, both otherwise)")
     ap.add_argument("--out", default="BENCH_scenarios.json")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--arch", default="mixtral-8x22b")
@@ -38,9 +51,12 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from repro.core.scenarios import get_scenario, list_scenarios
+    from repro.obs.phases import validate_spans
     from repro.runtime.scenario_runner import run_scenario
 
     names = SMOKE_SET if args.smoke else list_scenarios()
+    mode_arg = args.modes or ("dense" if args.smoke else "both")
+    modes = ["dense", "ragged"] if mode_arg == "both" else [mode_arg]
     # smoke keeps one baseline pair so the elastic-vs-restart delta is still
     # in the trajectory without doubling the compile budget
     baseline_names = [] if args.no_baseline else (
@@ -48,44 +64,63 @@ def main(argv=None) -> int:
 
     t0 = time.time()
     rows = []
+    span_bad: list[str] = []
     print("name,us_per_call,derived")
     for name in names:
         scn = get_scenario(name)
-        res = run_scenario(scn, seed=args.seed, arch=args.arch)
-        row = res.summary()
-        row["trace"] = res.trace
-        row["timeline"] = res.timeline
-        if name in baseline_names:
-            base = run_scenario(scn, seed=args.seed, arch=args.arch,
-                                fixed_membership=True,
-                                check_invariants=False)
-            row["baseline"] = base.summary()
-            row["baseline"]["trace"] = base.trace
-        rows.append(row)
-        ok = "ok" if res.invariants_ok else "INVARIANT_VIOLATION"
-        print(f"scenario/{name}/downtime,{res.downtime_s*1e6:.0f},"
-              f"recoveries={res.recoveries}_rounds={res.recovery_rounds}"
-              f"_joins={res.joins}_aborts={res.warmup_aborts}_{ok}")
-        print(f"scenario/{name}/tokens,0,"
-              f"tokens_out={res.tokens_out}"
-              f"_finished={res.requests_finished}"
-              f"_dropped={res.requests_dropped}")
-        if "baseline" in row:
-            b = row["baseline"]
-            print(f"scenario/{name}/vs_restart,0,"
-                  f"elastic_downtime={res.downtime_s:.1f}s"
-                  f"_restart_downtime={b['downtime_s']:.1f}s"
-                  f"_token_ratio="
-                  f"{res.tokens_out / max(b['tokens_out'], 1):.2f}")
+        for mode in modes:
+            res = run_scenario(scn, seed=args.seed, arch=args.arch,
+                               dispatch=mode)
+            row = res.summary()
+            row["trace"] = res.trace
+            row["timeline"] = res.timeline
+            row["spans"] = res.spans
+            bad_spans = validate_spans(res.spans)
+            if bad_spans:
+                span_bad.append(f"{name}[{mode}]")
+            # the baseline's recovery path is dispatch-independent: pair it
+            # once per scenario, attached to the first mode's row
+            if name in baseline_names and mode == modes[0]:
+                base = run_scenario(scn, seed=args.seed, arch=args.arch,
+                                    fixed_membership=True,
+                                    check_invariants=False)
+                row["baseline"] = base.summary()
+                row["baseline"]["trace"] = base.trace
+            rows.append(row)
+            ok = "ok" if res.invariants_ok and not bad_spans \
+                else "INVARIANT_VIOLATION"
+            ph = row["phases"]
+            print(f"scenario/{name}[{mode}]/downtime,{res.downtime_s*1e6:.0f},"
+                  f"recoveries={res.recoveries}_rounds={res.recovery_rounds}"
+                  f"_joins={res.joins}_aborts={res.warmup_aborts}_{ok}")
+            print(f"scenario/{name}[{mode}]/phases,0,"
+                  f"detect={ph.get('detect', 0):.2f}"
+                  f"_replan={ph.get('replan', 0):.2f}"
+                  f"_xfer={ph.get('repair-transfer', 0):.3f}"
+                  f"_patch={ph.get('table-patch', 0):.2f}"
+                  f"_restore95={res.restore_95_s:.2f}s")
+            print(f"scenario/{name}[{mode}]/tokens,0,"
+                  f"tokens_out={res.tokens_out}"
+                  f"_finished={res.requests_finished}"
+                  f"_dropped={res.requests_dropped}")
+            if "baseline" in row:
+                b = row["baseline"]
+                print(f"scenario/{name}/vs_restart,0,"
+                      f"elastic_downtime={res.downtime_s:.1f}s"
+                      f"_restart_downtime={b['downtime_s']:.1f}s"
+                      f"_token_ratio="
+                      f"{res.tokens_out / max(b['tokens_out'], 1):.2f}")
 
-    bad = [r["name"] for r in rows
+    bad = [f"{r['name']}[{r['dispatch']}]" for r in rows
            if r["validity_violations"] or r["compile_count"] != 1
            or r["coverage_loss"] != r["coverage_loss_expected"]]
+    bad += span_bad
     out = {
         "meta": {
             "smoke": args.smoke,
             "arch": args.arch,
             "seed": args.seed,
+            "modes": modes,
             "scenario_count": len(names),
             "wall_s": round(time.time() - t0, 1),
             "invariant_failures": bad,
@@ -94,8 +129,8 @@ def main(argv=None) -> int:
     }
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"scenario/sweep,0,n={len(names)}_wall={out['meta']['wall_s']}s"
-          f"_wrote={args.out}")
+    print(f"scenario/sweep,0,n={len(names)}x{len(modes)}"
+          f"_wall={out['meta']['wall_s']}s_wrote={args.out}")
     if bad:
         print(f"scenario/sweep/FAILED,0,invariant_failures={bad}",
               file=sys.stderr)

@@ -7,6 +7,13 @@ for the small model, across a concurrency sweep. Paper claim: within 4.4%.
 """
 from __future__ import annotations
 
+import os
+import sys
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -59,7 +66,17 @@ def run(concurrencies=(8, 16, 32, 64), world: int = 16):
     return rows
 
 
-def main():
+def main(argv=None):
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="also write BENCH_static.json (consumed by "
+                    "`python -m repro.launch.report` for the steady-state "
+                    "overhead parity row)")
+    args = ap.parse_args(argv)
+
     rows = run()
     print("name,us_per_call,derived")
     worst = 0.0
@@ -71,6 +88,12 @@ def main():
               f"{r['fixed_us']:.1f},baseline")
     print(f"static_overhead/summary,0,worst_abs_overhead={worst:.2f}%"
           f"_paper_claim<=4.4%")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows,
+                       "worst_abs_overhead_pct": round(worst, 3)}, f,
+                      indent=1)
+        print(f"static_overhead/wrote,0,{args.out}")
     return rows
 
 

@@ -27,6 +27,24 @@ Two dispatch layouts:
            the inverse permutation with fp32 weights. Elastic semantics are
            identical: failed ranks receive zero traffic because no table
            entry points at them, and membership changes never recompile.
+
+Invariants BOTH layouts must uphold (asserted by tests/test_dispatch_modes
+and the registry-wide scenario tests; see docs/recovery-lifecycle.md and
+docs/dispatch-modes.md):
+
+  * **validity** — routing consults only the published membership arrays:
+    a slot whose rank's active bit is clear can never be a destination, so
+    a stale-in-flight table is impossible by construction;
+  * **zero recompilation** — membership arrays are traced *arguments* with
+    fixed shapes; fail/repair/rejoin rewrite contents only, so the
+    compiled dispatch/combine (and its collectives) survive every
+    transition — the paper's CUDA-graph-stability analogue;
+  * **coverage** — the routing tables are derived from a placement that
+    the EPLB guarantees covers every expert on active ranks; dispatch
+    never has to handle an unhosted expert (the runtime raises
+    CoverageLossError upstream instead);
+  * ragged additionally guarantees **dropless**: dropped_fraction == 0 on
+    any routing, enforced as a hard CI gate (never a trend).
 """
 from __future__ import annotations
 

@@ -18,6 +18,17 @@ Schedule DSL — one directive per line, ``#`` comments allowed::
 ``restore`` are applied by the runner when the SimClock crosses their time.
 Everything is derived from the schedule text + seed, so the same scenario
 always produces the same timeline.
+
+Invariant contract: every registered scenario must preserve, on BOTH
+dispatch layouts (dense and ragged), the three system invariants —
+**validity** (no routing entry targets an inactive rank), **zero
+recompilation** (one compiled serve step for the whole schedule) and
+**coverage** (>= 1 active replica per expert, or an *explicit*
+``coverage_loss`` event when the scenario is designed to lose it:
+``expect_coverage_loss=True``) — plus telemetry well-formedness (phase
+spans per docs/recovery-lifecycle.md). ``tests/test_scenarios.py``
+asserts all four across the registry; adding a scenario here is enough to
+put it under test, the benchmark sweep and the recovery report.
 """
 from __future__ import annotations
 

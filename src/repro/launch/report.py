@@ -1,0 +1,79 @@
+"""Render the recovery observability report from benchmark artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report \
+      [--scenarios BENCH_scenarios.json] [--static BENCH_static.json] \
+      [--out-dir report]
+  PYTHONPATH=src python -m repro.launch.report --selftest
+
+Reads the scenario-registry sweep (and, when present, the static-overhead
+sweep) and writes ``REPORT.md``, ``REPORT.json`` and the trajectory SVGs
+under ``--out-dir``. Deterministic: same artifacts in, same bytes out.
+``--selftest`` runs the generator on a built-in synthetic fixture and
+checks determinism + required sections without touching the filesystem —
+the CI docs check runs it with no dependencies installed (stdlib only).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenarios", default="BENCH_scenarios.json",
+                    help="scenario sweep artifact (benchmarks/scenarios.py)")
+    ap.add_argument("--static", default="BENCH_static.json",
+                    help="static-overhead artifact (optional; the parity row "
+                    "shows n/a when missing)")
+    ap.add_argument("--out-dir", default="report")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the deterministic synthetic fixture and exit")
+    args = ap.parse_args(argv)
+
+    from repro.obs.report import build_report, render_json, selftest
+
+    if args.selftest:
+        selftest()
+        print("report selftest ok (deterministic, all sections present)")
+        return 0
+
+    if not os.path.exists(args.scenarios):
+        print(f"missing scenario artifact {args.scenarios!r}; run "
+              f"`PYTHONPATH=src python benchmarks/scenarios.py` first",
+              file=sys.stderr)
+        return 2
+    with open(args.scenarios) as f:
+        doc = json.load(f)
+    static_doc = None
+    if args.static and os.path.exists(args.static):
+        with open(args.static) as f:
+            static_doc = json.load(f)
+
+    md, json_doc, svgs = build_report(doc, static_doc)
+    os.makedirs(os.path.join(args.out_dir, "svg"), exist_ok=True)
+    with open(os.path.join(args.out_dir, "REPORT.md"), "w") as f:
+        f.write(md)
+    with open(os.path.join(args.out_dir, "REPORT.json"), "w") as f:
+        f.write(render_json(json_doc))
+    for rel, svg in svgs.items():
+        with open(os.path.join(args.out_dir, rel), "w") as f:
+            f.write(svg)
+
+    counts = {s: sum(1 for p in json_doc["parity"] if p["status"] == s)
+              for s in ("PASS", "WARN", "FAIL")}
+    print(f"wrote {args.out_dir}/REPORT.md, REPORT.json, "
+          f"{len(svgs)} SVGs — parity: {counts['PASS']} pass, "
+          f"{counts['WARN']} warn (wall-time, not gated), "
+          f"{counts['FAIL']} fail")
+    n_fail = counts["FAIL"]
+    if json_doc["span_violations"]:
+        print(f"telemetry violations in "
+              f"{sorted(json_doc['span_violations'])}", file=sys.stderr)
+        return 1
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

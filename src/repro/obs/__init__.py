@@ -1,0 +1,21 @@
+"""Recovery observability: phase-aware telemetry + report generation.
+
+``repro.obs`` is deliberately dependency-free (stdlib only) so the report
+generator and docs selftest can run in environments without jax/numpy
+(e.g. the CI lint job). The runtime threads a :class:`PhaseClock` through
+the whole recovery path; ``repro.obs.report`` turns the resulting phase
+spans into ``REPORT.md`` / ``REPORT.json`` with paper-parity checks.
+
+The phase vocabulary is defined once, in ``repro.obs.phases.PHASES``, and
+documented prose-side in ``docs/recovery-lifecycle.md`` — the two must not
+drift (``tools/check_docs.py`` cross-checks them).
+"""
+from repro.obs.phases import (  # noqa: F401
+    ALL_PHASES,
+    BASELINE_PHASES,
+    PHASES,
+    ObsEvent,
+    PhaseClock,
+    PhaseSpan,
+    validate_spans,
+)

@@ -1,0 +1,370 @@
+"""Paper-parity report generator: BENCH artifacts -> REPORT.md / REPORT.json.
+
+Consumes the scenario-registry sweep (``BENCH_scenarios.json``, written by
+``benchmarks/scenarios.py``) plus, optionally, the static-overhead sweep
+(``BENCH_static.json``) and renders:
+
+  * per-scenario **phase-breakdown tables** (the telemetry spans recorded by
+    ``repro.obs.phases.PhaseClock`` across the recovery path),
+  * **trajectory SVGs** (throughput-restore curves with failure markers and
+    a stacked per-phase recovery bar chart — ``repro.obs.svg``, no deps),
+  * a **paper-parity table** comparing measured numbers against the paper's
+    headline figures with explicit pass/fail deltas.
+
+Everything is a pure function of the input artifacts: no timestamps, no
+environment probes, sorted iteration everywhere — generating twice from the
+same inputs yields byte-identical output (asserted by ``--selftest`` and
+the tier-1 tests). Stdlib only, so the CI lint job can run it.
+
+CLI: ``python -m repro.launch.report`` (see ``repro/launch/report.py``).
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.obs.phases import PHASES, validate_spans
+from repro.obs.svg import line_chart, phase_bars
+
+#: The paper's headline, time-shaped claims (abstract / Figs. 1, 9, 10, 11).
+#: Each entry: (paper value, unit, direction) where direction "max" means
+#: the measured value must stay at or below the paper's bound to PASS.
+PAPER_CLAIMS = {
+    "recovery_pause_s": (11.0, "s", "max"),
+    "reintegration_pause_s": (8.0, "s", "max"),
+    "restore_95_s": (52.0, "s", "max"),
+    "full_restart_outage_s": (348.0, "s", "ref"),
+    "steady_overhead_pct": (4.4, "%", "max"),
+}
+
+#: Claims measured in REAL wall time (not SimClock): on a contended CPU
+#: runner the delta is dominated by scheduling noise at reduced shapes, so
+#: exceeding the paper's bound reports WARN and never gates the exit code.
+SOFT_CLAIMS = frozenset({"steady_overhead_pct"})
+
+CLAIM_LABELS = {
+    "recovery_pause_s": "recovery pause (failure -> serving resumes)",
+    "reintegration_pause_s": "reintegration pause (join table patch)",
+    "restore_95_s": "throughput back to >= 95% of pre-fault",
+    "full_restart_outage_s": "fixed-membership full-restart outage",
+    "steady_overhead_pct": "steady-state overhead vs fixed membership",
+}
+
+#: Phases shown as table columns, in lifecycle order.
+_COLS = [p for p in PHASES if p != "rejoin"]
+
+
+def _rows(doc: dict) -> list[dict]:
+    return sorted(doc.get("scenarios", []),
+                  key=lambda r: (r.get("name", ""), r.get("dispatch", "")))
+
+
+def _elastic_rows(doc: dict) -> list[dict]:
+    return [r for r in _rows(doc) if not r.get("fixed_membership")]
+
+
+def _fmt(v, digits: int = 2) -> str:
+    if v is None:
+        return "n/a"
+    if isinstance(v, float):
+        return f"{v:.{digits}f}"
+    return str(v)
+
+
+# ---------------------------------------------------------------------------
+# Measurements (from spans — the telemetry layer is the source of truth)
+# ---------------------------------------------------------------------------
+
+def _incident_pauses(row: dict) -> list[float]:
+    """Critical-path pause per incident: detect + replan + repair-transfer."""
+    per: dict[int, float] = {}
+    for sp in row.get("spans", []):
+        if sp["phase"] in ("detect", "replan", "repair-transfer"):
+            per[sp["incident"]] = per.get(sp["incident"], 0.0) \
+                + sp["duration_s"]
+    return sorted(per.values())
+
+
+def _join_pauses(row: dict) -> list[float]:
+    return sorted(sp["duration_s"] for sp in row.get("spans", [])
+                  if sp["phase"] == "table-patch")
+
+
+def measure(doc: dict, static_doc: Optional[dict] = None) -> dict:
+    """Worst-case measured values for every paper claim, over the elastic
+    (non-coverage-loss) scenario rows."""
+    rows = [r for r in _elastic_rows(doc)
+            if not r.get("coverage_loss_expected")]
+    rec = [p for r in rows for p in _incident_pauses(r)]
+    join = [p for r in rows for p in _join_pauses(r)]
+    r95 = [r["restore_95_s"] for r in rows
+           if r.get("restore_95_s", -1.0) is not None
+           and r.get("restore_95_s", -1.0) >= 0]
+    restart = [b.get("downtime_s", 0.0)
+               for b in (r.get("baseline") for r in _rows(doc)) if b]
+    overhead = None
+    if static_doc and static_doc.get("rows"):
+        overhead = max(abs(x["overhead_pct"]) for x in static_doc["rows"])
+    return {
+        "recovery_pause_s": max(rec) if rec else None,
+        "reintegration_pause_s": max(join) if join else None,
+        "restore_95_s": max(r95) if r95 else None,
+        "full_restart_outage_s": max(restart) if restart else None,
+        "steady_overhead_pct": overhead,
+    }
+
+
+def parity_table(measured: dict) -> list[dict]:
+    out = []
+    for key, (paper, unit, direction) in PAPER_CLAIMS.items():
+        m = measured.get(key)
+        if m is None:
+            status, delta = "n/a", None
+        else:
+            delta = (m - paper) / paper * 100.0
+            if direction == "ref":
+                # the baseline is a modeled constant: parity means the model
+                # stays close to the paper's observation
+                status = "PASS" if abs(delta) <= 10.0 else "FAIL"
+            else:
+                status = "PASS" if m <= paper else "FAIL"
+            if status == "FAIL" and key in SOFT_CLAIMS:
+                status = "WARN"          # wall-time claim: report, don't gate
+        out.append({"claim": key, "label": CLAIM_LABELS[key],
+                    "paper": paper, "unit": unit, "measured": m,
+                    "delta_pct": None if delta is None else round(delta, 1),
+                    "status": status})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SVG trajectories
+# ---------------------------------------------------------------------------
+
+def _scenario_svg(row: dict) -> str:
+    series = [("elastic", [(s["t"], s["tokens_per_s"])
+                           for s in row.get("trace", [])])]
+    base = row.get("baseline")
+    if base and base.get("trace"):
+        series.append(("full restart", [(s["t"], s["tokens_per_s"])
+                                        for s in base["trace"]]))
+    markers = [(e["t"], "fail") for e in row.get("timeline", [])
+               if e["kind"] == "failure"]
+    markers += [(e["t"], "join") for e in row.get("timeline", [])
+                if e["kind"] == "join_batch"]
+    return line_chart(
+        f"{row['name']} [{row.get('dispatch', 'dense')}] — "
+        f"throughput restore", series,
+        x_label="simulated time (s)", y_label="tokens/s", markers=markers)
+
+
+def _phase_bar_svg(doc: dict) -> str:
+    rows = []
+    for r in _elastic_rows(doc):
+        phases = r.get("phases") or {}
+        segs = [(p, phases.get(p, 0.0)) for p in _COLS if phases.get(p, 0.0)]
+        if segs:
+            rows.append((f"{r['name']} [{r.get('dispatch', 'dense')}]", segs))
+    return phase_bars("Recovery time by phase (summed per scenario)", rows,
+                      x_label="seconds (critical-path + warmup)",
+                      phase_order=_COLS)
+
+
+# ---------------------------------------------------------------------------
+# Assembly
+# ---------------------------------------------------------------------------
+
+def build_report(doc: dict, static_doc: Optional[dict] = None,
+                 *, svg_dir: str = "svg"
+                 ) -> tuple[str, dict, dict[str, str]]:
+    """Render (REPORT.md text, REPORT.json document, {relative path: svg})."""
+    rows = _rows(doc)
+    measured = measure(doc, static_doc)
+    parity = parity_table(measured)
+    span_violations = {f"{r['name']}[{r.get('dispatch', 'dense')}]": v
+                       for r in rows
+                       for v in [validate_spans(r.get("spans", []))] if v}
+
+    svgs: dict[str, str] = {}
+    for r in _elastic_rows(doc):
+        svgs[f"{svg_dir}/{r['name']}_{r.get('dispatch', 'dense')}.svg"] = \
+            _scenario_svg(r)
+    svgs[f"{svg_dir}/phase_breakdown.svg"] = _phase_bar_svg(doc)
+
+    md = ["# Recovery observability report", ""]
+    meta = doc.get("meta", {})
+    md += [f"Scenario registry sweep: **{meta.get('scenario_count', '?')} "
+           f"scenarios** (arch `{meta.get('arch', '?')}`, seed "
+           f"{meta.get('seed', '?')}, modes "
+           f"{meta.get('modes', ['dense'])}); every number below is derived "
+           "from the deterministic SimClock, so this report is reproducible "
+           "byte-for-byte from the same artifacts.",
+           "",
+           "Phase vocabulary and the recovery state machine are defined in "
+           "[docs/recovery-lifecycle.md](../docs/recovery-lifecycle.md); "
+           "artifact schemas in [docs/benchmarks.md](../docs/benchmarks.md).",
+           ""]
+
+    md += ["## Paper parity", "",
+           "| claim | paper | measured | delta | status |",
+           "|---|---|---|---|---|"]
+    for p in parity:
+        delta = "n/a" if p["delta_pct"] is None else f"{p['delta_pct']:+.1f}%"
+        md.append(f"| {p['label']} | {_fmt(p['paper'])} {p['unit']} | "
+                  f"{_fmt(p['measured'])} {p['unit'] if p['measured'] is not None else ''} | "
+                  f"{delta} | {p['status']} |")
+    md += ["",
+           "`max` claims PASS when the measured worst case stays at or "
+           "below the paper's figure; the full-restart row is a modeled "
+           "reference (PASS within 10%). `n/a` = the input artifact for "
+           "that claim was not supplied. The steady-state overhead is the "
+           "one REAL wall-time claim (everything else rides the "
+           "deterministic SimClock): on a contended CPU runner it reports "
+           "WARN instead of FAIL, since the paper's 4.4% is a GPU serving "
+           "measurement that CPU scheduling noise at reduced shapes "
+           "cannot reproduce.", ""]
+
+    md += ["## Per-scenario phase breakdown", "",
+           "All seconds are simulated critical-path time except `warmup` "
+           "(background, off the serving path). `restore95` is measured "
+           "from the last injected failure to the first step back at >= "
+           "95% of pre-fault throughput.", "",
+           "| scenario | dispatch | " + " | ".join(_COLS)
+           + " | downtime | restore95 | tokens |",
+           "|---|---|" + "---|" * (len(_COLS) + 3)]
+    for r in _elastic_rows(doc):
+        phases = r.get("phases") or {}
+        cells = " | ".join(_fmt(phases.get(p, 0.0)) for p in _COLS)
+        r95 = r.get("restore_95_s", -1.0)
+        md.append(f"| {r['name']} | {r.get('dispatch', 'dense')} | {cells} | "
+                  f"{_fmt(r.get('downtime_s'))} | "
+                  f"{_fmt(r95) if r95 is not None and r95 >= 0 else 'n/a'} | "
+                  f"{r.get('tokens_out', 0)} |")
+    md += ["", f"![phase breakdown]({svg_dir}/phase_breakdown.svg)", ""]
+
+    md += ["## Throughput-restore trajectories", "",
+           "Elastic (blue) vs the fixed-membership full-restart baseline "
+           "(orange) where the sweep paired one; dashed red markers are "
+           "injected failures / batched joins.", ""]
+    for r in _elastic_rows(doc):
+        name = f"{r['name']}_{r.get('dispatch', 'dense')}"
+        md.append(f"![{name}]({svg_dir}/{name}.svg)")
+    md.append("")
+
+    md += ["## Telemetry health", ""]
+    if span_violations:
+        md.append("**Span well-formedness violations detected:**")
+        for k, v in sorted(span_violations.items()):
+            md.append(f"- `{k}`: {'; '.join(v[:3])}")
+    else:
+        md.append("All phase spans well-nested and monotonic across every "
+                  "scenario (validated by `repro.obs.phases.validate_spans`).")
+    md.append("")
+
+    json_doc = {
+        "meta": {k: meta.get(k) for k in
+                 ("arch", "seed", "scenario_count", "modes", "smoke")},
+        "parity": parity,
+        "measured": measured,
+        "span_violations": span_violations,
+        "scenarios": [{
+            "name": r["name"],
+            "dispatch": r.get("dispatch", "dense"),
+            "fixed_membership": bool(r.get("fixed_membership")),
+            "phases": r.get("phases") or {},
+            "downtime_s": r.get("downtime_s"),
+            "restore_95_s": r.get("restore_95_s", -1.0),
+            "tokens_out": r.get("tokens_out", 0),
+            "recoveries": r.get("recoveries", 0),
+            "joins": r.get("joins", 0),
+            "incident_pauses_s": [round(p, 6) for p in _incident_pauses(r)],
+            "join_pauses_s": [round(p, 6) for p in _join_pauses(r)],
+        } for r in rows],
+    }
+    return "\n".join(md) + "\n", json_doc, svgs
+
+
+def render_json(json_doc: dict) -> str:
+    return json.dumps(json_doc, indent=1, sort_keys=True) + "\n"
+
+
+# ---------------------------------------------------------------------------
+# Selftest (run by CI's docs check: fast, no deps, no files written)
+# ---------------------------------------------------------------------------
+
+def _synthetic_doc() -> dict:
+    """A deterministic two-scenario fixture shaped like the real sweep."""
+    def spans(inc0=0):
+        return [
+            {"incident": inc0, "phase": "detect", "t_start": 1.0,
+             "t_end": 2.5, "duration_s": 1.5, "step_start": 3, "step_end": 3,
+             "active_fraction": 0.875, "meta": {"ranks": [2]}},
+            {"incident": inc0, "phase": "replan", "t_start": 2.5,
+             "t_end": 3.3, "duration_s": 0.8, "step_start": 3, "step_end": 3,
+             "active_fraction": 0.875, "meta": {"round": 1}},
+            {"incident": inc0, "phase": "repair-transfer", "t_start": 3.3,
+             "t_end": 3.4, "duration_s": 0.1, "step_start": 3, "step_end": 3,
+             "active_fraction": 0.875, "meta": {"round": 1}},
+            {"incident": inc0, "phase": "warmup", "t_start": 3.4,
+             "t_end": 8.4, "duration_s": 5.0, "step_start": 3, "step_end": 40,
+             "active_fraction": 0.875, "meta": {"rank": 2}},
+            {"incident": inc0, "phase": "table-patch", "t_start": 8.4,
+             "t_end": 8.8, "duration_s": 0.4, "step_start": 40, "step_end": 40,
+             "active_fraction": 1.0, "meta": {"ranks": [2]}},
+            {"incident": inc0, "phase": "rejoin", "t_start": 8.8,
+             "t_end": 8.8, "duration_s": 0.0, "step_start": 40, "step_end": 40,
+             "active_fraction": 1.0, "meta": {"rank": 2}},
+        ]
+
+    def row(name, dispatch):
+        return {
+            "name": name, "dispatch": dispatch, "fixed_membership": False,
+            "coverage_loss_expected": False, "tokens_out": 900,
+            "downtime_s": 2.4, "restore_95_s": 7.9, "recoveries": 1,
+            "joins": 1,
+            "phases": {"detect": 1.5, "replan": 0.8, "repair-transfer": 0.1,
+                       "warmup": 5.0, "table-patch": 0.4},
+            "spans": spans(),
+            "trace": [{"t": 0.5, "tokens_per_s": 80.0, "active_fraction": 1.0},
+                      {"t": 2.5, "tokens_per_s": 0.0, "active_fraction": 0.875},
+                      {"t": 5.0, "tokens_per_s": 70.0, "active_fraction": 0.875},
+                      {"t": 9.0, "tokens_per_s": 80.0, "active_fraction": 1.0}],
+            "timeline": [{"t": 1.0, "kind": "failure", "detail": {}},
+                         {"t": 8.8, "kind": "join_batch", "detail": {}}],
+            "baseline": {"downtime_s": 348.0, "tokens_out": 120,
+                         "trace": [{"t": 0.5, "tokens_per_s": 80.0,
+                                    "active_fraction": 1.0},
+                                   {"t": 349.0, "tokens_per_s": 80.0,
+                                    "active_fraction": 1.0}]},
+        }
+
+    return {"meta": {"arch": "mixtral-8x22b", "seed": 0, "scenario_count": 2,
+                     "modes": ["dense", "ragged"], "smoke": False},
+            "scenarios": [row("synthetic_single_failure", "dense"),
+                          row("synthetic_single_failure", "ragged")]}
+
+
+def selftest() -> None:
+    """Determinism + completeness smoke: build twice, byte-compare, and
+    assert the sections the acceptance criteria require are present."""
+    doc = _synthetic_doc()
+    static = {"rows": [{"concurrency": 8, "overhead_pct": 2.1}]}
+    a_md, a_json, a_svg = build_report(doc, static)
+    b_md, b_json, b_svg = build_report(_synthetic_doc(), static)
+    assert a_md == b_md, "REPORT.md not deterministic"
+    assert render_json(a_json) == render_json(b_json), \
+        "REPORT.json not deterministic"
+    assert a_svg.keys() == b_svg.keys() and all(
+        a_svg[k] == b_svg[k] for k in a_svg), "SVGs not deterministic"
+    for section in ("## Paper parity", "## Per-scenario phase breakdown",
+                    "## Throughput-restore trajectories",
+                    "## Telemetry health"):
+        assert section in a_md, f"missing section {section!r}"
+    for col in _COLS:
+        assert f" {col} " in a_md or f" {col} |" in a_md, \
+            f"missing phase column {col!r}"
+    assert all(p["status"] == "PASS" for p in a_json["parity"]), \
+        a_json["parity"]
+    assert not a_json["span_violations"]
+    for svg in a_svg.values():
+        assert svg.startswith("<svg") and svg.rstrip().endswith("</svg>")

@@ -1,0 +1,201 @@
+"""Tiny deterministic SVG charts for the recovery report — no plotting deps.
+
+Two forms, chosen for the data's job (see docs/benchmarks.md):
+
+  * :func:`line_chart` — change-over-time: throughput-restore trajectories
+    around an incident (elastic vs full-restart baseline), with vertical
+    event markers for failures/recoveries/joins;
+  * :func:`phase_bars` — magnitude by category: stacked horizontal
+    per-phase recovery breakdown across scenarios.
+
+Colors follow a validated categorical palette (fixed slot order, never
+cycled); event markers use the reserved status red and never double as a
+series color. Every chart the report emits is also rendered as a Markdown
+table next to it, so identity is never color-alone.
+
+Output is pure-function deterministic: same inputs, same bytes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+# Categorical palette, light mode, fixed slot order (validated: worst
+# adjacent CVD dE 9.1, normal-vision dE 19.6; see docs/benchmarks.md).
+SERIES = ("#2a78d6", "#eb6834", "#1baf7a", "#eda100", "#e87ba4")
+STATUS_SERIOUS = "#e34948"          # reserved for failure markers only
+SURFACE = "#fcfcfb"
+TEXT_PRIMARY = "#0b0b0b"
+TEXT_SECONDARY = "#52514e"
+GRID = "#e7e6e2"
+
+_FONT = ("font-family=\"system-ui, -apple-system, 'Segoe UI', sans-serif\"")
+
+
+def _fmt(v: float) -> str:
+    """Stable short number formatting for labels and coordinates."""
+    return f"{v:.6g}"
+
+
+def _nice_ticks(lo: float, hi: float, n: int = 4) -> list[float]:
+    """<= n+1 round tick values covering [lo, hi]."""
+    if hi <= lo:
+        hi = lo + 1.0
+    raw = (hi - lo) / max(n, 1)
+    mag = 10 ** len(str(int(raw))) / 10 if raw >= 1 else 1.0
+    while mag > raw:
+        mag /= 10
+    step = next(s * mag for s in (1, 2, 5, 10) if s * mag >= raw)
+    t0 = int(lo / step) * step
+    ticks = []
+    t = t0
+    while t <= hi + step * 1e-9:
+        if t >= lo - step * 1e-9:
+            ticks.append(round(t, 10))
+        t += step
+    return ticks or [lo, hi]
+
+
+def _esc(s: str) -> str:
+    return (str(s).replace("&", "&amp;").replace("<", "&lt;")
+            .replace(">", "&gt;").replace('"', "&quot;"))
+
+
+def line_chart(title: str,
+               series: Sequence[tuple[str, Sequence[tuple[float, float]]]],
+               *, x_label: str, y_label: str,
+               markers: Sequence[tuple[float, str]] = (),
+               width: int = 680, height: int = 280) -> str:
+    """A one-axis line chart: ``series`` is [(label, [(x, y), ...]), ...]
+    drawn with the fixed categorical slot order; ``markers`` are vertical
+    status-red dashed lines [(x, label), ...]."""
+    ml, mr, mt, mb = 56, 16, 34, 42
+    pw, ph = width - ml - mr, height - mt - mb
+    xs = [x for _, pts in series for x, _ in pts] or [0.0, 1.0]
+    ys = [y for _, pts in series for _, y in pts] or [0.0, 1.0]
+    xs += [m[0] for m in markers]
+    x0, x1 = min(xs), max(xs)
+    y0, y1 = 0.0, max(ys) * 1.06 or 1.0
+    if x1 <= x0:
+        x1 = x0 + 1.0
+
+    def X(x):
+        return ml + (x - x0) / (x1 - x0) * pw
+
+    def Y(y):
+        return mt + ph - (y - y0) / (y1 - y0) * ph
+
+    out = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+           f'height="{height}" viewBox="0 0 {width} {height}" '
+           f'role="img" aria-label="{_esc(title)}">',
+           f'<rect width="{width}" height="{height}" fill="{SURFACE}"/>',
+           f'<text x="{ml}" y="20" {_FONT} font-size="13" font-weight="600" '
+           f'fill="{TEXT_PRIMARY}">{_esc(title)}</text>']
+    # recessive grid + axis tick labels
+    for t in _nice_ticks(y0, y1):
+        y = Y(t)
+        out.append(f'<line x1="{ml}" y1="{_fmt(y)}" x2="{ml + pw}" '
+                   f'y2="{_fmt(y)}" stroke="{GRID}" stroke-width="1"/>')
+        out.append(f'<text x="{ml - 6}" y="{_fmt(y + 3.5)}" {_FONT} '
+                   f'font-size="10" text-anchor="end" '
+                   f'fill="{TEXT_SECONDARY}">{_fmt(t)}</text>')
+    for t in _nice_ticks(x0, x1, 6):
+        x = X(t)
+        out.append(f'<text x="{_fmt(x)}" y="{height - mb + 14}" {_FONT} '
+                   f'font-size="10" text-anchor="middle" '
+                   f'fill="{TEXT_SECONDARY}">{_fmt(t)}</text>')
+    out.append(f'<text x="{ml + pw / 2}" y="{height - 8}" {_FONT} '
+               f'font-size="11" text-anchor="middle" '
+               f'fill="{TEXT_SECONDARY}">{_esc(x_label)}</text>')
+    out.append(f'<text x="14" y="{mt + ph / 2}" {_FONT} font-size="11" '
+               f'text-anchor="middle" fill="{TEXT_SECONDARY}" '
+               f'transform="rotate(-90 14 {_fmt(mt + ph / 2)})">'
+               f'{_esc(y_label)}</text>')
+    # event markers: status red, dashed, labeled at the top
+    for x, label in markers:
+        px = X(x)
+        out.append(f'<line x1="{_fmt(px)}" y1="{mt}" x2="{_fmt(px)}" '
+                   f'y2="{mt + ph}" stroke="{STATUS_SERIOUS}" '
+                   f'stroke-width="1" stroke-dasharray="3 3"/>')
+        out.append(f'<text x="{_fmt(px + 3)}" y="{mt + 10}" {_FONT} '
+                   f'font-size="9" fill="{STATUS_SERIOUS}">'
+                   f'{_esc(label)}</text>')
+    # series: 2px lines, fixed slot order
+    for i, (label, pts) in enumerate(series):
+        color = SERIES[i % len(SERIES)]
+        path = " ".join(f"{_fmt(X(x))},{_fmt(Y(y))}" for x, y in pts)
+        out.append(f'<polyline points="{path}" fill="none" stroke="{color}" '
+                   f'stroke-width="2" stroke-linejoin="round"/>')
+    # legend (>= 2 series; a single series is named by the title)
+    if len(series) > 1:
+        lx = ml + pw - 10
+        for i, (label, _) in enumerate(reversed(series)):
+            j = len(series) - 1 - i
+            tw = 8 * len(label) + 18
+            lx -= tw
+            out.append(f'<rect x="{lx}" y="{mt - 12}" width="9" height="9" '
+                       f'rx="2" fill="{SERIES[j % len(SERIES)]}"/>')
+            out.append(f'<text x="{lx + 13}" y="{mt - 4}" {_FONT} '
+                       f'font-size="10" fill="{TEXT_SECONDARY}">'
+                       f'{_esc(label)}</text>')
+    out.append("</svg>")
+    return "\n".join(out) + "\n"
+
+
+def phase_bars(title: str,
+               rows: Sequence[tuple[str, Sequence[tuple[str, float]]]],
+               *, x_label: str, phase_order: Optional[Sequence[str]] = None,
+               width: int = 680, bar_h: int = 16) -> str:
+    """Stacked horizontal bars: ``rows`` is [(row label, [(phase, seconds),
+    ...]), ...]. Phase -> color uses the fixed slot order of
+    ``phase_order`` (legend always present; 2px surface gap between
+    segments)."""
+    phases = list(phase_order or [])
+    for _, segs in rows:
+        for ph, _ in segs:
+            if ph not in phases:
+                phases.append(ph)
+    color = {ph: SERIES[i % len(SERIES)] for i, ph in enumerate(phases)}
+    ml, mr, mt, mb = 170, 60, 46, 34
+    ph_gap = 10
+    height = mt + mb + len(rows) * (bar_h + ph_gap)
+    pw = width - ml - mr
+    total_max = max((sum(s for _, s in segs) for _, segs in rows),
+                    default=1.0) or 1.0
+
+    out = [f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+           f'height="{height}" viewBox="0 0 {width} {height}" '
+           f'role="img" aria-label="{_esc(title)}">',
+           f'<rect width="{width}" height="{height}" fill="{SURFACE}"/>',
+           f'<text x="16" y="20" {_FONT} font-size="13" font-weight="600" '
+           f'fill="{TEXT_PRIMARY}">{_esc(title)}</text>']
+    # legend row under the title
+    lx = 16
+    for ph in phases:
+        out.append(f'<rect x="{lx}" y="{mt - 16}" width="9" height="9" '
+                   f'rx="2" fill="{color[ph]}"/>')
+        out.append(f'<text x="{lx + 13}" y="{mt - 8}" {_FONT} font-size="10" '
+                   f'fill="{TEXT_SECONDARY}">{_esc(ph)}</text>')
+        lx += 8 * len(ph) + 30
+    for i, (label, segs) in enumerate(rows):
+        y = mt + i * (bar_h + ph_gap)
+        out.append(f'<text x="{ml - 8}" y="{_fmt(y + bar_h - 4)}" {_FONT} '
+                   f'font-size="10" text-anchor="end" '
+                   f'fill="{TEXT_PRIMARY}">{_esc(label)}</text>')
+        x = float(ml)
+        total = 0.0
+        for ph, secs in segs:
+            if secs <= 0:
+                continue
+            w = secs / total_max * pw
+            out.append(f'<rect x="{_fmt(x)}" y="{y}" width="{_fmt(max(w - 2, 0.5))}" '
+                       f'height="{bar_h}" rx="2" fill="{color[ph]}"/>')
+            x += w
+            total += secs
+        out.append(f'<text x="{_fmt(x + 6)}" y="{_fmt(y + bar_h - 4)}" '
+                   f'{_FONT} font-size="10" fill="{TEXT_SECONDARY}">'
+                   f'{_fmt(round(total, 2))}s</text>')
+    out.append(f'<text x="{ml + pw / 2}" y="{height - 10}" {_FONT} '
+               f'font-size="11" text-anchor="middle" '
+               f'fill="{TEXT_SECONDARY}">{_esc(x_label)}</text>')
+    out.append("</svg>")
+    return "\n".join(out) + "\n"

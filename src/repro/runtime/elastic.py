@@ -1,11 +1,30 @@
 """ElasticEPRuntime — the live EP instance (paper Fig. 5/6 end to end).
 
 Couples the core substrate (membership, EPLB, 3-tier repair, backup,
-detector, deferred-join controller) with the compiled serving step. The
-compiled executable is built ONCE; every failure/reintegration only rewrites
-the membership arrays and the slot-weight contents — the runtime records the
-jit cache size so tests can assert no healthy-rank recompilation (the
-paper's no-CUDA-graph-recapture property).
+detector, deferred-join controller) with the compiled serving step.
+
+Invariants this runtime maintains across every fail/repair/rejoin cycle
+(asserted at each step boundary by the scenario runner and tier-1 tests):
+
+  * **validity** — after every membership transition the peer set, expert
+    placement and graph-visible routing tables satisfy
+    ``repro.core.validity.check``: no routing entry targets an inactive
+    rank, and the published device tables mirror the host `PeerTable`;
+  * **zero recompilation** — the compiled executable is built ONCE;
+    failures and reintegrations only rewrite membership array *contents*
+    and slot-weight *contents*, never shapes, so healthy ranks never
+    recompile (the paper's no-CUDA-graph-recapture property; tests assert
+    the jit cache size stays at 1);
+  * **coverage** — every logical expert keeps >= 1 active replica, or the
+    runtime records an explicit ``coverage_loss`` event and raises
+    ``CoverageLossError`` instead of serving unhosted experts.
+
+Telemetry: every transition is recorded through ``self.obs``
+(``repro.obs.phases.PhaseClock``) as phase-tagged spans/events using the
+canonical phase vocabulary (detect, replan, repair-transfer, warmup,
+table-patch, rejoin — defined in docs/recovery-lifecycle.md). The flat
+``timeline`` list is kept in lockstep for backward compatibility; both are
+fed by the single ``record()`` path.
 
 On this CPU container the EP world is *simulated*: the slot axis lives on
 one device and a deterministic SimClock + RecoveryCostModel supply the
@@ -45,6 +64,7 @@ from repro.core.repair import (
 )
 from repro.core.validity import check as validity_check
 from repro.models.model import Deployment
+from repro.obs.phases import PhaseClock
 
 
 @dataclass
@@ -118,6 +138,10 @@ class ElasticEPRuntime:
         self.dpl = deployment
         self.dispatch = deployment.moe.dispatch
         self.clock = SimClock()
+        # phase-aware telemetry: every record()/span rides this one recorder
+        # (scenario name is stamped by the scenario runner)
+        self.obs = PhaseClock(self.clock.now, dispatch=self.dispatch,
+                              sample_active=self.active_fraction)
         self.detector = FailureDetector(table.world, self.clock)
         self.injector = FailureInjector(self.detector)
         self.controller = ReintegrationController(self.clock, warmup_model)
@@ -136,7 +160,8 @@ class ElasticEPRuntime:
         self.straggler = StragglerMonitor(table.world)
         self.rank_slowdown = np.ones(table.world)   # sim: injected slowness
         self.membership: MembershipState = table.to_device()
-        self.timeline: list[TimelineEvent] = [TimelineEvent(0.0, "start")]
+        self.timeline: list[TimelineEvent] = []
+        self.record("start")
         self.events_log: list[str] = []
         self.recompile_count = 0        # must stay 0 across fail/rejoin
         self._repair_jit_cache = {}
@@ -155,8 +180,13 @@ class ElasticEPRuntime:
     # ------------------------------------------------------------------
     # Telemetry
     # ------------------------------------------------------------------
-    def record(self, kind: str, **detail):
-        self.timeline.append(TimelineEvent(self.clock.now(), kind, detail))
+    def record(self, kind: str, _incident: Optional[int] = None, **detail):
+        """Single emission path: the enriched event (incident/phase/step/
+        active-fraction tags) goes to ``self.obs``; the flat ``timeline``
+        keeps the legacy shape for existing consumers. ``_incident`` tags
+        events emitted outside any phase span."""
+        ev = self.obs.emit(kind, _incident=_incident, **detail)
+        self.timeline.append(TimelineEvent(ev.t, kind, detail))
 
     def active_fraction(self) -> float:
         return float(self.table.active_mask.mean())
@@ -204,7 +234,14 @@ class ElasticEPRuntime:
             for r in ev.ranks:
                 if self.controller.is_recovering(r):
                     self.controller.restart_warmup(r)
-                    self.record("warmup_abort", rank=r)
+                    # telemetry: the in-flight warmup span ends aborted and a
+                    # fresh one opens under the SAME incident (same saga)
+                    self.obs.close_span(("warmup", r), aborted=True)
+                    self.obs.open_span(("warmup", r), "warmup",
+                                       incident=self.obs.incident_of(r),
+                                       rank=r, restarted=True)
+                    self.record("warmup_abort",
+                                _incident=self.obs.incident_of(r), rank=r)
                     aborted.append(r)
         return aborted
 
@@ -219,12 +256,15 @@ class ElasticEPRuntime:
         """Restore live-EP validity on the surviving ranks; composes follow-on
         failures detected while the repair is in flight. Returns the
         accumulated phase breakdown (paper Fig. 10 left)."""
-        self.record("failure", ranks=list(failed))
+        incident = self.obs.incident("failure", ranks=failed)
+        self.record("failure", _incident=incident, ranks=list(failed))
         pending = [r for r in failed if self.table.entries[r].active]
         phases = {"detect": self.cost_model.detect_s,
                   "drain": self.cost_model.drain_s,
                   "coordinate": 0.0, "weight_transfer": 0.0}
-        self.clock.advance(phases["detect"] + phases["drain"])
+        with self.obs.span("detect", incident, ranks=sorted(failed),
+                           drain_s=phases["drain"]):
+            self.clock.advance(phases["detect"] + phases["drain"])
 
         plan = None
         rounds = 0
@@ -233,17 +273,19 @@ class ElasticEPRuntime:
             for r in pending:
                 if self.table.entries[r].active:
                     self.table.deactivate(r)   # peer-set repair: clear bits
+                self.obs.bind_rank(r, incident)  # cascade casualties compose
             pending = []
             old_s2e = self.table.slot_to_expert.copy()
 
             if not self.cfg.is_moe:
                 # dense arch: membership substrate only (no experts to repair)
-                self.clock.advance(self.cost_model.coordinate_s)
+                with self.obs.span("replan", incident, round=rounds):
+                    self.clock.advance(self.cost_model.coordinate_s)
                 phases["coordinate"] += self.cost_model.coordinate_s
                 pending = self._poll_mid_recovery()
                 if pending:
-                    self.record("recovery_restart", ranks=sorted(pending),
-                                round=rounds)
+                    self.record("recovery_restart", _incident=incident,
+                                ranks=sorted(pending), round=rounds)
                     continue
                 break
 
@@ -254,7 +296,8 @@ class ElasticEPRuntime:
                 load=self.expert_load, prev_slot_to_expert=old_s2e,
                 max_replicas=self.table.max_replicas)
             if res.infeasible:
-                self.record("coverage_loss", reason=res.reason)
+                self.record("coverage_loss", _incident=incident,
+                            reason=res.reason)
                 raise CoverageLossError(f"cannot shrink: {res.reason}")
             slots = moe_slot_leaves(self.cfg, self.params)
             bytes_per_slot = int(sum(
@@ -267,12 +310,14 @@ class ElasticEPRuntime:
 
             # coordination phase (EPLB + metadata broadcast); a failure that
             # lands here invalidates the plan -> restart the round
-            self.clock.advance(self.cost_model.coordinate_s)
+            with self.obs.span("replan", incident, round=rounds,
+                               tier2=len(plan.tier2), tier3=len(plan.tier3)):
+                self.clock.advance(self.cost_model.coordinate_s)
             phases["coordinate"] += self.cost_model.coordinate_s
             pending = self._poll_mid_recovery()
             if pending:
-                self.record("recovery_restart", ranks=sorted(pending),
-                            round=rounds)
+                self.record("recovery_restart", _incident=incident,
+                            ranks=sorted(pending), round=rounds)
                 continue
 
             # execution: the transfers are in flight for the window the cost
@@ -283,30 +328,36 @@ class ElasticEPRuntime:
             # a follow-up round re-covers whatever the casualty hosted.
             ph = self.cost_model.recovery_seconds(
                 plan, self.table.world, self.table.slots_per_rank)
-            self.clock.advance(ph["weight_transfer"])
-            phases["weight_transfer"] += ph["weight_transfer"]
-            pending = self._poll_mid_recovery()
-            if pending:
-                for r in pending:
-                    self.table.deactivate(r)
-                self.record("recovery_restart", ranks=sorted(pending),
-                            round=rounds)
-                n_t3 = len(plan.tier3)
-                plan = revalidate_plan(plan, res.slot_to_expert,
-                                       self.table.active_mask,
-                                       self.table.slots_per_rank, self.backup)
-                if len(plan.tier3) > n_t3:
-                    self.record("transfer_escalation",
-                                escalated=len(plan.tier3) - n_t3)
-                    extra = self.cost_model.recovery_seconds(
-                        plan, self.table.world,
-                        self.table.slots_per_rank)["weight_transfer"] \
-                        - ph["weight_transfer"]
-                    if extra > 0:
-                        self.clock.advance(extra)
-                        phases["weight_transfer"] += extra
+            with self.obs.span("repair-transfer", incident, round=rounds) \
+                    as xfer_span:
+                self.clock.advance(ph["weight_transfer"])
+                phases["weight_transfer"] += ph["weight_transfer"]
+                pending = self._poll_mid_recovery()
+                if pending:
+                    for r in pending:
+                        self.table.deactivate(r)
+                    self.record("recovery_restart", ranks=sorted(pending),
+                                round=rounds)
+                    n_t3 = len(plan.tier3)
+                    plan = revalidate_plan(plan, res.slot_to_expert,
+                                           self.table.active_mask,
+                                           self.table.slots_per_rank,
+                                           self.backup)
+                    if len(plan.tier3) > n_t3:
+                        self.record("transfer_escalation",
+                                    escalated=len(plan.tier3) - n_t3)
+                        extra = self.cost_model.recovery_seconds(
+                            plan, self.table.world,
+                            self.table.slots_per_rank)["weight_transfer"] \
+                            - ph["weight_transfer"]
+                        if extra > 0:
+                            self.clock.advance(extra)
+                            phases["weight_transfer"] += extra
+                xfer_span.meta.update(tier2_bytes=plan.tier2_bytes,
+                                      tier3_bytes=plan.tier3_bytes)
             if plan.unrecoverable:
-                self.record("coverage_loss", experts=sorted(plan.unrecoverable))
+                self.record("coverage_loss", _incident=incident,
+                            experts=sorted(plan.unrecoverable))
                 raise CoverageLossError(
                     f"experts {sorted(plan.unrecoverable)} lost every live "
                     f"replica and backup copy")
@@ -325,7 +376,7 @@ class ElasticEPRuntime:
 
         phases["total"] = sum(phases.values())
         phases["rounds"] = rounds
-        self.record("recovery_done", phases=phases,
+        self.record("recovery_done", _incident=incident, phases=phases,
                     mix=plan.source_mix() if plan else {},
                     tier2_bytes=plan.tier2_bytes if plan else 0,
                     tier3_bytes=plan.tier3_bytes if plan else 0)
@@ -335,6 +386,9 @@ class ElasticEPRuntime:
             if (not self.table.entries[r].active
                     and not self.controller.is_recovering(r)):
                 self.controller.schedule_relaunch(r)
+                self.obs.open_span(("warmup", r), "warmup",
+                                   incident=self.obs.incident_of(r, incident),
+                                   rank=r)
         return phases
 
     # ------------------------------------------------------------------
@@ -383,37 +437,46 @@ class ElasticEPRuntime:
         return ready
 
     def _join_batch(self, ranks: list[int]) -> None:
-        old_s2e = self.table.slot_to_expert.copy()
+        # telemetry: each rejoiner's background warmup span ends now (it hit
+        # JOIN_READY); the batched table patch is ONE critical-path span
         for rank in ranks:
-            self.detector.mark_reachable(rank)
-            self.table.reactivate(rank)  # refresh peer entry (endpoint epoch)
-        if self.cfg.is_moe:
-            res = eplb_place(
-                self.cfg.moe.num_experts, self.table.world,
-                self.table.slots_per_rank, self.table.active_mask,
-                load=self.expert_load, prev_slot_to_expert=old_s2e,
-                max_replicas=self.table.max_replicas)
-            slots = moe_slot_leaves(self.cfg, self.params)
-            bytes_per_slot = int(sum(
-                np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
-                for l in slots.values()))
-            plan = plan_repair(old_s2e, res.slot_to_expert,
-                               self.table.active_mask,
-                               self.table.slots_per_rank, self.backup,
-                               bytes_per_slot=bytes_per_slot)
-            new_leaves = apply_repair(slots, plan, self.backup)
-            self.params = set_moe_slot_leaves(self.params, new_leaves)
-            self.table.set_placement(res.slot_to_expert)
-        self.membership = self.table.to_device()
-        rep = validity_check(self.table, self.membership,
-                             reachable=self.detector.known_reachable())
-        assert rep.valid, rep.violations
-        self.clock.advance(self.cost_model.join_patch_s)
+            self.obs.close_span(("warmup", rank))
+        incident = self.obs.incident_of(ranks[0], -1)
+        old_s2e = self.table.slot_to_expert.copy()
+        with self.obs.span("table-patch", incident, ranks=sorted(ranks)):
+            for rank in ranks:
+                self.detector.mark_reachable(rank)
+                self.table.reactivate(rank)  # refresh entry (endpoint epoch)
+            if self.cfg.is_moe:
+                res = eplb_place(
+                    self.cfg.moe.num_experts, self.table.world,
+                    self.table.slots_per_rank, self.table.active_mask,
+                    load=self.expert_load, prev_slot_to_expert=old_s2e,
+                    max_replicas=self.table.max_replicas)
+                slots = moe_slot_leaves(self.cfg, self.params)
+                bytes_per_slot = int(sum(
+                    np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
+                    for l in slots.values()))
+                plan = plan_repair(old_s2e, res.slot_to_expert,
+                                   self.table.active_mask,
+                                   self.table.slots_per_rank, self.backup,
+                                   bytes_per_slot=bytes_per_slot)
+                new_leaves = apply_repair(slots, plan, self.backup)
+                self.params = set_moe_slot_leaves(self.params, new_leaves)
+                self.table.set_placement(res.slot_to_expert)
+            self.membership = self.table.to_device()
+            rep = validity_check(self.table, self.membership,
+                                 reachable=self.detector.known_reachable())
+            assert rep.valid, rep.violations
+            self.clock.advance(self.cost_model.join_patch_s)
         for rank in ranks:
             self.controller.complete_join(rank)
-            self.record("join", rank=rank)
+            self.record("join", _incident=self.obs.incident_of(rank, incident),
+                        rank=rank)
+            self.obs.mark("rejoin", self.obs.incident_of(rank, incident),
+                          rank=rank)
         if len(ranks) > 1:
-            self.record("join_batch", ranks=sorted(ranks),
+            self.record("join_batch", _incident=incident, ranks=sorted(ranks),
                         patch_s=self.cost_model.join_patch_s)
 
     # ------------------------------------------------------------------

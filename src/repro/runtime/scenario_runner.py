@@ -10,9 +10,16 @@ core invariants at EVERY engine-step boundary:
   * every logical expert keeps >= 1 active replica — or the scenario records
     a coverage-loss event instead of silently serving garbage.
 
-Same scenario + same seed => bit-identical timeline (asserted by tests);
-``fixed_membership=True`` runs the same schedule against the full-restart
-baseline for side-by-side trajectories.
+Each run also harvests the runtime's phase telemetry
+(``repro.obs.phases``): every recovery incident's spans (detect, replan,
+repair-transfer, warmup, table-patch, rejoin — see
+docs/recovery-lifecycle.md), summed per-phase seconds, and the
+restore-to-95%-throughput time the paper reports — the inputs of the
+``python -m repro.launch.report`` paper-parity report.
+
+Same scenario + same seed => bit-identical timeline AND span list (asserted
+by tests); ``fixed_membership=True`` runs the same schedule against the
+full-restart baseline for side-by-side trajectories.
 """
 from __future__ import annotations
 
@@ -64,6 +71,11 @@ class ScenarioResult:
     sim_duration_s: float = 0.0
     wall_s: float = 0.0
     steps: int = 0
+    # phase telemetry (repro.obs): spans per incident, summed seconds per
+    # phase, and time from the last failure to >= 95% of pre-fault throughput
+    spans: list[dict] = field(default_factory=list)
+    phase_totals: dict = field(default_factory=dict)
+    restore_95_s: float = -1.0      # -1 = never restored (or no failure)
 
     @property
     def invariants_ok(self) -> bool:
@@ -99,6 +111,9 @@ class ScenarioResult:
             "sim_duration_s": round(self.sim_duration_s, 3),
             "wall_s": round(self.wall_s, 2),
             "steps": self.steps,
+            "phases": {k: round(float(v), 6)
+                       for k, v in sorted(self.phase_totals.items())},
+            "restore_95_s": round(self.restore_95_s, 6),
         }
 
 
@@ -132,8 +147,10 @@ def build_scenario_runtime(scn: Scenario, *, seed: int = 0,
     relaunch, init, load, capture = scn.warmup_s
     warm = WarmupCostModel(process_relaunch_s=relaunch, runtime_init_s=init,
                            weight_load_s=load, graph_capture_s=capture)
-    return ElasticEPRuntime(cfg, params, table, warmup_model=warm,
-                            dispatch=dispatch)
+    rt = ElasticEPRuntime(cfg, params, table, warmup_model=warm,
+                          dispatch=dispatch)
+    rt.obs.scenario = scn.name      # telemetry context: scenario tag
+    return rt
 
 
 def _min_live_replicas(rt: ElasticEPRuntime) -> int:
@@ -141,6 +158,29 @@ def _min_live_replicas(rt: ElasticEPRuntime) -> int:
     if not e2s:
         return -1
     return min(len(slots) for slots in e2s.values())
+
+
+def _restore_95_s(timeline: list[dict], trace: list[dict]) -> float:
+    """Seconds from the LAST injected failure to the first trace sample back
+    at >= 95% of the pre-fault steady-state throughput on a fully restored
+    instance (the paper's time-to-95% metric, Fig. 1). -1.0 when the
+    scenario never restores (coverage loss) or never fails."""
+    fails = [e["t"] for e in timeline
+             if e["kind"] in ("failure", "full_restart_begin")]
+    if not fails:
+        return -1.0
+    steady = max((s["tokens_per_s"] for s in trace if s["t"] < fails[0]),
+                 default=0.0)
+    if steady <= 0:
+        steady = max((s["tokens_per_s"] for s in trace), default=0.0)
+    if steady <= 0:
+        return -1.0
+    t_last = fails[-1]
+    for s in trace:
+        if (s["t"] > t_last and s["active_fraction"] >= 1.0
+                and s["tokens_per_s"] >= 0.95 * steady):
+            return s["t"] - t_last
+    return -1.0
 
 
 def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
@@ -212,9 +252,19 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                                         _min_live_replicas(rt))
 
     # -- harvest ------------------------------------------------------------
+    rt.obs.finalize()        # close warmups cut off by the horizon
     res.compile_count = eng.compile_count()
+    res.spans = [_jsonable(sp.to_dict()) for sp in rt.obs.spans]
+    res.phase_totals = {k: round(float(v), 6)
+                        for k, v in sorted(rt.obs.phase_totals().items())}
+    # the timeline is serialized from the ENRICHED obs events (kept in
+    # lockstep with rt.timeline by the single record() path), so every
+    # event carries its incident/phase/step/active-fraction tags
     res.timeline = [{"t": round(float(e.t), 6), "kind": e.kind,
-                     "detail": _jsonable(e.detail)} for e in rt.timeline]
+                     "incident": e.incident, "phase": e.phase,
+                     "step": e.step,
+                     "active_fraction": round(float(e.active_fraction), 6),
+                     "detail": _jsonable(e.detail)} for e in rt.obs.events]
     res.trace = [{"t": round(float(s.t), 6),
                   "tokens_per_s": round(float(s.tokens_per_s), 3),
                   "active_fraction": float(s.active_fraction)}
@@ -247,6 +297,7 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     res.requests_dropped = st.dropped
     res.final_active_fraction = rt.active_fraction()
     res.sim_duration_s = rt.clock.now()
+    res.restore_95_s = _restore_95_s(res.timeline, res.trace)
     res.wall_s = _walltime.perf_counter() - t_wall
     return res
 

@@ -125,6 +125,7 @@ class ServingEngine:
     def step(self) -> int:
         """One engine iteration. Returns tokens produced."""
         rt = self.rt
+        rt.obs.tick()      # telemetry: events/spans carry the step index
         # --- fault handling (between forward passes, paper §3.1): one pump
         # drains every pending control transition — possibly several
         # overlapping failures and a batch of joins — in event order. ---
@@ -193,15 +194,21 @@ class ServingEngine:
         return len(produced)
 
     def _full_restart(self, failed):
-        """Fixed-membership baseline: one long outage, then full capacity."""
+        """Fixed-membership baseline: one long outage, then full capacity.
+        Telemetry-wise the whole rebuild is a single ``full-restart`` span —
+        the baseline has no phases to break down, which is the point."""
         rt = self.rt
-        rt.record("full_restart_begin", ranks=list(failed))
-        rt.clock.advance(self.restart_model.total_s)
-        for r in failed:
-            rt.detector.mark_reachable(r)
-            rt.table.reactivate(r)
-        rt.membership = rt.table.to_device()
-        rt.record("full_restart_done", seconds=self.restart_model.total_s)
+        incident = rt.obs.incident("full-restart", ranks=failed)
+        rt.record("full_restart_begin", _incident=incident,
+                  ranks=list(failed))
+        with rt.obs.span("full-restart", incident, ranks=list(failed)):
+            rt.clock.advance(self.restart_model.total_s)
+            for r in failed:
+                rt.detector.mark_reachable(r)
+                rt.table.reactivate(r)
+            rt.membership = rt.table.to_device()
+        rt.record("full_restart_done", _incident=incident,
+                  seconds=self.restart_model.total_s)
 
     # ------------------------------------------------------------------
     def run(self, *, until: Optional[float] = None,

@@ -262,15 +262,21 @@ def test_same_seed_identical_timeline():
     assert a.timeline == b.timeline
     assert a.trace == b.trace
     assert a.tokens_out == b.tokens_out
+    assert a.spans == b.spans
+    assert a.phase_totals == b.phase_totals
+    assert a.restore_95_s == b.restore_95_s
 
 
 @pytest.mark.parametrize("dispatch", ["dense", "ragged"])
 def test_registry_e2e_invariants(dispatch):
     """Every registered scenario, on BOTH dispatch layouts: validity at each
     step boundary, exactly one compiled serve step, >= 1 live replica per
-    expert throughout (or an explicit coverage-loss event), and full
-    reintegration by the horizon. The ragged (dropless) step must honor the
-    identical recovery/revalidation contract — only the collectives differ."""
+    expert throughout (or an explicit coverage-loss event), full
+    reintegration by the horizon, and well-nested/monotonic phase telemetry
+    spans (docs/recovery-lifecycle.md). The ragged (dropless) step must
+    honor the identical recovery/revalidation contract — only the
+    collectives differ."""
+    from repro.obs.phases import ALL_PHASES, validate_spans
     expected_kinds = {
         "cascade_mid_recovery": "recovery_restart",
         "failure_during_warmup": "warmup_abort",
@@ -295,3 +301,12 @@ def test_registry_e2e_invariants(dispatch):
         kinds = {e["kind"] for e in res.timeline}
         if name in expected_kinds:
             assert expected_kinds[name] in kinds, (name, sorted(kinds))
+        # telemetry: spans well-nested and monotonic on every scenario and
+        # both dispatch modes; phase totals use the canonical vocabulary
+        bad_spans = validate_spans(res.spans)
+        assert not bad_spans, (name, dispatch, bad_spans[:3])
+        assert set(res.phase_totals) <= set(ALL_PHASES), name
+        if not scn.expect_coverage_loss:
+            assert {"detect", "replan", "warmup",
+                    "table-patch"} <= set(res.phase_totals), name
+            assert res.restore_95_s > 0, (name, dispatch)

@@ -1,0 +1,85 @@
+"""Fast docs check: internal links resolve + the phase vocabulary in
+docs/recovery-lifecycle.md matches repro.obs.phases (code and prose must
+not drift).
+
+  python tools/check_docs.py        # stdlib only, < 1 s
+
+Run by the CI lint job next to `python -m repro.launch.report --selftest`.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Markdown files whose relative links must resolve.
+DOC_GLOBS = ["README.md", "ROADMAP.md", "docs"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+
+
+def _md_files() -> list[str]:
+    out = []
+    for entry in DOC_GLOBS:
+        path = os.path.join(ROOT, entry)
+        if os.path.isdir(path):
+            out += sorted(os.path.join(path, f) for f in os.listdir(path)
+                          if f.endswith(".md"))
+        elif os.path.exists(path):
+            out.append(path)
+    return out
+
+
+def check_links() -> list[str]:
+    bad = []
+    for md in _md_files():
+        base = os.path.dirname(md)
+        with open(md) as f:
+            text = f.read()
+        for m in _LINK.finditer(text):
+            target = m.group(1).strip()
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            if not os.path.exists(os.path.join(base, target)):
+                bad.append(f"{os.path.relpath(md, ROOT)}: broken link "
+                           f"-> {m.group(1)}")
+    return bad
+
+
+def check_phase_vocabulary() -> list[str]:
+    """The canonical phase list lives in BOTH repro.obs.phases.ALL_PHASES
+    and docs/recovery-lifecycle.md; flag any drift."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.obs.phases import ALL_PHASES
+    doc = os.path.join(ROOT, "docs", "recovery-lifecycle.md")
+    with open(doc) as f:
+        text = f.read()
+    bad = [f"docs/recovery-lifecycle.md: phase `{ph}` (from "
+           f"repro.obs.phases) is undocumented"
+           for ph in ALL_PHASES if f"`{ph}`" not in text]
+    # and the prose must not define phases the code doesn't know: every
+    # `phase` cell of the definitions table must be canonical
+    table = re.findall(r"^\| `([a-z-]+)` \|", text, re.MULTILINE)
+    bad += [f"docs/recovery-lifecycle.md: table defines unknown phase "
+            f"`{ph}`" for ph in table if ph not in ALL_PHASES]
+    return bad
+
+
+def main() -> int:
+    bad = check_links() + check_phase_vocabulary()
+    if bad:
+        for line in bad:
+            print(f"DOCS CHECK FAILED: {line}", file=sys.stderr)
+        return 1
+    print(f"docs check ok: {len(_md_files())} files, links + phase "
+          f"vocabulary consistent")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
