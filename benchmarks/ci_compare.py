@@ -40,8 +40,10 @@ def _dispatch_metrics(doc: dict) -> dict[str, Metric]:
 
 def _scenario_metrics(doc: dict) -> dict[str, Metric]:
     """Per scenario x dispatch mode: tokens, downtime, the per-phase
-    recovery breakdown (detect/replan/repair-transfer/warmup/table-patch
-    seconds from the telemetry spans) and the restore-to-95%-throughput
+    breakdown (detect/replan/repair-transfer/warmup/table-patch seconds
+    from the telemetry spans, PLUS the planned-transition pauses `drain`
+    and `scale-down` — a drain pause regressing past tolerance fails the
+    build exactly like a recovery pause) and the restore-to-95%-throughput
     time. Metric keys embed the dispatch mode so the dense and ragged rows
     of one scenario track separate trajectories."""
     out: dict[str, Metric] = {}

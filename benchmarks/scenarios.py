@@ -31,7 +31,11 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-SMOKE_SET = ["concurrent_multi_failure", "cascade_mid_recovery", "rejoin_storm"]
+# the smoke set covers one concurrent-fault, one cascade, one join-storm and
+# one planned-maintenance scenario, so the PR trajectory job tracks drain
+# pauses next to recovery pauses (docs/recovery-lifecycle.md)
+SMOKE_SET = ["concurrent_multi_failure", "cascade_mid_recovery",
+             "rejoin_storm", "rolling_maintenance_drain"]
 
 
 def main(argv=None) -> int:
@@ -98,7 +102,15 @@ def main(argv=None) -> int:
                   f"_replan={ph.get('replan', 0):.2f}"
                   f"_xfer={ph.get('repair-transfer', 0):.3f}"
                   f"_patch={ph.get('table-patch', 0):.2f}"
+                  f"_drain={ph.get('drain', 0):.2f}"
+                  f"_scaledown={ph.get('scale-down', 0):.2f}"
                   f"_restore95={res.restore_95_s:.2f}s")
+            if res.drains or res.scale_downs or res.scale_ups:
+                print(f"scenario/{name}[{mode}]/planned,0,"
+                      f"drains={res.drains}_undrains={res.undrains}"
+                      f"_scaledown={res.scale_downs}_scaleup={res.scale_ups}"
+                      f"_preempted={res.requests_preempted}"
+                      f"_epoch={res.final_epoch}")
             print(f"scenario/{name}[{mode}]/tokens,0,"
                   f"tokens_out={res.tokens_out}"
                   f"_finished={res.requests_finished}"

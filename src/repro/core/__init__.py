@@ -42,13 +42,25 @@ from repro.core.scenarios import (
     parse_schedule,
     register,
 )
+from repro.core.transitions import (
+    ControlPlane,
+    ElasticPolicy,
+    FullRestartCostModel,
+    FullRestartPolicy,
+    MembershipTransaction,
+    TransitionAborted,
+    TransitionPolicy,
+)
 from repro.core.validity import ValidityReport, check
 
 __all__ = [
-    "Action", "BackupStore", "CoverageLossError", "EPContext",
-    "FailureDetector", "FailureInjector", "MembershipState", "PeerTable",
-    "RankState", "RecoveryCostModel", "ReintegrationController", "RepairPlan",
-    "Scenario", "SimClock", "ValidityReport", "WarmupCostModel",
+    "Action", "BackupStore", "ControlPlane", "CoverageLossError", "EPContext",
+    "ElasticPolicy", "FailureDetector", "FailureInjector",
+    "FullRestartCostModel", "FullRestartPolicy", "MembershipState",
+    "MembershipTransaction", "PeerTable", "RankState", "RecoveryCostModel",
+    "ReintegrationController", "RepairPlan", "Scenario", "SimClock",
+    "TransitionAborted", "TransitionPolicy", "ValidityReport",
+    "WarmupCostModel",
     "apply_repair", "check", "dispatch_bytes_model", "dispatch_combine_dense",
     "dispatch_combine_ragged", "elastic_route",
     "eplb_place", "expert_load_from_route", "fixed_route", "format_schedule",

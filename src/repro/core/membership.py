@@ -79,6 +79,9 @@ class PeerEntry:
 
     rank: int
     active: bool = True
+    drained: bool = False          # planned departure (maintenance drain /
+                                   # scale-down): inactive but deliberate, so
+                                   # the relaunch controller leaves it alone
     reachability: str = "ici"      # "ici" (intra-pod) | "dcn" (inter-pod)
     endpoint_epoch: int = 0        # bumped when metadata is re-exchanged
     last_heartbeat: float = 0.0
@@ -105,15 +108,24 @@ class PeerTable:
         self.version = 0
 
     # -- membership transitions --------------------------------------------
-    def deactivate(self, rank: int) -> None:
-        """Failure: clear the active bit (paper §4.1 'in-place update')."""
-        self.entries[rank].active = False
+    # NOTE: the runtime never calls these directly anymore — every runtime
+    # mutation is staged on a clone by repro.core.transitions and published
+    # by MembershipTransaction.commit, which stamps ``version`` with the
+    # committed epoch. The per-call bumps below keep standalone PeerTable
+    # use (tests, tools) monotonic.
+    def deactivate(self, rank: int, *, drained: bool = False) -> None:
+        """Failure or planned drain: clear the active bit (paper §4.1
+        'in-place update'). ``drained`` marks a deliberate departure."""
+        e = self.entries[rank]
+        e.active = False
+        e.drained = drained
         self.version += 1
 
     def reactivate(self, rank: int) -> None:
         """Reintegration: refresh metadata and set the bit (paper Fig. 8)."""
         e = self.entries[rank]
         e.active = True
+        e.drained = False
         e.endpoint_epoch += 1
         self.version += 1
 
@@ -129,6 +141,15 @@ class PeerTable:
 
     def active_ranks(self) -> list[int]:
         return [r for r in range(self.world) if self.entries[r].active]
+
+    def drained_ranks(self) -> list[int]:
+        return [r for r in range(self.world) if self.entries[r].drained]
+
+    def live_ranks(self) -> list[int]:
+        """Ranks whose process is (believed) up: active serving ranks plus
+        drained ranks idling for maintenance — both keep heartbeating."""
+        return [r for r in range(self.world)
+                if self.entries[r].active or self.entries[r].drained]
 
     def rank_of_slot(self, slot: int) -> int:
         return slot // self.slots_per_rank

@@ -59,18 +59,28 @@ def plan_repair(
     slots_per_rank: int,
     backup: Optional[BackupStore] = None,
     bytes_per_slot: int = 0,
+    source_active: Optional[np.ndarray] = None,
 ) -> RepairPlan:
+    """``active`` gates transfer *destinations*; ``source_active`` (defaults
+    to ``active``) gates Tier-2 *sources*. A planned drain passes the
+    pre-transition mask as ``source_active`` so the departing rank — still
+    alive during the transfer window, unlike a fault casualty — hands its
+    uniquely-hosted experts over GPU-to-GPU instead of forcing Tier-3 DRAM
+    reloads."""
     num_slots = len(new_slot_to_expert)
     active = np.asarray(active, bool)
+    source_active = active if source_active is None \
+        else np.asarray(source_active, bool)
 
     def rank_of(slot: int) -> int:
         return slot // slots_per_rank
 
-    # Where does each expert still live, on *active* ranks, under the OLD map?
+    # Where does each expert still live, on *source-live* ranks, under the
+    # OLD map?
     live_sources: dict[int, list[int]] = {}
     for s, e in enumerate(old_slot_to_expert):
         e = int(e)
-        if e >= 0 and active[rank_of(s)]:
+        if e >= 0 and source_active[rank_of(s)]:
             live_sources.setdefault(e, []).append(s)
 
     plan = RepairPlan(num_slots=num_slots, bytes_per_slot=bytes_per_slot)
@@ -87,7 +97,7 @@ def plan_repair(
             plan.tier1.append(s)                              # Tier 1
             continue
         srcs = [x for x in live_sources.get(e, ())
-                if active[rank_of(x)]]                        # atomic re-check
+                if source_active[rank_of(x)]]                 # atomic re-check
         if srcs:
             i = rr.get(e, 0)
             src = srcs[i % len(srcs)]

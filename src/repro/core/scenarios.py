@@ -13,11 +13,18 @@ Schedule DSL — one directive per line, ``#`` comments allowed::
     @1.0  fail 2 5        # fail-stop ranks 2 and 5 at t=1.0s
     @2.0  slow 3 x3.0     # rank 3 starts running 3.0x slower (straggler)
     @14.0 restore 3       # rank 3 back to nominal speed
+    @4.0  drain 1         # planned maintenance drain of rank 1
+    @12.0 undrain 1       # bring the drained rank back
+    @5.0  scale down 6 7  # elastic shrink: decommission ranks 6 and 7
+    @20.0 scale up 6 7    # elastic regrow: relaunch + deferred join
 
-``fail`` actions are fed to the FailureInjector up front; ``slow`` and
-``restore`` are applied by the runner when the SimClock crosses their time.
-Everything is derived from the schedule text + seed, so the same scenario
-always produces the same timeline.
+``fail`` actions are fed to the FailureInjector up front; every other op
+is applied by the runner when the SimClock crosses its time — planned
+transitions (``drain``/``undrain``/``scale``) are requested through the
+runtime's ControlPlane and land at the next serving-step boundary via the
+transactional commit path (``repro.core.transitions``). Everything is
+derived from the schedule text + seed, so the same scenario always
+produces the same timeline.
 
 Invariant contract: every registered scenario must preserve, on BOTH
 dispatch layouts (dense and ragged), the three system invariants —
@@ -35,18 +42,23 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Iterable, Optional
 
-VALID_OPS = ("fail", "slow", "restore")
+VALID_OPS = ("fail", "slow", "restore", "drain", "undrain", "scale")
+SCALE_DIRECTIONS = ("down", "up")
 
 
 @dataclass(frozen=True)
 class Action:
     t: float
-    op: str                      # "fail" | "slow" | "restore"
+    op: str                      # one of VALID_OPS
     ranks: tuple[int, ...]
     factor: float = 1.0          # slowdown multiplier (op == "slow")
+    direction: str = ""          # "down" | "up"       (op == "scale")
 
     def render(self) -> str:
-        line = f"@{self.t:g} {self.op} {' '.join(str(r) for r in self.ranks)}"
+        head = f"@{self.t:g} {self.op}"
+        if self.op == "scale":
+            head += f" {self.direction}"
+        line = f"{head} {' '.join(str(r) for r in self.ranks)}"
         if self.op == "slow":
             line += f" x{self.factor:g}"
         return line
@@ -77,7 +89,15 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
                 f"line {lineno}: op must be one of {VALID_OPS}, got {raw!r}")
         op = parts[1]
         factor = 1.0
+        direction = ""
         rank_toks = parts[2:]
+        if op == "scale":
+            if not rank_toks or rank_toks[0] not in SCALE_DIRECTIONS:
+                raise ValueError(
+                    f"line {lineno}: 'scale' needs a direction "
+                    f"{SCALE_DIRECTIONS} in {raw!r}")
+            direction = rank_toks[0]
+            rank_toks = rank_toks[1:]
         if op == "slow":
             if not rank_toks or not rank_toks[-1].startswith("x"):
                 raise ValueError(
@@ -98,7 +118,8 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
             raise ValueError(f"line {lineno}: bad rank in {raw!r}") from None
         if any(r < 0 for r in ranks):
             raise ValueError(f"line {lineno}: negative rank in {raw!r}")
-        actions.append(Action(t=t, op=op, ranks=ranks, factor=factor))
+        actions.append(Action(t=t, op=op, ranks=ranks, factor=factor,
+                              direction=direction))
     # stable sort: ties keep source order, so parsing is fully deterministic
     actions.sort(key=lambda a: a.t)
     return tuple(actions)
@@ -133,6 +154,19 @@ class Scenario:
     @property
     def actions(self) -> tuple[Action, ...]:
         return parse_schedule(self.schedule)
+
+    @property
+    def has_fault(self) -> bool:
+        """True when the schedule injects at least one fail-stop (as
+        opposed to a purely planned drain/scale schedule)."""
+        return any(a.op == "fail" for a in self.actions)
+
+    @property
+    def has_planned(self) -> bool:
+        """True when the schedule issues planned transitions
+        (drain/undrain/scale) through the control plane."""
+        return any(a.op in ("drain", "undrain", "scale")
+                   for a in self.actions)
 
     def validate(self) -> None:
         for a in self.actions:
@@ -257,6 +291,70 @@ register(Scenario(
         @1.0  fail 0
         @13.0 fail 2
         @25.0 fail 4
+    """,
+    horizon_s=45.0,
+))
+
+# -- planned transitions (ISSUE 4): the same transactional substrate that
+# -- absorbs faults serves deliberate elasticity. A drain/undrain pair is
+# -- the maintenance primitive; scale down/up is the capacity primitive.
+# -- Timing notes: a drain pauses only for coordinate (~0.8 s) + transfer
+# -- (~0 at reduced scale); an undrain is one join patch (~0.4 s); a
+# -- scale-up rides the deferred-join warmup (5 s at scenario defaults).
+
+register(Scenario(
+    name="rolling_maintenance_drain",
+    description="Kernel-upgrade walk across the fleet: drain a rank, "
+                "service it, undrain it, move to the next — serving never "
+                "stops and no client ever sees an error (preempted, not "
+                "failed).",
+    schedule="""
+        @2.0  drain 1
+        @10.0 undrain 1
+        @14.0 drain 2
+        @22.0 undrain 2
+    """,
+))
+
+register(Scenario(
+    name="drain_overlapping_fault",
+    description="A rank fails while another is drained for maintenance: "
+                "the fault shrink must compose with the planned hole in "
+                "the active set, and the undrain must restore full "
+                "capacity afterwards.",
+    schedule="""
+        @2.0  drain 2
+        @4.0  fail 5
+        @16.0 undrain 2
+    """,
+    horizon_s=35.0,
+))
+
+register(Scenario(
+    name="elastic_shrink_regrow",
+    description="Deliberate capacity scaling: two ranks are decommissioned "
+                "(scale down), then re-added (scale up) riding the "
+                "deferred-join warmup path — Lazarus-style elasticity on "
+                "the fault-recovery substrate.",
+    schedule="""
+        @2.0  scale down 6 7
+        @12.0 scale up 6 7
+    """,
+    horizon_s=35.0,
+))
+
+register(Scenario(
+    name="mixed_planned_unplanned",
+    description="Everything at once: a maintenance drain, an unplanned "
+                "failure, an undrain, an elastic shrink and a regrow in "
+                "one run — every transition kind commits through the one "
+                "transaction path on a single compiled step.",
+    schedule="""
+        @2.0  drain 1
+        @5.0  fail 4
+        @15.0 undrain 1
+        @18.0 scale down 6
+        @26.0 scale up 6
     """,
     horizon_s=45.0,
 ))

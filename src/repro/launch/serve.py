@@ -1,8 +1,17 @@
 """Serving driver: elastic EP instance + continuous batching + scripted
-failure/reintegration.
+failure/reintegration and planned drain/scale transitions.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --world 8 --requests 32 --fail-rank 3 --fail-at 2.0
+
+  # rolling maintenance: drain rank 2 at t=2, bring it back at t=10
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
+      --drain-rank 2 --drain-at 2.0 --undrain-at 10.0
+
+  # elastic shrink/regrow riding the deferred-join path
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
+      --scale-down-rank 6 --scale-down-rank 7 --scale-down-at 2.0 \
+      --scale-up-at 12.0
 """
 from __future__ import annotations
 
@@ -25,8 +34,21 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--fail-rank", type=int, action="append", default=None)
     ap.add_argument("--fail-at", type=float, default=None)
+    ap.add_argument("--drain-rank", type=int, action="append", default=None,
+                    help="rank(s) to drain for planned maintenance")
+    ap.add_argument("--drain-at", type=float, default=None)
+    ap.add_argument("--undrain-at", type=float, default=None,
+                    help="bring the drained rank(s) back at this time")
+    ap.add_argument("--scale-down-rank", type=int, action="append",
+                    default=None, help="rank(s) to decommission (elastic "
+                    "shrink)")
+    ap.add_argument("--scale-down-at", type=float, default=None)
+    ap.add_argument("--scale-up-at", type=float, default=None,
+                    help="re-add the scaled-down rank(s) (deferred join)")
     ap.add_argument("--fixed-membership", action="store_true",
-                    help="full-restart baseline instead of EEP")
+                    help="full-restart baseline instead of EEP (a "
+                    "TransitionPolicy: planned drains become full restarts "
+                    "too — the paper's point)")
     ap.add_argument("--dispatch", choices=["dense", "ragged"], default=None,
                     help="capacity-padded vs dropless size-exchange dispatch "
                     "(default: the arch config's dispatch_mode)")
@@ -59,13 +81,40 @@ def main(argv=None):
                                  max_new_tokens=args.max_new))
     if args.fail_at is not None and args.fail_rank:
         rt.injector.inject_at(args.fail_at, args.fail_rank)
-    eng.run(until=args.until, max_steps=100_000)
+
+    # planned transitions: requested through the ControlPlane when the sim
+    # clock crosses their time, committed at the next step boundary
+    planned = []
+    if args.drain_at is not None and args.drain_rank:
+        planned.append((args.drain_at, "drain", args.drain_rank))
+    if args.undrain_at is not None and args.drain_rank:
+        planned.append((args.undrain_at, "undrain", args.drain_rank))
+    if args.scale_down_at is not None and args.scale_down_rank:
+        planned.append((args.scale_down_at, "scale_down",
+                        args.scale_down_rank))
+    if args.scale_up_at is not None and args.scale_down_rank:
+        planned.append((args.scale_up_at, "scale_up", args.scale_down_rank))
+    planned.sort(key=lambda p: p[0])
+
+    cursor = [0]
+
+    def fire_planned():
+        while cursor[0] < len(planned) \
+                and planned[cursor[0]][0] <= rt.clock.now():
+            _, op, ranks = planned[cursor[0]]
+            rt.control.request(op, ranks)
+            cursor[0] += 1
+
+    eng.run(until=args.until, max_steps=100_000,
+            before_step=fire_planned if planned else None)
 
     s = eng.sched.stats
     print(f"finished={s.finished} failed={s.failed} retried={s.retried} "
-          f"tokens={s.tokens_out}")
+          f"preempted={s.preempted} tokens={s.tokens_out}")
     print(f"serve-step compilations: {eng.compile_count()} (no recompile "
           f"across membership changes; dispatch={eng.dispatch})")
+    print(f"membership epoch: {rt.epoch} (every transition committed "
+          f"through MembershipTransaction; policy={rt.policy.name})")
     for ev in rt.timeline:
         print(f"  t={ev.t:8.2f}s {ev.kind} {ev.detail if ev.detail else ''}")
 

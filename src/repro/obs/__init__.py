@@ -14,6 +14,7 @@ from repro.obs.phases import (  # noqa: F401
     ALL_PHASES,
     BASELINE_PHASES,
     PHASES,
+    PLANNED_PHASES,
     ObsEvent,
     PhaseClock,
     PhaseSpan,

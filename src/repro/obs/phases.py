@@ -26,6 +26,10 @@ phases run off the serving path):
   table-patch      healthy-rank join patch (peer entry refresh
                    + placement publish)                        (critical)
   rejoin           instantaneous marker: rank active again     (marker)
+  drain            planned maintenance drain: replan + weight
+                   transfer, no detect window                  (critical)
+  scale-down       planned elastic shrink (same mechanics as
+                   drain; tracked separately)                  (critical)
 
 The fixed-membership baseline reports a single ``full-restart`` span.
 
@@ -54,19 +58,26 @@ from typing import Callable, Optional
 #: docs/recovery-lifecycle.md — keep the two in sync).
 PHASES = ("detect", "replan", "repair-transfer", "warmup", "table-patch",
           "rejoin")
+#: Planned-transition phases: deliberate membership changes issued through
+#: the control plane (repro.core.transitions). A ``drain`` / ``scale-down``
+#: span covers the whole planned pause — replan + weight transfer, with no
+#: detect window (the departing rank is alive and cooperating). Undrains
+#: and scale-ups reuse ``warmup``/``table-patch``/``rejoin``.
+PLANNED_PHASES = ("drain", "scale-down")
 #: Phases only the fixed-membership baseline emits.
 BASELINE_PHASES = ("full-restart",)
-ALL_PHASES = PHASES + BASELINE_PHASES
+ALL_PHASES = PHASES + PLANNED_PHASES + BASELINE_PHASES
 
 #: Lifecycle stage per phase: within one incident the stage index of
 #: successive spans (by start time) must be non-decreasing.
 _STAGE = {"detect": 0, "replan": 1, "repair-transfer": 1, "warmup": 2,
-          "table-patch": 3, "rejoin": 3, "full-restart": 0}
+          "table-patch": 3, "rejoin": 3, "full-restart": 0,
+          "drain": 1, "scale-down": 1}
 
 #: Critical-path phases pause every healthy rank, so they are globally
 #: serial: no two such spans may overlap, across incidents included.
 CRITICAL_PHASES = ("detect", "replan", "repair-transfer", "table-patch",
-                   "full-restart")
+                   "full-restart", "drain", "scale-down")
 
 _OPEN = -1.0      # sentinel t_end of a span that has not been closed yet
 

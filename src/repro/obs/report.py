@@ -23,7 +23,7 @@ from __future__ import annotations
 import json
 from typing import Optional
 
-from repro.obs.phases import PHASES, validate_spans
+from repro.obs.phases import PHASES, PLANNED_PHASES, validate_spans
 from repro.obs.svg import line_chart, phase_bars
 
 #: The paper's headline, time-shaped claims (abstract / Figs. 1, 9, 10, 11).
@@ -50,8 +50,9 @@ CLAIM_LABELS = {
     "steady_overhead_pct": "steady-state overhead vs fixed membership",
 }
 
-#: Phases shown as table columns, in lifecycle order.
-_COLS = [p for p in PHASES if p != "rejoin"]
+#: Phases shown as table columns, in lifecycle order (plus the planned
+#: drain/scale-down pauses so maintenance scenarios are visible too).
+_COLS = [p for p in PHASES if p != "rejoin"] + list(PLANNED_PHASES)
 
 
 def _rows(doc: dict) -> list[dict]:

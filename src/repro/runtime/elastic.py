@@ -3,26 +3,43 @@
 Couples the core substrate (membership, EPLB, 3-tier repair, backup,
 detector, deferred-join controller) with the compiled serving step.
 
-Invariants this runtime maintains across every fail/repair/rejoin cycle
-(asserted at each step boundary by the scenario runner and tier-1 tests):
+Every membership mutation — fault shrink, deferred-join batch, straggler
+re-place, planned drain/undrain, elastic scale — is staged and published
+through ONE path: ``repro.core.transitions.MembershipTransaction``
+(propose -> plan -> validate -> commit). Each commit bumps the runtime's
+monotonic ``epoch`` (mirrored into the device-published
+``MembershipState.version``) and re-runs the validity check against the
+staged state before publication, so the invariants below are enforced
+structurally rather than re-asserted per handler:
 
-  * **validity** — after every membership transition the peer set, expert
+  * **validity** — after every committed transition the peer set, expert
     placement and graph-visible routing tables satisfy
     ``repro.core.validity.check``: no routing entry targets an inactive
     rank, and the published device tables mirror the host `PeerTable`;
   * **zero recompilation** — the compiled executable is built ONCE;
-    failures and reintegrations only rewrite membership array *contents*
-    and slot-weight *contents*, never shapes, so healthy ranks never
-    recompile (the paper's no-CUDA-graph-recapture property; tests assert
-    the jit cache size stays at 1);
+    commits only rewrite membership array *contents* and slot-weight
+    *contents*, never shapes, so healthy ranks never recompile (the
+    paper's no-CUDA-graph-recapture property; tests assert the jit cache
+    size stays at 1 across runs mixing faults, drains and scale-ups);
   * **coverage** — every logical expert keeps >= 1 active replica, or the
     runtime records an explicit ``coverage_loss`` event and raises
-    ``CoverageLossError`` instead of serving unhosted experts.
+    ``CoverageLossError`` instead of serving unhosted experts. A *planned*
+    transition that would lose coverage simply aborts
+    (``TransitionAborted``) and leaves the instance untouched — unlike a
+    fault, nothing has actually broken yet.
+
+How the runtime reacts to transitions is a pluggable
+``TransitionPolicy`` (``ElasticPolicy`` = the paper's EEP behavior;
+``FullRestartPolicy`` = the fixed-membership baseline), selected at
+serving-engine construction. Planned operations are issued through
+``self.control`` (``repro.core.transitions.ControlPlane``): ``drain`` /
+``undrain`` / ``scale_down`` / ``scale_up``.
 
 Telemetry: every transition is recorded through ``self.obs``
 (``repro.obs.phases.PhaseClock``) as phase-tagged spans/events using the
 canonical phase vocabulary (detect, replan, repair-transfer, warmup,
-table-patch, rejoin — defined in docs/recovery-lifecycle.md). The flat
+table-patch, rejoin, plus the planned-transition phases drain and
+scale-down — defined in docs/recovery-lifecycle.md). The flat
 ``timeline`` list is kept in lockstep for backward compatibility; both are
 fed by the single ``record()`` path.
 
@@ -36,10 +53,8 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -52,19 +67,26 @@ from repro.core.failure import (
     SimClock,
 )
 from repro.core.membership import MembershipState, PeerTable
-from repro.core.placement import eplb_place
 from repro.core.reintegration import ReintegrationController, WarmupCostModel
 from repro.core.straggler import StragglerMonitor
-from repro.core.repair import (
-    RecoveryCostModel,
-    RepairPlan,
-    apply_repair,
-    plan_repair,
-    revalidate_plan,
+from repro.core.repair import RecoveryCostModel
+from repro.core.transitions import (
+    PLANNED_OPS,
+    ControlPlane,
+    ElasticPolicy,
+    MembershipTransaction,
+    TransitionAborted,
+    TransitionPolicy,
+    moe_slot_leaves,
+    set_moe_slot_leaves,
 )
-from repro.core.validity import check as validity_check
 from repro.models.model import Deployment
 from repro.obs.phases import PhaseClock
+
+__all__ = [
+    "ControlEvent", "ControlSummary", "ElasticEPRuntime", "TimelineEvent",
+    "moe_slot_leaves", "set_moe_slot_leaves",
+]
 
 
 @dataclass
@@ -77,39 +99,26 @@ class TimelineEvent:
 @dataclass
 class ControlEvent:
     """One pending control-plane transition awaiting its handler."""
-    kind: str                    # "failure_detected" | "join_ready"
+    kind: str                    # "failure_detected" | "join_ready" |
+                                 # "drain" | "undrain" | "scale_down" |
+                                 # "scale_up"
     ranks: tuple[int, ...] = ()
 
 
 @dataclass
 class ControlSummary:
     """What one control pump did — consumed by the serving engine to decide
-    requeue/trace actions without re-deriving runtime state."""
+    requeue/trace actions without re-deriving runtime state. Planned
+    transitions report separately from faults because their serving
+    semantics differ (graceful preemption vs failed-and-retried)."""
     failures_handled: list[int] = field(default_factory=list)
     joined: list[int] = field(default_factory=list)
     warmups_aborted: list[int] = field(default_factory=list)
-
-
-def moe_slot_leaves(cfg: ArchConfig, params):
-    """The slot-stacked expert weights: {path: leaf [n_periods, S, ...]}."""
-    out = {}
-    for gname, group in params.get("groups", {}).items():
-        for lname, layer in group.items():
-            moe = layer.get("moe")
-            if moe is None:
-                continue
-            for wname in ("w_in", "w_gate", "w_out"):
-                if wname in moe:
-                    out[(gname, lname, wname)] = moe[wname]
-    return out
-
-
-def set_moe_slot_leaves(params, leaves: dict):
-    import copy
-    params = jax.tree_util.tree_map(lambda x: x, params)  # shallow-ish copy
-    for (gname, lname, wname), leaf in leaves.items():
-        params["groups"][gname][lname]["moe"][wname] = leaf
-    return params
+    drained: list[int] = field(default_factory=list)
+    undrained: list[int] = field(default_factory=list)
+    scaled_down: list[int] = field(default_factory=list)
+    scaled_up: list[int] = field(default_factory=list)
+    restarts: list[int] = field(default_factory=list)   # baseline bounces
 
 
 class ElasticEPRuntime:
@@ -122,7 +131,8 @@ class ElasticEPRuntime:
                  warmup_model: Optional[WarmupCostModel] = None,
                  expert_load_ema: float = 0.9,
                  base_throughput: float = 7200.0,
-                 dispatch: Optional[str] = None):
+                 dispatch: Optional[str] = None,
+                 policy: Optional[TransitionPolicy] = None):
         self.cfg = cfg
         self.params = params
         self.table = table
@@ -159,23 +169,45 @@ class ElasticEPRuntime:
 
         self.straggler = StragglerMonitor(table.world)
         self.rank_slowdown = np.ones(table.world)   # sim: injected slowness
-        self.membership: MembershipState = table.to_device()
         self.timeline: list[TimelineEvent] = []
         self.record("start")
         self.events_log: list[str] = []
         self.recompile_count = 0        # must stay 0 across fail/rejoin
         self._repair_jit_cache = {}
 
-        # control-event queue: detections/join-readiness become events
-        # drained FIFO by pump_control() — polling is decoupled from
-        # handling so future event sources (external controllers, deferred
-        # transitions) slot in without touching the handlers. Cascades
+        # control-event queue: detections/join-readiness/planned operations
+        # become events drained FIFO by pump_control() — polling is decoupled
+        # from handling so every event source (detector, join controller,
+        # the ControlPlane facade) shares one dispatch path. Cascades
         # detected *mid*-recovery are composed inside handle_failure itself,
         # not re-queued.
         self.control_queue: deque[ControlEvent] = deque()
-        # pluggable failure policy: the engine swaps in its full-restart
-        # baseline when fixed_membership=True.
-        self.failure_policy: Callable[[list[int]], dict] = self.handle_failure
+        # pluggable transition policy (replaces the old failure_policy
+        # bound-method monkeypatch): the serving engine selects the
+        # full-restart baseline policy at construction.
+        self.policy: TransitionPolicy = policy or ElasticPolicy()
+        # planned-operations facade: drain/undrain/scale_down/scale_up
+        self.control = ControlPlane(self)
+
+        # bootstrap commit: the initial device publication is itself a
+        # transaction, so `epoch`, `MembershipState.version` and the
+        # validity check are in force from the very first step.
+        self.epoch = table.version
+        self.membership: MembershipState = self.begin("bootstrap").commit()
+
+    # ------------------------------------------------------------------
+    # Transactions
+    # ------------------------------------------------------------------
+    def begin(self, kind: str, incident: int = -1) -> MembershipTransaction:
+        """Open a membership transaction (propose -> plan -> validate ->
+        commit). The ONLY way membership/placement/params/device state
+        change on this runtime."""
+        return MembershipTransaction(self, kind, incident=incident)
+
+    def set_policy(self, policy: TransitionPolicy) -> None:
+        """(Re)bind the transition policy — one engine drives a runtime at
+        a time, so the most recently constructed engine's policy wins."""
+        self.policy = policy
 
     # ------------------------------------------------------------------
     # Telemetry
@@ -209,7 +241,9 @@ class ElasticEPRuntime:
     # overlapping failures: recovery is a phased state machine that re-polls
     # the detector at phase boundaries and composes a fresh repair round when
     # another rank dies mid-recovery (cascade), instead of a one-shot
-    # transition that assumes the failure set is frozen.
+    # transition that assumes the failure set is frozen. The whole composed
+    # recovery is ONE transaction: rounds replan/revalidate on the staged
+    # state, and a single commit publishes the final configuration.
     # ------------------------------------------------------------------
     def poll_failures(self) -> list[int]:
         fresh, _ = self._poll_transitions()
@@ -245,12 +279,14 @@ class ElasticEPRuntime:
                     aborted.append(r)
         return aborted
 
-    def _poll_mid_recovery(self) -> list[int]:
+    def _poll_mid_recovery(self, txn: MembershipTransaction) -> list[int]:
         """Phase-boundary poll during an in-flight recovery: fire any
         injected events whose time has come and report newly detected
-        failures so the current repair round can be restarted."""
+        failures (judged against the TRANSACTION's staged membership — the
+        live table is untouched until commit) so the current repair round
+        can be restarted."""
         fresh, _ = self._poll_transitions()
-        return [r for r in fresh if self.table.entries[r].active]
+        return [r for r in fresh if txn.is_active(r)]
 
     def handle_failure(self, failed: list[int]) -> dict:
         """Restore live-EP validity on the surviving ranks; composes follow-on
@@ -258,7 +294,8 @@ class ElasticEPRuntime:
         accumulated phase breakdown (paper Fig. 10 left)."""
         incident = self.obs.incident("failure", ranks=failed)
         self.record("failure", _incident=incident, ranks=list(failed))
-        pending = [r for r in failed if self.table.entries[r].active]
+        txn = self.begin("fault", incident=incident)
+        pending = [r for r in failed if txn.is_active(r)]
         phases = {"detect": self.cost_model.detect_s,
                   "drain": self.cost_model.drain_s,
                   "coordinate": 0.0, "weight_transfer": 0.0}
@@ -266,124 +303,124 @@ class ElasticEPRuntime:
                            drain_s=phases["drain"]):
             self.clock.advance(phases["detect"] + phases["drain"])
 
-        plan = None
         rounds = 0
-        while True:
-            rounds += 1
-            for r in pending:
-                if self.table.entries[r].active:
-                    self.table.deactivate(r)   # peer-set repair: clear bits
-                self.obs.bind_rank(r, incident)  # cascade casualties compose
-            pending = []
-            old_s2e = self.table.slot_to_expert.copy()
+        try:
+            while True:
+                rounds += 1
+                txn.deactivate(pending)    # peer-set repair (staged)
+                for r in pending:
+                    self.obs.bind_rank(r, incident)  # cascade casualties
+                pending = []
 
-            if not self.cfg.is_moe:
-                # dense arch: membership substrate only (no experts to repair)
-                with self.obs.span("replan", incident, round=rounds):
+                if not self.cfg.is_moe:
+                    # dense arch: membership substrate only (no experts)
+                    with self.obs.span("replan", incident, round=rounds):
+                        self.clock.advance(self.cost_model.coordinate_s)
+                    phases["coordinate"] += self.cost_model.coordinate_s
+                    pending = self._poll_mid_recovery(txn)
+                    if pending:
+                        self.record("recovery_restart", _incident=incident,
+                                    ranks=sorted(pending), round=rounds)
+                        continue
+                    break
+
+                # expert-coverage repair: EPLB over survivors + 3-tier plan
+                # (an infeasible shrink aborts the transaction -> converted
+                # to CoverageLossError below)
+                plan = txn.plan()
+
+                # coordination phase (EPLB + metadata broadcast); a failure
+                # that lands here invalidates the plan -> restart the round
+                with self.obs.span("replan", incident, round=rounds,
+                                   tier2=len(plan.tier2),
+                                   tier3=len(plan.tier3)):
                     self.clock.advance(self.cost_model.coordinate_s)
                 phases["coordinate"] += self.cost_model.coordinate_s
-                pending = self._poll_mid_recovery()
+                pending = self._poll_mid_recovery(txn)
                 if pending:
                     self.record("recovery_restart", _incident=incident,
                                 ranks=sorted(pending), round=rounds)
                     continue
+
+                # execution: the transfers are in flight for the window the
+                # cost model predicts; a rank can die INSIDE that window, so
+                # poll once it elapses and re-check every transfer against
+                # the staged bitmap (paper §5.1's atomic consult): transfers
+                # sourced from a casualty escalate to Tier-3 DRAM reloads
+                # before execution, and a follow-up round re-covers whatever
+                # the casualty hosted.
+                ph = self.cost_model.recovery_seconds(
+                    plan, self.table.world, self.table.slots_per_rank)
+                with self.obs.span("repair-transfer", incident,
+                                   round=rounds) as xfer_span:
+                    self.clock.advance(ph["weight_transfer"])
+                    phases["weight_transfer"] += ph["weight_transfer"]
+                    pending = self._poll_mid_recovery(txn)
+                    if pending:
+                        txn.deactivate(pending)
+                        self.record("recovery_restart", _incident=incident,
+                                    ranks=sorted(pending), round=rounds)
+                        n_t3 = len(plan.tier3)
+                        plan = txn.revalidate()
+                        if len(plan.tier3) > n_t3:
+                            self.record("transfer_escalation",
+                                        _incident=incident,
+                                        escalated=len(plan.tier3) - n_t3)
+                            extra = self.cost_model.recovery_seconds(
+                                plan, self.table.world,
+                                self.table.slots_per_rank)["weight_transfer"] \
+                                - ph["weight_transfer"]
+                            if extra > 0:
+                                self.clock.advance(extra)
+                                phases["weight_transfer"] += extra
+                    xfer_span.meta.update(tier2_bytes=plan.tier2_bytes,
+                                          tier3_bytes=plan.tier3_bytes)
+                txn.apply()     # aborts if the plan lost experts
+                if pending:
+                    continue
                 break
 
-            # expert-coverage repair (EPLB over survivors + 3-tier transfer)
-            res = eplb_place(
-                self.cfg.moe.num_experts, self.table.world,
-                self.table.slots_per_rank, self.table.active_mask,
-                load=self.expert_load, prev_slot_to_expert=old_s2e,
-                max_replicas=self.table.max_replicas)
-            if res.infeasible:
-                self.record("coverage_loss", _incident=incident,
-                            reason=res.reason)
-                raise CoverageLossError(f"cannot shrink: {res.reason}")
-            slots = moe_slot_leaves(self.cfg, self.params)
-            bytes_per_slot = int(sum(
-                np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
-                for l in slots.values()))
-            plan = plan_repair(old_s2e, res.slot_to_expert,
-                               self.table.active_mask,
-                               self.table.slots_per_rank, self.backup,
-                               bytes_per_slot=bytes_per_slot)
+            # graph-visible routing repair: validate + publish the staged
+            # configuration (content patch; bumps the epoch)
+            txn.commit()
+        except TransitionAborted as e:
+            if "violations" in e.detail:
+                # a validity failure at commit is NOT coverage loss — it is
+                # an invariant regression and must fail loudly (the
+                # pre-transactional code asserted here), never be absorbed
+                # by an expect_coverage_loss scenario
+                raise
+            # the recovery failed, but the deaths are still facts: publish
+            # the staged deactivations (and nothing else) so the peer set
+            # stops claiming the dead ranks are active. The instance is
+            # formally invalid either way — serving stops on the raise —
+            # so this degraded commit skips the validity gate.
+            dead = [r for r in range(self.table.world)
+                    if not txn.table.entries[r].active
+                    and self.table.entries[r].active]
+            if dead:
+                wreck = self.begin("fault", incident=incident)
+                wreck.deactivate(dead)
+                wreck.commit(enforce_validity=False)
+            detail = dict(e.detail)
+            self.record("coverage_loss", _incident=incident, **detail)
+            msg = str(e) if "experts" in detail else f"cannot shrink: {e}"
+            raise CoverageLossError(msg) from None
 
-            # coordination phase (EPLB + metadata broadcast); a failure that
-            # lands here invalidates the plan -> restart the round
-            with self.obs.span("replan", incident, round=rounds,
-                               tier2=len(plan.tier2), tier3=len(plan.tier3)):
-                self.clock.advance(self.cost_model.coordinate_s)
-            phases["coordinate"] += self.cost_model.coordinate_s
-            pending = self._poll_mid_recovery()
-            if pending:
-                self.record("recovery_restart", _incident=incident,
-                            ranks=sorted(pending), round=rounds)
-                continue
-
-            # execution: the transfers are in flight for the window the cost
-            # model predicts; a rank can die INSIDE that window, so poll once
-            # it elapses and re-check every transfer against the current
-            # bitmap (paper §5.1's atomic consult): transfers sourced from a
-            # casualty escalate to Tier-3 DRAM reloads before execution, and
-            # a follow-up round re-covers whatever the casualty hosted.
-            ph = self.cost_model.recovery_seconds(
-                plan, self.table.world, self.table.slots_per_rank)
-            with self.obs.span("repair-transfer", incident, round=rounds) \
-                    as xfer_span:
-                self.clock.advance(ph["weight_transfer"])
-                phases["weight_transfer"] += ph["weight_transfer"]
-                pending = self._poll_mid_recovery()
-                if pending:
-                    for r in pending:
-                        self.table.deactivate(r)
-                    self.record("recovery_restart", ranks=sorted(pending),
-                                round=rounds)
-                    n_t3 = len(plan.tier3)
-                    plan = revalidate_plan(plan, res.slot_to_expert,
-                                           self.table.active_mask,
-                                           self.table.slots_per_rank,
-                                           self.backup)
-                    if len(plan.tier3) > n_t3:
-                        self.record("transfer_escalation",
-                                    escalated=len(plan.tier3) - n_t3)
-                        extra = self.cost_model.recovery_seconds(
-                            plan, self.table.world,
-                            self.table.slots_per_rank)["weight_transfer"] \
-                            - ph["weight_transfer"]
-                        if extra > 0:
-                            self.clock.advance(extra)
-                            phases["weight_transfer"] += extra
-                xfer_span.meta.update(tier2_bytes=plan.tier2_bytes,
-                                      tier3_bytes=plan.tier3_bytes)
-            if plan.unrecoverable:
-                self.record("coverage_loss", _incident=incident,
-                            experts=sorted(plan.unrecoverable))
-                raise CoverageLossError(
-                    f"experts {sorted(plan.unrecoverable)} lost every live "
-                    f"replica and backup copy")
-            new_leaves = apply_repair(slots, plan, self.backup)
-            self.params = set_moe_slot_leaves(self.params, new_leaves)
-            self.table.set_placement(res.slot_to_expert)
-            if pending:
-                continue
-            break
-
-        # graph-visible routing repair: publish the tables (content patch)
-        self.membership = self.table.to_device()
-        rep = validity_check(self.table, self.membership,
-                             reachable=self.detector.known_reachable())
-        assert rep.valid, rep.violations
-
+        last = txn.plans[-1] if txn.plans else None
         phases["total"] = sum(phases.values())
         phases["rounds"] = rounds
         self.record("recovery_done", _incident=incident, phases=phases,
-                    mix=plan.source_mix() if plan else {},
-                    tier2_bytes=plan.tier2_bytes if plan else 0,
-                    tier3_bytes=plan.tier3_bytes if plan else 0)
+                    epoch=self.epoch,
+                    mix=last.source_mix() if last else {},
+                    tier2_bytes=last.tier2_bytes if last else 0,
+                    tier3_bytes=last.tier3_bytes if last else 0)
         # relaunch every rank that is now inactive asynchronously (deferred
-        # join) — including casualties of mid-recovery cascades
+        # join) — including casualties of mid-recovery cascades, but NOT
+        # deliberately drained/decommissioned ranks
         for r in range(self.table.world):
-            if (not self.table.entries[r].active
+            entry = self.table.entries[r]
+            if (not entry.active and not entry.drained
                     and not self.controller.is_recovering(r)):
                 self.controller.schedule_relaunch(r)
                 self.obs.open_span(("warmup", r), "warmup",
@@ -394,6 +431,9 @@ class ElasticEPRuntime:
     # ------------------------------------------------------------------
     # Event-queue control pump: one call per serving step enqueues newly
     # polled transitions and drains the queue FIFO (observation order).
+    # Planned operations (drain/undrain/scale) requested through the
+    # ControlPlane facade ride the same queue and dispatch through the
+    # same policy.
     # ------------------------------------------------------------------
     def pump_control(self) -> ControlSummary:
         summary = ControlSummary()
@@ -409,14 +449,35 @@ class ElasticEPRuntime:
             if ev.kind == "failure_detected":
                 ranks = [r for r in ev.ranks if self.table.entries[r].active]
                 if ranks:
-                    self.failure_policy(ranks)
+                    out = self.policy.on_failure(self, ranks) or {}
                     summary.failures_handled += ranks
+                    if out.get("mode") == "restart":
+                        summary.restarts += ranks
             elif ev.kind == "join_ready":
                 ranks = [r for r in ev.ranks
                          if self.controller.state_of(r) == RankState.JOIN_READY]
                 if ranks:
-                    self._join_batch(ranks)
+                    self.policy.on_join_ready(self, ranks)
                     summary.joined += ranks
+            elif ev.kind in PLANNED_OPS:
+                handled, mode = self.control.dispatch(ev.kind, ev.ranks)
+                if not handled or mode == "aborted":
+                    continue
+                if mode == "restart":
+                    summary.restarts += handled
+                elif ev.kind == "drain":
+                    summary.drained += handled
+                elif ev.kind == "undrain":
+                    # only ranks the commit actually re-activated: a cold
+                    # rank (died while drained) merely began relaunching —
+                    # serving was never paused, and it will surface in
+                    # `joined` when its deferred join lands
+                    summary.undrained += [
+                        r for r in handled if self.table.entries[r].active]
+                elif ev.kind == "scale_down":
+                    summary.scaled_down += handled
+                elif ev.kind == "scale_up":
+                    summary.scaled_up += handled
         return summary
 
     def _enqueue(self, kind: str, ranks) -> None:
@@ -426,7 +487,8 @@ class ElasticEPRuntime:
     # Reintegration (paper SS3.6/4.2), generalized to join storms: every
     # rank that is JOIN_READY at the same poll is incorporated with ONE
     # EPLB pass and ONE table patch, so a storm of N rejoiners costs the
-    # healthy ranks a single join pause instead of N.
+    # healthy ranks a single join pause instead of N. Undrains ride the
+    # same batched-patch path (kind="undrain").
     # ------------------------------------------------------------------
     def poll_reintegration(self) -> list[int]:
         """Between forward passes, healthy ranks poll for join-ready peers
@@ -437,47 +499,115 @@ class ElasticEPRuntime:
         return ready
 
     def _join_batch(self, ranks: list[int]) -> None:
-        # telemetry: each rejoiner's background warmup span ends now (it hit
-        # JOIN_READY); the batched table patch is ONE critical-path span
+        self._rejoin_batch(ranks, kind="join")
+
+    def _rejoin_batch(self, ranks: list[int], *, kind: str = "join") -> None:
+        """ONE batched table patch incorporating ranks ready to serve:
+        deferred-join completions ("join") and planned undrains
+        ("undrain") share this path."""
+        # telemetry: each rejoiner's background warmup span ends now (no-op
+        # for undrained ranks, which never warmed up — they stayed hot)
         for rank in ranks:
             self.obs.close_span(("warmup", rank))
         incident = self.obs.incident_of(ranks[0], -1)
-        old_s2e = self.table.slot_to_expert.copy()
-        with self.obs.span("table-patch", incident, ranks=sorted(ranks)):
+        txn = self.begin(kind, incident=incident)
+        with self.obs.span("table-patch", incident, ranks=sorted(ranks),
+                           kind=kind):
             for rank in ranks:
                 self.detector.mark_reachable(rank)
-                self.table.reactivate(rank)  # refresh entry (endpoint epoch)
-            if self.cfg.is_moe:
-                res = eplb_place(
-                    self.cfg.moe.num_experts, self.table.world,
-                    self.table.slots_per_rank, self.table.active_mask,
-                    load=self.expert_load, prev_slot_to_expert=old_s2e,
-                    max_replicas=self.table.max_replicas)
-                slots = moe_slot_leaves(self.cfg, self.params)
-                bytes_per_slot = int(sum(
-                    np.prod(l.shape[2:]) * l.dtype.itemsize * l.shape[0]
-                    for l in slots.values()))
-                plan = plan_repair(old_s2e, res.slot_to_expert,
-                                   self.table.active_mask,
-                                   self.table.slots_per_rank, self.backup,
-                                   bytes_per_slot=bytes_per_slot)
-                new_leaves = apply_repair(slots, plan, self.backup)
-                self.params = set_moe_slot_leaves(self.params, new_leaves)
-                self.table.set_placement(res.slot_to_expert)
-            self.membership = self.table.to_device()
-            rep = validity_check(self.table, self.membership,
-                                 reachable=self.detector.known_reachable())
-            assert rep.valid, rep.violations
+            txn.activate(ranks)      # refresh entries (endpoint epoch)
+            txn.plan()               # EPLB over the extended active set
+            txn.commit()             # apply + validate + publish
             self.clock.advance(self.cost_model.join_patch_s)
         for rank in ranks:
             self.controller.complete_join(rank)
-            self.record("join", _incident=self.obs.incident_of(rank, incident),
-                        rank=rank)
+            self.record(kind, _incident=self.obs.incident_of(rank, incident),
+                        rank=rank, epoch=self.epoch)
             self.obs.mark("rejoin", self.obs.incident_of(rank, incident),
                           rank=rank)
         if len(ranks) > 1:
-            self.record("join_batch", _incident=incident, ranks=sorted(ranks),
+            self.record(f"{kind}_batch", _incident=incident,
+                        ranks=sorted(ranks),
                         patch_s=self.cost_model.join_patch_s)
+
+    # ------------------------------------------------------------------
+    # Planned transitions (beyond the paper's unplanned faults): the same
+    # transaction machinery serves deliberate elasticity — maintenance
+    # drains, elastic shrink/regrow. A drain is a replan + transfer with
+    # NO detect/drain pause, and the departing rank (still alive) serves
+    # as a Tier-2 source for its uniquely-hosted experts; a scale-up rides
+    # the deferred-join warmup path.
+    # ------------------------------------------------------------------
+    def drain_ranks(self, ranks: list[int], *, kind: str = "drain") -> dict:
+        """Planned removal of ``ranks`` (maintenance drain or elastic
+        scale-down). Raises ``TransitionAborted`` — leaving the instance
+        untouched — when the remaining ranks cannot cover every expert."""
+        assert kind in ("drain", "scale_down")
+        phase = "drain" if kind == "drain" else "scale-down"
+        incident = self.obs.incident(kind, ranks=ranks)
+        txn = self.begin(kind, incident=incident)
+        t0 = self.clock.now()
+        try:
+            with self.obs.span(phase, incident, ranks=sorted(ranks)):
+                # the departing ranks stay live through the transfer window:
+                # they are Tier-2 sources under the PRE-transition mask
+                source = self.table.active_mask
+                txn.deactivate(ranks, drained=True)
+                plan = txn.plan(source_active=source)
+                self.clock.advance(self.cost_model.coordinate_s)
+                if plan is not None:
+                    xfer = self.cost_model.recovery_seconds(
+                        plan, self.table.world,
+                        self.table.slots_per_rank)["weight_transfer"]
+                    if xfer > 0:
+                        self.clock.advance(xfer)
+                txn.commit()
+        except TransitionAborted as e:
+            self.record("transition_abort", _incident=incident, op=kind,
+                        ranks=list(ranks), **e.detail)
+            e.recorded = True
+            raise
+        # (obs.incident() above already bound every rank to this incident,
+        # so later undrain/scale-up rejoins compose into the same saga)
+        pause = self.clock.now() - t0
+        last = txn.plans[-1] if txn.plans else None
+        self.record(kind, _incident=incident, ranks=list(ranks),
+                    pause_s=round(pause, 6), epoch=self.epoch,
+                    mix=last.source_mix() if last else {},
+                    tier2_bytes=last.tier2_bytes if last else 0,
+                    tier3_bytes=last.tier3_bytes if last else 0)
+        return {"pause_s": pause, "epoch": self.epoch}
+
+    def undrain_ranks(self, ranks: list[int]) -> dict:
+        """Bring drained ranks back. A rank whose process is still up
+        rejoins immediately via one batched table patch (it never went
+        cold); one that died while drained rides the relaunch/warmup path
+        like a scale-up."""
+        warm = [r for r in ranks if self.detector.reachable[r]]
+        cold = [r for r in ranks if not self.detector.reachable[r]]
+        # warm patch first: if its transaction aborts, the exception leaves
+        # the whole operation genuinely untouched (no cold relaunch has
+        # been issued yet)
+        if warm:
+            self._rejoin_batch(warm, kind="undrain")
+        if cold:
+            self._relaunch_for_join(cold, kind="undrain_relaunch")
+        return {"epoch": self.epoch, "warm": warm, "cold": cold}
+
+    def scale_up_ranks(self, ranks: list[int]) -> dict:
+        """Elastic regrow: the new ranks' processes launch and warm up in
+        the background (deferred join); the eventual incorporation is the
+        standard batched join patch."""
+        self._relaunch_for_join(ranks, kind="scale_up")
+        return {"epoch": self.epoch, "warming": list(ranks)}
+
+    def _relaunch_for_join(self, ranks: list[int], *, kind: str) -> None:
+        for r in ranks:
+            incident = self.obs.incident_of(r, -1)
+            self.record(kind, _incident=incident, rank=r)
+            self.controller.schedule_relaunch(r)
+            self.obs.open_span(("warmup", r), "warmup", incident=incident,
+                               rank=r, planned=True)
 
     # ------------------------------------------------------------------
     # Straggler mitigation (beyond the paper's fail-stop timeout: de-weight
@@ -496,30 +626,30 @@ class ElasticEPRuntime:
         if flagged == before or not self.cfg.is_moe:
             return sorted(flagged)
         caps = self.straggler.capacity_weights(self.table.active_mask)
-        old_s2e = self.table.slot_to_expert.copy()
-        res = eplb_place(
-            self.cfg.moe.num_experts, self.table.world,
-            self.table.slots_per_rank, self.table.active_mask,
-            load=self.expert_load, prev_slot_to_expert=old_s2e,
-            max_replicas=self.table.max_replicas, rank_capacity=caps)
-        if res.infeasible:
+        txn = self.begin("straggler")
+        txn.set_rank_capacity(caps)
+        try:
+            plan = txn.plan()
+            txn.commit()
+        except TransitionAborted as e:
+            if "violations" in e.detail:
+                # validity failure at commit = invariant regression: fail
+                # loudly (the pre-transactional code asserted here)
+                raise
+            # a re-place that cannot cover every expert is simply skipped:
+            # the staged state is discarded, the instance keeps serving on
+            # the previous placement
             return sorted(flagged)
-        slots = moe_slot_leaves(self.cfg, self.params)
-        plan = plan_repair(old_s2e, res.slot_to_expert,
-                           self.table.active_mask,
-                           self.table.slots_per_rank, self.backup)
-        self.params = set_moe_slot_leaves(
-            self.params, apply_repair(slots, plan, self.backup))
-        self.table.set_placement(res.slot_to_expert)
-        self.membership = self.table.to_device()
-        rep = validity_check(self.table, self.membership,
-                             reachable=self.detector.known_reachable())
-        assert rep.valid, rep.violations
         self.record("straggler_mitigation", flagged=sorted(flagged),
                     capacities={int(r): round(float(caps[r]), 2)
-                                for r in flagged})
+                                for r in flagged},
+                    epoch=self.epoch,
+                    tier2_bytes=plan.tier2_bytes if plan else 0,
+                    tier3_bytes=plan.tier3_bytes if plan else 0)
         return sorted(flagged)
 
     # ------------------------------------------------------------------
     def heartbeat(self) -> None:
-        self.detector.heartbeat(self.table.active_ranks())
+        # drained ranks are alive (idling for maintenance) — they heartbeat
+        # too, so the detector does not misread a planned drain as a fault
+        self.detector.heartbeat(self.table.live_ranks())

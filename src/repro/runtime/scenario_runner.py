@@ -8,7 +8,16 @@ core invariants at EVERY engine-step boundary:
   * live-EP validity (peer set, expert coverage, graph-visible routing),
   * zero recompilations on healthy ranks (one compiled serve step, ever),
   * every logical expert keeps >= 1 active replica — or the scenario records
-    a coverage-loss event instead of silently serving garbage.
+    a coverage-loss event instead of silently serving garbage,
+  * epoch monotonicity: the device-published ``MembershipState.version``
+    always equals the runtime's committed epoch and never moves backwards —
+    every transition (fault, join, drain, scale, straggler re-place) is one
+    ``MembershipTransaction.commit``.
+
+Planned transitions in a schedule (``drain``/``undrain``/``scale``) are
+requested through the runtime's ControlPlane when the SimClock crosses
+their time and land at the next step boundary, where the engine applies
+the drain requeue semantics (preempted, not failed).
 
 Each run also harvests the runtime's phase telemetry
 (``repro.obs.phases``): every recovery incident's spans (detect, replan,
@@ -62,11 +71,18 @@ class ScenarioResult:
     requests_failed: int = 0
     requests_retried: int = 0
     requests_dropped: int = 0
+    requests_preempted: int = 0     # gracefully requeued by drains/scales
     recoveries: int = 0
     recovery_rounds: int = 0        # > recoveries when cascades composed
     joins: int = 0
     warmup_aborts: int = 0
-    downtime_s: float = 0.0         # summed recovery/restart pauses
+    drains: int = 0                 # planned transitions (ControlPlane)
+    undrains: int = 0
+    scale_downs: int = 0
+    scale_ups: int = 0
+    transition_aborts: int = 0      # planned ops rolled back (state untouched)
+    final_epoch: int = 0            # committed membership epoch at harvest
+    downtime_s: float = 0.0         # summed recovery/restart/planned pauses
     final_active_fraction: float = 0.0
     sim_duration_s: float = 0.0
     wall_s: float = 0.0
@@ -97,10 +113,17 @@ class ScenarioResult:
             "requests_finished": self.requests_finished,
             "requests_failed": self.requests_failed,
             "requests_dropped": self.requests_dropped,
+            "requests_preempted": self.requests_preempted,
             "recoveries": self.recoveries,
             "recovery_rounds": self.recovery_rounds,
             "joins": self.joins,
             "warmup_aborts": self.warmup_aborts,
+            "drains": self.drains,
+            "undrains": self.undrains,
+            "scale_downs": self.scale_downs,
+            "scale_ups": self.scale_ups,
+            "transition_aborts": self.transition_aborts,
+            "final_epoch": self.final_epoch,
             "downtime_s": round(self.downtime_s, 3),
             "compile_count": self.compile_count,
             "validity_violations": len(self.validity_violations),
@@ -201,8 +224,9 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                          dispatch=dispatch,
                          coverage_loss_expected=scn.expect_coverage_loss)
 
-    # fail-stop events go to the injector up front; slow/restore are applied
-    # by this loop when the SimClock crosses their time
+    # fail-stop events go to the injector up front; slow/restore and the
+    # planned transitions are applied by this loop when the SimClock
+    # crosses their time
     deferred = []
     for a in scn.actions:
         if a.op == "fail":
@@ -214,16 +238,27 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     rid = 0
     next_action = 0
     coverage_exc = None
+    last_epoch = rt.epoch
     res.min_live_replicas = _min_live_replicas(rt)
     while rt.clock.now() < scn.horizon_s and res.steps < max_steps:
         now = rt.clock.now()
         while next_action < len(deferred) and deferred[next_action].t <= now:
             a = deferred[next_action]
             next_action += 1
-            for r in a.ranks:
-                rt.rank_slowdown[r] = a.factor if a.op == "slow" else 1.0
-            rt.record(a.op, ranks=list(a.ranks),
-                      **({"factor": a.factor} if a.op == "slow" else {}))
+            if a.op in ("slow", "restore"):
+                for r in a.ranks:
+                    rt.rank_slowdown[r] = a.factor if a.op == "slow" else 1.0
+                rt.record(a.op, ranks=list(a.ranks),
+                          **({"factor": a.factor} if a.op == "slow" else {}))
+            elif a.op == "scale":
+                # planned transitions land at the next step boundary via the
+                # control pump, where the engine observes them (preemption)
+                rt.record("scale_requested", ranks=list(a.ranks),
+                          direction=a.direction)
+                rt.control.request(f"scale_{a.direction}", a.ranks)
+            else:                       # drain | undrain
+                rt.record(f"{a.op}_requested", ranks=list(a.ranks))
+                rt.control.request(a.op, a.ranks)
         # steady offered load: keep a full admission queue
         while len(eng.sched.queue) < max_batch:
             eng.sched.submit(Request(rid=rid, prompt=[1, 2, 3],
@@ -248,6 +283,19 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                 res.validity_violations.append(
                     f"t={rt.clock.now():.3f}: serve step recompiled "
                     f"({eng.compile_count()} compilations)")
+            # epoch contract: the device-published version mirrors the
+            # committed epoch and never moves backwards (every transition —
+            # fault, join, drain, scale, straggler — is one commit)
+            dev_epoch = int(np.asarray(rt.membership.version))
+            if dev_epoch != rt.epoch:
+                res.validity_violations.append(
+                    f"t={rt.clock.now():.3f}: device version {dev_epoch} "
+                    f"!= committed epoch {rt.epoch}")
+            if dev_epoch < last_epoch:
+                res.validity_violations.append(
+                    f"t={rt.clock.now():.3f}: epoch went backwards "
+                    f"({last_epoch} -> {dev_epoch})")
+            last_epoch = dev_epoch
             res.min_live_replicas = min(res.min_live_replicas,
                                         _min_live_replicas(rt))
 
@@ -289,12 +337,32 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
         elif e.kind == "full_restart_done":
             res.recoveries += 1
             res.downtime_s += float(e.detail["seconds"])
+        # planned-transition counters count RANKS on both sides, so a
+        # shrink/regrow pair reports symmetric numbers (a drain/scale_down
+        # event carries the whole batch; undrain/scale_up are per rank)
+        elif e.kind == "drain":
+            res.drains += len(e.detail.get("ranks", [0]))
+            res.downtime_s += float(e.detail.get("pause_s", 0.0))
+        elif e.kind in ("undrain", "undrain_relaunch"):
+            # a warm undrain commits directly; a cold one (rank died while
+            # drained) registers here and completes through the join path —
+            # counting both keeps drain/undrain pairs symmetric
+            res.undrains += 1
+        elif e.kind == "scale_down":
+            res.scale_downs += len(e.detail.get("ranks", [0]))
+            res.downtime_s += float(e.detail.get("pause_s", 0.0))
+        elif e.kind == "scale_up":
+            res.scale_ups += 1
+        elif e.kind == "transition_abort":
+            res.transition_aborts += 1
+    res.final_epoch = rt.epoch
     st = eng.sched.stats
     res.tokens_out = st.tokens_out
     res.requests_finished = st.finished
     res.requests_failed = st.failed
     res.requests_retried = st.retried
     res.requests_dropped = st.dropped
+    res.requests_preempted = st.preempted
     res.final_active_fraction = rt.active_fraction()
     res.sim_duration_s = rt.clock.now()
     res.restore_95_s = _restore_95_s(res.timeline, res.trace)

@@ -21,6 +21,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.transitions import (
+    ElasticPolicy,
+    FullRestartCostModel,
+    FullRestartPolicy,
+    TransitionPolicy,
+)
 from repro.launch.steps import make_serve_step
 from repro.models.model import init_caches
 from repro.runtime.elastic import ElasticEPRuntime
@@ -28,21 +34,7 @@ from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler
 
-
-@dataclass(frozen=True)
-class FullRestartCostModel:
-    """Fixed-membership baseline: the whole instance rebuilds (paper: 348 s).
-    Phases follow the paper's description of the initialization path."""
-
-    environment_setup_s: float = 40.0
-    model_load_s: float = 180.0
-    jit_warmup_s: float = 80.0
-    graph_capture_s: float = 48.0
-
-    @property
-    def total_s(self) -> float:
-        return (self.environment_setup_s + self.model_load_s
-                + self.jit_warmup_s + self.graph_capture_s)
+__all__ = ["FullRestartCostModel", "ServingEngine", "ThroughputSample"]
 
 
 @dataclass
@@ -58,7 +50,8 @@ class ServingEngine:
                  base_step_time: float = 0.05,
                  fixed_membership: bool = False,
                  restart_model: Optional[FullRestartCostModel] = None,
-                 max_retries: Optional[int] = None):
+                 max_retries: Optional[int] = None,
+                 policy: Optional[TransitionPolicy] = None):
         self.rt = runtime
         cfg = runtime.cfg
         self.cfg = cfg
@@ -70,13 +63,22 @@ class ServingEngine:
         self.sched = Scheduler(self.kv, max_retries=max_retries)
         self.caches = init_caches(cfg, max_batch, max_len, dtype)
         self.base_step_time = base_step_time
-        self.fixed_membership = fixed_membership
         self.restart_model = restart_model or FullRestartCostModel()
-        # one engine drives a runtime at a time: (re)bind the failure policy
-        # so constructing a new engine over a reused runtime always restores
-        # the matching recovery path (full restart only for the baseline)
-        runtime.failure_policy = (self._full_restart if fixed_membership
-                                  else runtime.handle_failure)
+        # transition policy, selected at construction (no more monkeypatching
+        # a failure handler onto the runtime): the full-restart baseline is a
+        # TransitionPolicy like any other. One engine drives a runtime at a
+        # time, so the most recently constructed engine's policy wins.
+        if policy is None:
+            policy = (FullRestartPolicy(self.restart_model)
+                      if fixed_membership else ElasticPolicy())
+        elif fixed_membership or restart_model is not None:
+            # don't let a conflicting convenience flag be silently ignored
+            raise ValueError(
+                "pass either an explicit policy= or the fixed_membership/"
+                "restart_model convenience args, not both")
+        self.policy = policy
+        self.fixed_membership = not policy.mutates_membership
+        runtime.set_policy(policy)
         self.trace: list[ThroughputSample] = []
         self._prompt_pos = np.zeros((max_batch,), np.int64)
 
@@ -130,15 +132,24 @@ class ServingEngine:
         # drains every pending control transition — possibly several
         # overlapping failures and a batch of joins — in event order. ---
         ctl = rt.pump_control()
-        if ctl.failures_handled:
+        if ctl.failures_handled or ctl.restarts:
             # every in-flight request is failed and requeued, once per
             # interruption batch (overlapping failures were composed into a
-            # single recovery by the runtime)
+            # single recovery by the runtime; a baseline full restart —
+            # including one answering a planned drain — fails them too)
             self.sched.fail_inflight()
             self._prompt_pos[:] = 0
             self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
                                                rt.active_fraction()))
-        if ctl.joined:
+        if ctl.drained or ctl.scaled_down:
+            # planned shrink: in-flight work on the departing ranks is
+            # PREEMPTED, not failed — requeued at the front with no retry
+            # budget consumed (the clients never see an error)
+            self.sched.preempt_inflight()
+            self._prompt_pos[:] = 0
+            self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+                                               rt.active_fraction()))
+        if ctl.joined or ctl.undrained:
             self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
                                                rt.active_fraction()))
         if not self.fixed_membership:
@@ -193,31 +204,23 @@ class ServingEngine:
             rt.clock.now(), len(produced) / step_t, rt.active_fraction()))
         return len(produced)
 
-    def _full_restart(self, failed):
-        """Fixed-membership baseline: one long outage, then full capacity.
-        Telemetry-wise the whole rebuild is a single ``full-restart`` span —
-        the baseline has no phases to break down, which is the point."""
-        rt = self.rt
-        incident = rt.obs.incident("full-restart", ranks=failed)
-        rt.record("full_restart_begin", _incident=incident,
-                  ranks=list(failed))
-        with rt.obs.span("full-restart", incident, ranks=list(failed)):
-            rt.clock.advance(self.restart_model.total_s)
-            for r in failed:
-                rt.detector.mark_reachable(r)
-                rt.table.reactivate(r)
-            rt.membership = rt.table.to_device()
-        rt.record("full_restart_done", _incident=incident,
-                  seconds=self.restart_model.total_s)
-
     # ------------------------------------------------------------------
     def run(self, *, until: Optional[float] = None,
-            max_steps: int = 10_000) -> None:
+            max_steps: int = 10_000,
+            before_step: Optional[callable] = None) -> None:
+        """Step until ``until`` (sim seconds) or the work dries up.
+        ``before_step`` runs ahead of each step — the hook drivers use to
+        fire time-scheduled planned transitions (ControlPlane requests)
+        without re-implementing this loop."""
         steps = 0
         while steps < max_steps:
             if until is not None and self.rt.clock.now() >= until:
                 break
+            if before_step is not None:
+                before_step()
             if (self.sched.inflight == 0 and not self.sched.queue
+                    and not self.rt.control_queue
+                    and not self.rt.controller.recovering
                     and until is None):
                 break
             self.step()

@@ -18,6 +18,7 @@ class SchedulerStats:
     failed: int = 0
     retried: int = 0
     dropped: int = 0           # exceeded max_retries under repeated failures
+    preempted: int = 0         # gracefully requeued by a planned drain/scale
     tokens_out: int = 0
 
 
@@ -74,25 +75,36 @@ class Scheduler:
                 finished.append(req)
         return finished
 
-    def fail_inflight(self) -> list[Request]:
-        """Rank failure: every in-flight request is reported failed and (per
-        client policy) resubmitted from scratch.
-
-        Overlapping-interruption semantics: retried requests requeue at the
-        FRONT (in rid order) so work interrupted repeatedly by back-to-back
-        failures is not starved by newly arriving requests, and a request
-        that exceeds ``max_retries`` is dropped (counted in stats) instead of
-        retrying forever — e.g. under a flapping rank."""
-        failed = []
-        retried = []
-        rids = self.kv.release_all()
-        for rid in sorted(rids):
+    def _evict_inflight(self) -> list[Request]:
+        """Shared eviction machinery: release every slot and reset each
+        in-flight request's progress, in rid order. Per-request bookkeeping
+        (stats, retry budget, requeue decision) is the caller's contract;
+        requeue is FRONT-ordered so work interrupted by back-to-back
+        interruptions is not starved by newly arriving requests."""
+        evicted = []
+        for rid in sorted(self.kv.release_all()):
             req = self.running.pop(rid)
-            req.state = RequestState.FAILED
             req.generated = []
             req.slot = -1
+            evicted.append(req)
+        return evicted
+
+    @staticmethod
+    def _requeue_front(queue, reqs) -> None:
+        for req in reversed(reqs):
+            req.state = RequestState.QUEUED
+            queue.appendleft(req)
+
+    def fail_inflight(self) -> list[Request]:
+        """Rank failure: every in-flight request is reported failed and (per
+        client policy) resubmitted from scratch. A request that exceeds
+        ``max_retries`` is dropped (counted in stats) instead of retrying
+        forever — e.g. under a flapping rank."""
+        failed = self._evict_inflight()
+        retried = []
+        for req in failed:
+            req.state = RequestState.FAILED
             self.stats.failed += 1
-            failed.append(req)
             if not self.retry_failed:
                 continue
             if self.max_retries is not None and req.retries >= self.max_retries:
@@ -101,10 +113,21 @@ class Scheduler:
             req.retries += 1
             retried.append(req)
             self.stats.retried += 1
-        for req in reversed(retried):
-            req.state = RequestState.QUEUED
-            self.queue.appendleft(req)
+        self._requeue_front(self.queue, retried)
         return failed
+
+    def preempt_inflight(self) -> list[Request]:
+        """Planned drain/scale-down: in-flight work is *preempted*, not
+        failed — the control plane knew the capacity change was coming, so
+        every request requeues with no error reported to the client and no
+        retry budget consumed. Progress restarts from the prompt (the same
+        replay path a failure retry uses); the difference is purely
+        contractual: ``stats.preempted`` instead of ``failed``/``retried``,
+        and ``max_retries`` never drops them."""
+        preempted = self._evict_inflight()
+        self.stats.preempted += len(preempted)
+        self._requeue_front(self.queue, preempted)
+        return preempted
 
     @property
     def inflight(self) -> int:

@@ -376,7 +376,7 @@ def test_report_flags_malformed_spans(tmp_path):
 # ci_compare round-trips the widened scenario metric set
 # ---------------------------------------------------------------------------
 
-def _scen_doc(downtime=2.3, replan=0.8, r95=7.8, tokens=2000):
+def _scen_doc(downtime=2.3, replan=0.8, r95=7.8, tokens=2000, drain=0.8):
     return {"scenarios": [{
         "name": "cascade_mid_recovery", "dispatch": "ragged",
         "tokens_out": tokens, "downtime_s": downtime,
@@ -388,6 +388,11 @@ def _scen_doc(downtime=2.3, replan=0.8, r95=7.8, tokens=2000):
         "tokens_out": 50, "downtime_s": 0.0,
         "phases": {"detect": 1.5},
         "restore_95_s": -1.0,                 # never restored: no metric
+    }, {
+        "name": "rolling_maintenance_drain", "dispatch": "dense",
+        "tokens_out": 1800, "downtime_s": 2 * drain,
+        "phases": {"drain": 2 * drain, "table-patch": 0.8},
+        "restore_95_s": -1.0,                 # planned-only: never "failed"
     }]}
 
 
@@ -401,8 +406,22 @@ def test_ci_compare_roundtrip_widened_metrics():
     assert cur[f"{key}/downtime_s"] == (2.3, "lower")
     assert "majority_coverage_loss[dense]/restore_95_s" not in cur
     assert "majority_coverage_loss[dense]/phase/detect_s" in cur
+    # planned-transition pauses ride the same per-phase gate
+    assert cur["rolling_maintenance_drain[dense]/phase/drain_s"] == \
+        (1.6, "lower")
     # identical docs: round-trips with zero regressions
     assert ci_compare.compare(cur, cur, tolerance=0.15) == []
+
+
+def test_ci_compare_gates_drain_pause_regressions():
+    """A drain pause regressing >15% fails the build like a recovery
+    pause does (the planned-transition trajectory gate)."""
+    from benchmarks import ci_compare
+    prev = ci_compare._scenario_metrics(_scen_doc())
+    cur = ci_compare._scenario_metrics(_scen_doc(drain=1.2))
+    bad = ci_compare.compare(prev, cur, tolerance=0.15)
+    assert any("rolling_maintenance_drain[dense]/phase/drain_s" in b
+               for b in bad), bad
 
 
 def test_ci_compare_catches_phase_and_restore_regressions():

@@ -47,6 +47,21 @@ def test_parse_schedule_basic():
     )
 
 
+def test_parse_schedule_planned_ops():
+    acts = parse_schedule("""
+        @2.0  drain 1
+        @10.0 undrain 1
+        @12.0 scale down 6 7
+        @20.0 scale up 6 7
+    """)
+    assert acts == (
+        Action(2.0, "drain", (1,)),
+        Action(10.0, "undrain", (1,)),
+        Action(12.0, "scale", (6, 7), direction="down"),
+        Action(20.0, "scale", (6, 7), direction="up"),
+    )
+
+
 def test_parse_schedule_sorts_by_time_stably():
     acts = parse_schedule("@5 fail 1\n@1 fail 2\n@5 fail 3")
     assert [a.t for a in acts] == [1.0, 5.0, 5.0]
@@ -54,7 +69,8 @@ def test_parse_schedule_sorts_by_time_stably():
 
 
 def test_parse_schedule_roundtrip():
-    src = "@1 fail 2 5\n@2 slow 3 x2.5\n@14 restore 3"
+    src = ("@1 fail 2 5\n@2 slow 3 x2.5\n@3 drain 1\n@5 scale down 6 7\n"
+           "@9 undrain 1\n@14 restore 3\n@20 scale up 6 7")
     acts = parse_schedule(src)
     assert parse_schedule(format_schedule(acts)) == acts
 
@@ -68,6 +84,9 @@ def test_parse_schedule_roundtrip():
     "@1 slow 3",              # slow without factor
     "@1 slow 3 x0",           # non-positive factor
     "@1 fail -2",             # negative rank
+    "@1 scale 6",             # scale without direction
+    "@1 scale sideways 6",    # unknown direction
+    "@1 drain",               # no ranks
 ])
 def test_parse_schedule_rejects(bad):
     with pytest.raises(ValueError):
@@ -215,17 +234,23 @@ def test_tier2_source_dies_mid_transfer_escalates_to_tier3():
     assert not rt.table.entries[0].active and not rt.table.entries[4].active
 
 
-def test_failure_policy_rebinds_on_engine_construction():
+def test_transition_policy_rebinds_on_engine_construction():
     """A baseline engine must not permanently hijack a reused runtime's
-    failure policy: the most recently constructed engine wins."""
+    transition policy: the most recently constructed engine wins. The
+    full-restart baseline is a TransitionPolicy selected at construction —
+    the engine never monkeypatches a handler onto the runtime."""
+    from repro.core.transitions import ElasticPolicy, FullRestartPolicy
     from repro.serving.engine import ServingEngine
     scn = get_scenario("concurrent_multi_failure")
     rt = build_scenario_runtime(scn)
+    assert isinstance(rt.policy, ElasticPolicy)          # runtime default
     eng_base = ServingEngine(rt, max_batch=2, max_len=16,
                              fixed_membership=True)
-    assert rt.failure_policy == eng_base._full_restart
+    assert rt.policy is eng_base.policy
+    assert isinstance(rt.policy, FullRestartPolicy)
+    assert not hasattr(rt, "failure_policy")             # monkeypatch is gone
     ServingEngine(rt, max_batch=2, max_len=16)
-    assert rt.failure_policy == rt.handle_failure
+    assert isinstance(rt.policy, ElasticPolicy)
 
 
 def test_run_registry_baseline_pairing():
@@ -282,6 +307,10 @@ def test_registry_e2e_invariants(dispatch):
         "failure_during_warmup": "warmup_abort",
         "rejoin_storm": "join_batch",
         "straggler_degrades_then_dies": "straggler_mitigation",
+        "rolling_maintenance_drain": "drain",
+        "drain_overlapping_fault": "drain",
+        "elastic_shrink_regrow": "scale_down",
+        "mixed_planned_unplanned": "scale_up",
     }
     for name in list_scenarios():
         res = run_scenario(name, dispatch=dispatch)
@@ -296,7 +325,8 @@ def test_registry_e2e_invariants(dispatch):
                                                   res.coverage_loss_events)
             assert res.min_live_replicas >= 1, name
             assert res.final_active_fraction == 1.0, name
-            assert res.recoveries >= 1, name
+            if scn.has_fault:
+                assert res.recoveries >= 1, name
         assert res.tokens_out > 0, name
         kinds = {e["kind"] for e in res.timeline}
         if name in expected_kinds:
@@ -306,7 +336,24 @@ def test_registry_e2e_invariants(dispatch):
         bad_spans = validate_spans(res.spans)
         assert not bad_spans, (name, dispatch, bad_spans[:3])
         assert set(res.phase_totals) <= set(ALL_PHASES), name
-        if not scn.expect_coverage_loss:
+        if scn.has_fault and not scn.expect_coverage_loss:
             assert {"detect", "replan", "warmup",
                     "table-patch"} <= set(res.phase_totals), name
             assert res.restore_95_s > 0, (name, dispatch)
+        if scn.has_planned and not scn.expect_coverage_loss:
+            # planned-transition contract: the ops committed, paused under
+            # the planned phases, never failed a client request for a
+            # drain/scale (preempted instead), and every commit bumped the
+            # epoch (mirrored by the device-published version — checked at
+            # every step boundary by the runner)
+            assert res.drains + res.scale_downs >= 1, name
+            assert {"drain", "scale-down"} & set(res.phase_totals), name
+            assert res.transition_aborts == 0, name
+            planned_events = [e for e in res.timeline
+                              if e["kind"] in ("drain", "scale_down")]
+            assert all(e["detail"]["pause_s"] < 5.0 for e in planned_events), \
+                (name, planned_events)
+            epochs = [e["detail"]["epoch"] for e in res.timeline
+                      if e["kind"] == "membership_commit"]
+            assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs)
+            assert res.final_epoch == epochs[-1]

@@ -1,0 +1,543 @@
+"""Transactional membership control plane (repro.core.transitions):
+
+  * epoch semantics — epochs strictly increase across EVERY transition kind
+    (fault, join batch, drain, undrain, scale down/up, straggler re-place),
+    and the device-published ``MembershipState.version`` mirrors the
+    committed epoch;
+  * abort semantics — a transaction that fails planning or validation
+    leaves table/params/membership byte-identical (deterministic + a
+    hypothesis property test over random drain sets);
+  * the ControlPlane facade (drain/undrain/scale_down/scale_up) and the
+    TransitionPolicy selection (elastic vs full-restart baseline);
+  * structural enforcement — the runtime and engine sources contain NO
+    direct ``set_placement``/``to_device``/validity-check call sites: every
+    mutation goes through ``MembershipTransaction.commit``;
+  * the satellite fixes: targeted nested-dict copy in
+    ``set_moe_slot_leaves``, real tier2/tier3 byte counts in straggler
+    telemetry, incident tags on mid-transfer recovery events, and graceful
+    preemption (not failure) of in-flight requests on planned drains.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.repair import RecoveryCostModel
+from repro.core.reintegration import WarmupCostModel
+from repro.core.scenarios import Scenario
+from repro.core.transitions import (
+    ElasticPolicy,
+    FullRestartPolicy,
+    TransitionAborted,
+    TransitionPolicy,
+    moe_slot_leaves,
+    set_moe_slot_leaves,
+)
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.runtime.scenario_runner import build_scenario_runtime
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request
+
+
+def _runtime(world=8, spr=2, seed=0, **kw):
+    cfg = get_config("mixtral-8x22b").reduced()   # 4 experts, top-2
+    table = make_initial_membership(world, cfg.moe.num_experts, spr)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    return cfg, ElasticEPRuntime(cfg, params, table,
+                                 warmup_model=WarmupCostModel(1, 1, 2, 1),
+                                 **kw)
+
+
+def _snapshot(rt):
+    return {
+        "membership": rt.membership,
+        "table": rt.table,
+        "params": rt.params,
+        "epoch": rt.epoch,
+        "active": rt.table.active_mask.copy(),
+        "s2e": rt.table.slot_to_expert.copy(),
+        "version": rt.table.version,
+    }
+
+
+def _assert_untouched(rt, snap):
+    assert rt.membership is snap["membership"]      # never republished
+    assert rt.table is snap["table"]                # never swapped
+    assert rt.params is snap["params"]              # never swapped
+    assert rt.epoch == snap["epoch"]
+    np.testing.assert_array_equal(rt.table.active_mask, snap["active"])
+    np.testing.assert_array_equal(rt.table.slot_to_expert, snap["s2e"])
+    assert rt.table.version == snap["version"]
+
+
+def _dev_version(rt) -> int:
+    return int(np.asarray(rt.membership.version))
+
+
+# ---------------------------------------------------------------------------
+# Epoch semantics
+# ---------------------------------------------------------------------------
+
+def test_epoch_strictly_increases_across_every_transition_kind():
+    """fault, join, drain, undrain, scale down, scale up, straggler
+    re-place: each is exactly one commit, each bumps the epoch, and the
+    device-published version mirrors it at every point."""
+    cfg, rt = _runtime()
+    epochs = [rt.epoch]
+
+    def checkpoint():
+        assert rt.epoch > epochs[-1], "epoch must strictly increase"
+        assert _dev_version(rt) == rt.epoch, "device version mirrors epoch"
+        epochs.append(rt.epoch)
+
+    assert _dev_version(rt) == rt.epoch            # bootstrap commit
+
+    # fault
+    rt.detector.mark_unreachable(3)
+    rt.clock.advance(1.5)
+    rt.handle_failure(rt.poll_failures())
+    checkpoint()
+
+    # deferred join of the casualty
+    rt.clock.advance(10.0)
+    assert rt.poll_reintegration() == [3]
+    checkpoint()
+
+    # drain
+    rt.control.drain(1)
+    checkpoint()
+
+    # undrain
+    rt.control.undrain(1)
+    checkpoint()
+
+    # scale down
+    rt.control.scale_down(6, 7)
+    checkpoint()
+
+    # scale up rides the deferred-join path: the commit lands at the join
+    rt.control.scale_up(6, 7)
+    rt.clock.advance(10.0)
+    assert rt.poll_reintegration() == [6, 7]
+    checkpoint()
+
+    # straggler re-place (no membership change, still one commit)
+    rt.expert_load = np.array([10.0, 1.0, 1.0, 1.0])
+    rt.rank_slowdown[2] = 4.0
+    for _ in range(12):
+        rt.clock.advance(0.05)
+        rt.observe_step_latencies(0.05)
+        rt.mitigate_stragglers()
+    assert 2 in rt.straggler.flagged
+    checkpoint()
+
+    assert epochs == sorted(set(epochs))
+
+
+def test_membership_commit_events_carry_the_epoch():
+    cfg, rt = _runtime()
+    rt.control.drain(2)
+    commits = [e for e in rt.timeline if e.kind == "membership_commit"]
+    assert commits[-1].detail["transition"] == "drain"
+    assert commits[-1].detail["epoch"] == rt.epoch
+    kinds = [e.detail["transition"] for e in commits]
+    assert kinds[0] == "bootstrap"
+
+
+# ---------------------------------------------------------------------------
+# Abort semantics: nothing leaks from a failed transaction
+# ---------------------------------------------------------------------------
+
+def test_infeasible_drain_aborts_and_leaves_state_untouched():
+    """Draining so many ranks that coverage becomes impossible must REJECT
+    the plan (unlike a fault, nothing has broken yet) and leave
+    table/params/membership byte-identical."""
+    cfg, rt = _runtime(world=6, spr=1)     # 6 slots, 4 experts
+    snap = _snapshot(rt)
+    with pytest.raises(TransitionAborted):
+        rt.drain_ranks([0, 1, 2])          # 3 surviving slots < 4 experts
+    _assert_untouched(rt, snap)
+    aborts = [e for e in rt.timeline if e.kind == "transition_abort"]
+    assert aborts and aborts[0].detail["op"] == "drain"
+    # and the instance still serves: a feasible drain afterwards commits
+    rt.drain_ranks([0])
+    assert rt.epoch == snap["epoch"] + 1
+
+
+def test_commit_validation_failure_aborts_and_leaves_state_untouched():
+    """A transaction whose staged state flunks the validity check (here: an
+    activated rank the detector knows is dead) must abort before publish."""
+    cfg, rt = _runtime()
+    rt.detector.mark_unreachable(5)
+    rt.clock.advance(1.5)
+    rt.handle_failure(rt.poll_failures())          # rank 5 now inactive
+    snap = _snapshot(rt)
+    txn = rt.begin("join")
+    txn.activate([5])                              # never marked reachable!
+    txn.plan()
+    rep = txn.validate()
+    assert not rep.valid                           # dry-run agrees
+    with pytest.raises(TransitionAborted):
+        txn.commit()
+    _assert_untouched(rt, snap)
+    assert txn.state == "aborted"
+
+
+def test_coverage_loss_still_publishes_the_deaths():
+    """A fault whose recovery aborts on coverage loss must not leave the
+    published peer set claiming the dead ranks are active: the deaths are
+    facts, recorded by a degraded commit even though the (stopped)
+    instance is formally invalid."""
+    from repro.core.failure import CoverageLossError
+    cfg, rt = _runtime(world=6, spr=1)     # 6 slots, 4 experts
+    for r in range(1, 6):
+        rt.detector.mark_unreachable(r)    # 1 surviving slot < 4 experts
+    rt.clock.advance(1.5)
+    epoch0 = rt.epoch
+    with pytest.raises(CoverageLossError):
+        rt.handle_failure(rt.poll_failures())
+    assert not rt.table.entries[1].active          # deaths published
+    assert rt.active_fraction() == pytest.approx(1 / 6)
+    assert _dev_version(rt) == rt.epoch == epoch0 + 1
+    commits = [e for e in rt.timeline if e.kind == "membership_commit"]
+    assert commits[-1].detail.get("degraded") is True
+    assert any(e.kind == "coverage_loss" for e in rt.timeline)
+
+
+def test_aborted_undrain_via_pump_still_leaves_telemetry():
+    """An abort raised by a handler that did not record it (anything but a
+    drain) must still surface as a transition_abort event from the pump."""
+    from repro.core.transitions import TransitionAborted
+
+    class ExplodingPolicy(ElasticPolicy):
+        def on_undrain(self, rt, ranks):
+            raise TransitionAborted("synthetic", reason="synthetic")
+
+    cfg, rt = _runtime()
+    rt.control.drain(2)
+    rt.set_policy(ExplodingPolicy())
+    handled, mode = rt.control.undrain(2)
+    assert handled == [2] and mode == "aborted"
+    aborts = [e for e in rt.timeline if e.kind == "transition_abort"]
+    assert aborts and aborts[-1].detail["op"] == "undrain"
+
+
+def test_engine_rejects_conflicting_policy_args():
+    cfg, rt = _runtime()
+    from repro.core.transitions import FullRestartCostModel
+    with pytest.raises(ValueError):
+        ServingEngine(rt, max_batch=2, max_len=16, fixed_membership=True,
+                      policy=ElasticPolicy())
+    with pytest.raises(ValueError):
+        ServingEngine(rt, max_batch=2, max_len=16,
+                      restart_model=FullRestartCostModel(),
+                      policy=FullRestartPolicy())
+
+
+def test_transaction_refuses_use_after_commit_or_abort():
+    cfg, rt = _runtime()
+    txn = rt.begin("drain")
+    txn.deactivate([1], drained=True)
+    txn.plan(source_active=rt.table.active_mask)
+    txn.commit()
+    with pytest.raises(RuntimeError):
+        txn.commit()
+    with pytest.raises(RuntimeError):
+        txn.deactivate([2])
+
+
+def test_property_random_drain_sets_commit_or_roll_back():
+    """Property test: for ANY subset of ranks, a drain either commits (epoch
+    +1, validity holds, exactly the requested ranks inactive) or aborts
+    with the state untouched — never a half-applied transition."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    cfg = get_config("mixtral-8x22b").reduced()
+
+    @settings(max_examples=20, deadline=None)
+    @given(ranks=st.sets(st.integers(min_value=0, max_value=5),
+                         min_size=1, max_size=5))
+    def prop(ranks):
+        table = make_initial_membership(6, cfg.moe.num_experts, 1)
+        params = init_params(cfg, jax.random.key(0), jnp.float32,
+                             table.slot_to_expert, table.num_slots)
+        rt = ElasticEPRuntime(cfg, params, table)
+        snap = _snapshot(rt)
+        feasible = 6 - len(ranks) >= cfg.moe.num_experts
+        if feasible:
+            rt.drain_ranks(sorted(ranks))
+            assert rt.epoch == snap["epoch"] + 1
+            assert _dev_version(rt) == rt.epoch
+            from repro.core.validity import check
+            rep = check(rt.table, rt.membership,
+                        reachable=rt.detector.known_reachable())
+            assert rep.valid, rep.violations
+            assert set(np.nonzero(~rt.table.active_mask)[0]) == ranks
+        else:
+            with pytest.raises(TransitionAborted):
+                rt.drain_ranks(sorted(ranks))
+            _assert_untouched(rt, snap)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# ControlPlane + planned-transition mechanics
+# ---------------------------------------------------------------------------
+
+def test_drain_uses_departing_rank_as_tier2_source():
+    """Unlike a fault casualty, a draining rank is alive through the
+    transfer window: its uniquely-hosted experts move GPU-to-GPU (Tier 2),
+    never via Tier-3 DRAM reload."""
+    cfg, rt = _runtime(world=8, spr=1)     # 8 slots, 4 experts, R=2
+    handled, mode = rt.control.drain(0)
+    assert handled == [0] and mode == "elastic"
+    ev = [e for e in rt.timeline if e.kind == "drain"][-1]
+    assert ev.detail["mix"]["dram_reload"] == 0
+    assert ev.detail["tier3_bytes"] == 0
+    assert ev.detail["mix"]["gpu_relocation"] >= 1
+    assert ev.detail["tier2_bytes"] > 0
+    # no detect window: the planned pause is well under a fault recovery
+    assert ev.detail["pause_s"] < rt.cost_model.detect_s + \
+        rt.cost_model.drain_s + rt.cost_model.coordinate_s
+
+
+def test_drained_rank_is_not_relaunched_and_keeps_heartbeating():
+    cfg, rt = _runtime()
+    rt.control.drain(2)
+    assert rt.table.entries[2].drained
+    assert not rt.controller.is_recovering(2)      # no relaunch scheduled
+    # a failure elsewhere must not relaunch the drained rank either
+    rt.detector.mark_unreachable(5)
+    rt.clock.advance(1.5)
+    rt.handle_failure(rt.poll_failures())
+    assert not rt.controller.is_recovering(2)
+    assert rt.controller.is_recovering(5)
+    # drained ranks heartbeat (alive, idling): the detector never misreads
+    # the planned drain as a fault
+    for _ in range(40):
+        rt.clock.advance(0.1)
+        rt.heartbeat()
+    assert 2 not in rt.detector.poll()
+
+
+def test_undrain_of_a_rank_that_died_while_drained_takes_warmup_path():
+    cfg, rt = _runtime()
+    rt.control.drain(2)
+    rt.injector.inject_at(rt.clock.now() + 0.5, [2])
+    rt.clock.advance(1.0)
+    rt.injector.step()                      # the drained rank's process dies
+    assert not rt.detector.reachable[2]
+    handled, _ = rt.control.undrain(2)
+    assert handled == [2]
+    assert rt.controller.is_recovering(2)   # relaunch, not instant rejoin
+    assert not rt.table.entries[2].active
+    # idempotent re-request must NOT restart the in-flight warmup
+    rt.clock.advance(2.0)
+    t_state = rt.controller.recovering[2].t_state_entered
+    assert rt.control.undrain(2) == ([], None)
+    assert rt.controller.recovering[2].t_state_entered == t_state
+    rt.clock.advance(10.0)
+    assert rt.poll_reintegration() == [2]
+    assert rt.table.entries[2].active and not rt.table.entries[2].drained
+
+
+def test_scale_up_rides_the_deferred_join_path():
+    cfg, rt = _runtime()
+    rt.control.scale_down(6, 7)
+    assert rt.active_fraction() == 0.75
+    rt.control.scale_up(6, 7)
+    assert rt.controller.is_recovering(6) and rt.controller.is_recovering(7)
+    warm = [s for s in rt.obs.spans if s.phase == "warmup"
+            and s.meta.get("planned")]
+    assert {s.meta["rank"] for s in warm} == {6, 7}
+    rt.clock.advance(10.0)
+    assert rt.poll_reintegration() == [6, 7]       # ONE batched join patch
+    assert rt.active_fraction() == 1.0
+    patches = [s for s in rt.obs.spans if s.phase == "table-patch"]
+    assert len(patches) == 1
+
+
+def test_control_plane_filters_ineligible_ranks():
+    cfg, rt = _runtime()
+    assert rt.control.undrain(3) == ([], None)     # nothing drained
+    rt.control.drain(3)
+    assert rt.control.drain(3) == ([], None)       # already drained
+    assert rt.control.scale_up(1) == ([], None)    # rank 1 is active
+
+
+def test_full_restart_policy_answers_drain_with_a_restart():
+    """The fixed-membership baseline has exactly one move for planned
+    maintenance too — rebuild the instance (which is the paper's point)."""
+    cfg, rt = _runtime()
+    eng = ServingEngine(rt, max_batch=2, max_len=32, fixed_membership=True)
+    assert isinstance(rt.policy, FullRestartPolicy)
+    assert isinstance(rt.policy, TransitionPolicy)  # protocol conformance
+    handled, mode = rt.control.drain(2)
+    assert handled == [2] and mode == "restart"
+    kinds = [e.kind for e in rt.timeline]
+    assert "full_restart_done" in kinds
+    assert rt.table.entries[2].active              # membership CANNOT change
+    spans = [s.phase for s in rt.obs.spans]
+    assert spans.count("full-restart") == 1
+    restart = [s for s in rt.obs.spans if s.phase == "full-restart"][0]
+    assert restart.duration_s == pytest.approx(348.0)   # baseline parity
+    assert eng.compile_count() == 0 or eng.compile_count() == 1
+
+
+def test_elastic_policy_protocol_conformance():
+    assert isinstance(ElasticPolicy(), TransitionPolicy)
+    assert ElasticPolicy().mutates_membership
+    assert not FullRestartPolicy().mutates_membership
+
+
+# ---------------------------------------------------------------------------
+# Engine requeue semantics for drained slots
+# ---------------------------------------------------------------------------
+
+def test_drain_preempts_inflight_requests_without_failing_them():
+    cfg, rt = _runtime()
+    eng = ServingEngine(rt, max_batch=4, max_len=64)
+    for i in range(4):
+        eng.sched.submit(Request(rid=i, prompt=[1] * 6, max_new_tokens=24))
+    for _ in range(5):
+        eng.step()
+    assert eng.sched.inflight > 0
+    rt.control.request("drain", [2])               # lands at the next step
+    eng.step()
+    st = eng.sched.stats
+    assert st.preempted > 0
+    assert st.failed == 0 and st.retried == 0 and st.dropped == 0
+    # the preempted work resumes and completes on the shrunken instance
+    eng.run(until=rt.clock.now() + 60.0, max_steps=3000)
+    assert eng.sched.stats.finished == 4
+    assert eng.compile_count() == 1
+
+
+def test_scheduler_preempt_requeues_front_without_retry_budget():
+    from repro.serving.kv_cache import KVCacheManager
+    from repro.serving.scheduler import Scheduler
+    kv = KVCacheManager(num_slots=2, max_len=32)
+    sched = Scheduler(kv, max_retries=0)           # zero retry budget
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=[1], max_new_tokens=4))
+    sched.admit()
+    sched.preempt_inflight()
+    assert [r.rid for r in sched.queue] == [0, 1, 2]   # preempted go FIRST
+    assert sched.stats.preempted == 2
+    assert sched.stats.failed == sched.stats.dropped == 0
+    sched.admit()                                  # re-admits despite budget
+    assert sched.inflight == 2
+
+
+# ---------------------------------------------------------------------------
+# Structural enforcement: one commit path
+# ---------------------------------------------------------------------------
+
+def test_runtime_and_engine_have_no_direct_mutation_call_sites():
+    """The acceptance contract, enforced on the source itself: nothing in
+    the runtime or the serving engine calls set_placement / to_device /
+    the validity checker directly — every mutation is a
+    MembershipTransaction commit."""
+    import inspect
+    import repro.runtime.elastic as elastic
+    import repro.serving.engine as engine
+    for mod in (elastic, engine):
+        src = inspect.getsource(mod)
+        assert ".set_placement(" not in src, mod.__name__
+        assert ".to_device(" not in src, mod.__name__
+        assert "validity_check(" not in src, mod.__name__
+        assert ".reactivate(" not in src, mod.__name__
+        assert ".deactivate(" not in src or mod is elastic, mod.__name__
+    # the runtime's only deactivations are transaction-staged
+    src = inspect.getsource(elastic)
+    assert "txn.deactivate(" in src
+    assert "self.table.deactivate(" not in src
+
+
+def test_mixed_run_single_compile_and_monotonic_epochs():
+    """One run mixing faults, a drain/undrain and a scale down/up: the jit
+    cache stays at 1 and every commit strictly bumps the epoch (the
+    acceptance scenario for the transactional redesign)."""
+    from repro.runtime.scenario_runner import run_scenario
+    res = run_scenario("mixed_planned_unplanned")
+    assert res.compile_count == 1
+    assert res.invariants_ok, res.validity_violations[:3]
+    assert res.recoveries >= 1 and res.drains >= 1 and res.scale_ups >= 1
+    epochs = [e["detail"]["epoch"] for e in res.timeline
+              if e["kind"] == "membership_commit"]
+    assert len(epochs) >= 5                       # one per transition kind
+    assert epochs == sorted(set(epochs))
+    assert res.final_epoch == epochs[-1]
+    assert res.final_active_fraction == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_set_moe_slot_leaves_targeted_copy_shares_untouched_subtrees():
+    cfg, rt = _runtime()
+    params = rt.params
+    leaves = moe_slot_leaves(cfg, params)
+    (first_key, first_leaf), *rest = list(leaves.items())
+    new_leaf = first_leaf + 1.0
+    out = set_moe_slot_leaves(params, {first_key: new_leaf})
+    g, l, w = first_key
+    # the swapped leaf landed; the original tree is untouched
+    assert out["groups"][g][l]["moe"][w] is new_leaf
+    assert params["groups"][g][l]["moe"][w] is first_leaf
+    # every OTHER subtree is shared, not copied: same objects
+    for (g2, l2, w2), leaf in rest:
+        assert out["groups"][g2][l2]["moe"][w2] is leaf
+    for key in params:
+        if key != "groups":
+            assert out[key] is params[key]
+    untouched_layers = [(gn, ln) for gn, grp in params["groups"].items()
+                        for ln in grp if (gn, ln) != (g, l)]
+    for gn, ln in untouched_layers:
+        assert out["groups"][gn][ln] is params["groups"][gn][ln]
+    # empty patch: identity
+    assert set_moe_slot_leaves(params, {}) is params
+
+
+def test_straggler_mitigation_reports_real_transfer_bytes():
+    """The straggler re-place telemetry must carry the actual tier2/tier3
+    byte counts (the plan is built with bytes_per_slot now)."""
+    cfg, rt = _runtime(world=8, spr=2)
+    rt.expert_load = np.array([10.0, 1.0, 1.0, 1.0])
+    rt.rank_slowdown[3] = 3.0
+    for _ in range(12):
+        rt.clock.advance(0.05)
+        rt.observe_step_latencies(0.05)
+        rt.mitigate_stragglers()
+    evs = [e for e in rt.timeline if e.kind == "straggler_mitigation"]
+    assert evs and 3 in evs[0].detail["flagged"]
+    assert evs[0].detail["tier2_bytes"] > 0       # was always 0 before
+    assert evs[0].detail["epoch"] == rt.epoch
+
+
+def test_mid_transfer_recovery_events_carry_incident_tags():
+    """Every event emitted inside the repair-transfer window (cascade
+    restarts, tier escalations) is stamped with its incident."""
+    scn = Scenario(name="tmp_esc2", description="", schedule="@0 fail 0",
+                   world=8, slots_per_rank=1)
+    rt = build_scenario_runtime(scn)
+    rt.cost_model = RecoveryCostModel(ici_gbps=1e-9, host_gbps=1e-9)
+    rt.detector.mark_unreachable(0)
+    rt.clock.advance(1.5)
+    failed = rt.poll_failures()
+    rt.injector.inject_at(rt.clock.now() + 2.4, [4])
+    rt.handle_failure(failed)
+    tagged = [e for e in rt.obs.events
+              if e.kind in ("recovery_restart", "transfer_escalation",
+                            "failure", "recovery_done", "coverage_loss")]
+    assert tagged
+    assert all(e.incident >= 0 for e in tagged), \
+        [(e.kind, e.incident) for e in tagged]
