@@ -43,13 +43,27 @@ def _scenario_metrics(doc: dict) -> dict[str, Metric]:
     breakdown (detect/replan/repair-transfer/warmup/table-patch seconds
     from the telemetry spans, PLUS the planned-transition pauses `drain`
     and `scale-down` — a drain pause regressing past tolerance fails the
-    build exactly like a recovery pause) and the restore-to-95%-throughput
-    time. Metric keys embed the dispatch mode so the dense and ragged rows
-    of one scenario track separate trajectories."""
+    build exactly like a recovery pause), the restore-to-95%-throughput
+    time, and the client-perceived serving-frontend metrics (TTFT and p99
+    inter-token stall gate next to the recovery pauses; goodput gates in
+    the higher-is-better direction). Metric keys embed the dispatch mode
+    so the dense and ragged rows of one scenario track separate
+    trajectories."""
     out: dict[str, Metric] = {}
     for row in doc.get("scenarios", []):
         key = f"{row['name']}[{row.get('dispatch', 'dense')}]"
-        out[f"{key}/tokens_out"] = (float(row["tokens_out"]), "higher")
+        client = row.get("client") or {}
+        if client:
+            # serving-frontend era: gate the exactly-once DELIVERED token
+            # count. The old `tokens_out` counted recomputed retry
+            # duplicates as output, so its trajectory is not comparable
+            # across the continuation change — the key retires (removed
+            # metrics never fail) and `tokens_delivered` starts fresh.
+            out[f"{key}/tokens_delivered"] = (
+                float(client.get("delivered_tokens", row["tokens_out"])),
+                "higher")
+        else:
+            out[f"{key}/tokens_out"] = (float(row["tokens_out"]), "higher")
         out[f"{key}/downtime_s"] = (float(row["downtime_s"]), "lower")
         for ph, secs in (row.get("phases") or {}).items():
             out[f"{key}/phase/{ph}_s"] = (float(secs), "lower")
@@ -58,6 +72,16 @@ def _scenario_metrics(doc: dict) -> dict[str, Metric]:
             # -1 means "never restored" (e.g. designed coverage loss): not a
             # trajectory point, and comparing it as a magnitude is nonsense
             out[f"{key}/restore_95_s"] = (float(r95), "lower")
+        # client-perceived latency (absent in pre-frontend artifacts; a
+        # negative percentile is the "no measurement" sentinel)
+        for metric, direction in (("ttft_p50_s", "lower"),
+                                  ("ttft_p99_s", "lower"),
+                                  ("stall_p50_s", "lower"),
+                                  ("stall_p99_s", "lower"),
+                                  ("goodput_tok_s", "higher")):
+            v = client.get(metric)
+            if v is not None and float(v) >= 0:
+                out[f"{key}/client/{metric}"] = (float(v), direction)
     return out
 
 

@@ -24,8 +24,10 @@ def run_trace(f: int, world: int = 32, fixed: bool = False,
     eng = ServingEngine(rt, max_batch=8, max_len=4096,
                         base_step_time=0.25, fixed_membership=fixed)
     for i in range(64):
+        # max_new must fit the KV slot (submit-time overflow guard); 4000
+        # tokens at 0.25 s/step still outlives every horizon here
         eng.sched.submit(Request(rid=i, prompt=[1] * 4,
-                                 max_new_tokens=100_000))
+                                 max_new_tokens=4000))
     rt.injector.inject_at(30.0, list(range(f)))
     eng.run(until=horizon, max_steps=40_000)
     return rt, eng

@@ -10,9 +10,11 @@ deterministic scenario runner — by default under BOTH dispatch layouts
 (dense and ragged) — pairs each scenario with the full-restart baseline on
 the same schedule, and writes a ``BENCH_scenarios.json`` trajectory file:
 per-scenario tokens served, downtime, recovery/join counts, invariant
-status, the throughput trace, AND the phase telemetry the report generator
+status, the throughput trace, the phase telemetry the report generator
 consumes (per-incident spans, summed per-phase seconds, restore-to-95%
-time — see docs/recovery-lifecycle.md for the phase vocabulary).
+time — see docs/recovery-lifecycle.md for the phase vocabulary), AND the
+client-perceived serving-frontend metrics (TTFT, inter-token stall
+percentiles, goodput, tokens recomputed on resume — docs/serving-api.md).
 
 ``--smoke`` runs a 3-scenario dense-only subset with a single baseline pair
 — the CI PR perf-trajectory artifact (< 5 min on CPU). The nightly job runs
@@ -115,6 +117,14 @@ def main(argv=None) -> int:
                   f"tokens_out={res.tokens_out}"
                   f"_finished={res.requests_finished}"
                   f"_dropped={res.requests_dropped}")
+            c = res.client
+            print(f"scenario/{name}[{mode}]/client,0,"
+                  f"ttft_p50={c.get('ttft_p50_s', -1)}"
+                  f"_stall_p99={c.get('stall_p99_s', -1)}"
+                  f"_stall_max={c.get('stall_max_s', -1)}"
+                  f"_goodput={c.get('goodput_tok_s', 0)}"
+                  f"_recomputed={c.get('tokens_recomputed', 0)}"
+                  f"_errors={c.get('error_events', 0)}")
             if "baseline" in row:
                 b = row["baseline"]
                 print(f"scenario/{name}/vs_restart,0,"
@@ -125,7 +135,8 @@ def main(argv=None) -> int:
 
     bad = [f"{r['name']}[{r['dispatch']}]" for r in rows
            if r["validity_violations"] or r["compile_count"] != 1
-           or r["coverage_loss"] != r["coverage_loss_expected"]]
+           or r["coverage_loss"] != r["coverage_loss_expected"]
+           or r.get("stream_violations", 0)]
     bad += span_bad
     out = {
         "meta": {

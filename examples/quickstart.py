@@ -1,5 +1,7 @@
-"""Quickstart: build a small elastic MoE instance, serve a few requests,
-kill a rank mid-flight, watch it recover and rejoin.
+"""Quickstart: build a small elastic MoE instance, stream a few client
+sessions through the serving frontend, kill a rank mid-flight, and watch
+the streams ride out the fault as a bounded stall (continuation
+semantics) while the rank recovers and rejoins.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,8 +16,8 @@ from repro.core import make_initial_membership
 from repro.core.reintegration import WarmupCostModel
 from repro.models import init_params
 from repro.runtime.elastic import ElasticEPRuntime
+from repro.serving.api import ServingFrontend
 from repro.serving.engine import ServingEngine
-from repro.serving.request import Request
 
 
 def main():
@@ -28,24 +30,37 @@ def main():
     rt = ElasticEPRuntime(cfg, params, table,
                           warmup_model=WarmupCostModel(1, 2, 3, 2))
     eng = ServingEngine(rt, max_batch=4, max_len=48)
+    fe = ServingFrontend(eng)
 
-    for i in range(8):
-        eng.sched.submit(Request(rid=i, prompt=[3, 1, 4, 1, 5],
-                                 max_new_tokens=10))
+    handles = [fe.submit([3, 1, 4, 1, 5], max_new=10) for _ in range(8)]
 
     # fail rank 3 one (simulated) second in
     rt.injector.inject_at(1.0, [3])
-    eng.run(until=60.0, max_steps=3000)
 
-    print(f"requests finished : {eng.sched.stats.finished}")
-    print(f"tokens generated  : {eng.sched.stats.tokens_out}")
+    # iterate one stream like a client would: the frontend steps the engine
+    # as needed; the others fill in along the way
+    for ev in handles[0]:
+        print(f"  rid 0  t={ev.t:6.2f}s  {ev.kind}"
+              + (f"  index={ev.index} token={ev.token}"
+                 if ev.kind == "TOKEN" else f"  {ev.detail}"))
+    fe.run(until=60.0, max_steps=3000)   # drain the rest + the rejoin
+
+    st = eng.sched.stats
+    print(f"requests finished : {st.finished} "
+          f"(failed={st.failed}, suspended={st.suspended})")
+    print(f"tokens generated  : {st.tokens_out}")
     print(f"compilations      : {eng.compile_count()} "
           f"(one executable across fail/recover/rejoin)")
-    print("timeline:")
-    for ev in rt.timeline:
-        print(f"  t={ev.t:6.2f}s  {ev.kind}")
+    m = fe.metrics()
+    print(f"client-perceived  : ttft_p50={m['ttft_p50_s']}s "
+          f"stall_max={m['stall_max_s']}s "
+          f"recomputed={m['tokens_recomputed']} "
+          f"error_events={m['error_events']}")
+    print("admin status      :",
+          fe.admin.execute_json('{"cmd": "status"}')[:120], "...")
+    assert not fe.stream_violations()
     assert rt.table.active_mask.all()
-    print("instance back at full capacity.")
+    print("instance back at full capacity; every stream exactly-once.")
 
 
 if __name__ == "__main__":

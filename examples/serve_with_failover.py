@@ -1,6 +1,8 @@
-"""End-to-end serving driver: batched requests on a 32-rank simulated EP
-instance, a 2-rank correlated failure, EEP recovery vs the full-restart
-baseline — prints both throughput traces (the Fig. 1 experiment).
+"""End-to-end serving driver: batched client sessions on a 32-rank
+simulated EP instance, a 2-rank correlated failure, EEP recovery (with
+fault-transparent continuation — zero client-visible errors) vs the
+full-restart baseline (clients see FAILED + retry) — prints both
+throughput traces (the Fig. 1 experiment) and the client-perceived view.
 
   PYTHONPATH=src python examples/serve_with_failover.py
 """
@@ -14,8 +16,8 @@ from repro.configs import get_config
 from repro.core import make_initial_membership
 from repro.models import init_params
 from repro.runtime.elastic import ElasticEPRuntime
-from repro.serving.engine import FullRestartCostModel, ServingEngine
-from repro.serving.request import Request
+from repro.serving.api import ServingFrontend
+from repro.serving.engine import ServingEngine
 
 
 def run(fixed_membership: bool):
@@ -26,14 +28,15 @@ def run(fixed_membership: bool):
     rt = ElasticEPRuntime(cfg, params, table)
     eng = ServingEngine(rt, max_batch=8, max_len=2048, base_step_time=0.25,
                         fixed_membership=fixed_membership)
-    for i in range(64):
-        eng.sched.submit(Request(rid=i, prompt=[1] * 4, max_new_tokens=5000))
+    fe = ServingFrontend(eng)
+    for _ in range(64):
+        fe.submit([1] * 4, max_new=2000)     # outlives the horizon
     rt.injector.inject_at(20.0, [5, 13])
-    eng.run(until=420.0, max_steps=20000)
-    return rt, eng
+    fe.run(until=420.0, max_steps=20000)
+    return rt, eng, fe
 
 
-def summarize(name, rt, eng, bucket=15.0):
+def summarize(name, rt, eng, fe, bucket=15.0):
     print(f"--- {name} ---")
     buckets = {}
     for s in eng.trace:
@@ -44,13 +47,18 @@ def summarize(name, rt, eng, bucket=15.0):
     for ev in rt.timeline:
         if ev.kind != "start":
             print(f"  event t={ev.t:.1f}s {ev.kind}")
+    m = fe.metrics()
+    print(f"  client view: error_events={m['error_events']} "
+          f"stall_events={m['stall_events']} stall_max={m['stall_max_s']}s "
+          f"recomputed={m['tokens_recomputed']}")
 
 
 def main():
-    rt, eng = run(fixed_membership=False)
-    summarize("EEP (elastic membership)", rt, eng)
-    rt2, eng2 = run(fixed_membership=True)
-    summarize("fixed membership (full restart)", rt2, eng2)
+    rt, eng, fe = run(fixed_membership=False)
+    summarize("EEP (elastic membership, continuation)", rt, eng, fe)
+    rt2, eng2, fe2 = run(fixed_membership=True)
+    summarize("fixed membership (full restart, client retries)",
+              rt2, eng2, fe2)
 
 
 if __name__ == "__main__":

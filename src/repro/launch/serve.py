@@ -1,5 +1,7 @@
-"""Serving driver: elastic EP instance + continuous batching + scripted
-failure/reintegration and planned drain/scale transitions.
+"""Serving driver: client sessions + planned transitions through the
+serving frontend (``repro.serving.api``) — requests stream through
+``ServingFrontend.submit``; drains/scales are JSON commands on the
+``AdminGateway``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --world 8 --requests 32 --fail-rank 3 --fail-at 2.0
@@ -12,6 +14,10 @@ failure/reintegration and planned drain/scale transitions.
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --scale-down-rank 6 --scale-down-rank 7 --scale-down-at 2.0 \
       --scale-up-at 12.0
+
+  # one-off admin command against a fresh instance (JSON in, JSON out)
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
+      --requests 0 --admin '{"cmd": "status"}'
 """
 from __future__ import annotations
 
@@ -52,15 +58,25 @@ def main(argv=None):
     ap.add_argument("--dispatch", choices=["dense", "ragged"], default=None,
                     help="capacity-padded vs dropless size-exchange dispatch "
                     "(default: the arch config's dispatch_mode)")
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="admission control: reject submits past this queue "
+                    "depth with a structured REJECTED event")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline (sim seconds from submit)")
+    ap.add_argument("--admin", action="append", default=None,
+                    help="JSON admin command(s) to execute up front, e.g. "
+                    "'{\"cmd\": \"drain\", \"ranks\": [2], \"at\": 5.0}'")
     ap.add_argument("--until", type=float, default=600.0)
     args = ap.parse_args(argv)
+
+    import json
 
     from repro.configs import get_config
     from repro.core import make_initial_membership
     from repro.models import init_params
     from repro.runtime.elastic import ElasticEPRuntime
+    from repro.serving.api import ServingFrontend
     from repro.serving.engine import ServingEngine
-    from repro.serving.request import Request
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -73,44 +89,53 @@ def main(argv=None):
     eng = ServingEngine(rt, max_batch=args.max_batch,
                         max_len=args.prompt_len + args.max_new + 8,
                         fixed_membership=args.fixed_membership)
+    fe = ServingFrontend(eng, max_queue_depth=args.max_queue_depth)
+
     rng = np.random.RandomState(0)
-    for i in range(args.requests):
+    for _ in range(args.requests):
         prompt = rng.randint(1, cfg.vocab_size,
                              size=(args.prompt_len,)).tolist()
-        eng.sched.submit(Request(rid=i, prompt=prompt,
-                                 max_new_tokens=args.max_new))
+        fe.submit(prompt, max_new=args.max_new, deadline=args.deadline)
     if args.fail_at is not None and args.fail_rank:
         rt.injector.inject_at(args.fail_at, args.fail_rank)
 
-    # planned transitions: requested through the ControlPlane when the sim
-    # clock crosses their time, committed at the next step boundary
-    planned = []
+    # planned transitions are admin-gateway commands: scheduled ("at") ops
+    # fire when the sim clock crosses their time and commit at the next
+    # step boundary; the frontend's run loop never exits while one is
+    # pending. The convenience flags just render the JSON for you.
+    commands = [json.loads(c) for c in (args.admin or [])]
     if args.drain_at is not None and args.drain_rank:
-        planned.append((args.drain_at, "drain", args.drain_rank))
+        commands.append({"cmd": "drain", "ranks": args.drain_rank,
+                         "at": args.drain_at})
     if args.undrain_at is not None and args.drain_rank:
-        planned.append((args.undrain_at, "undrain", args.drain_rank))
+        commands.append({"cmd": "undrain", "ranks": args.drain_rank,
+                         "at": args.undrain_at})
     if args.scale_down_at is not None and args.scale_down_rank:
-        planned.append((args.scale_down_at, "scale_down",
-                        args.scale_down_rank))
+        commands.append({"cmd": "scale_down", "ranks": args.scale_down_rank,
+                         "at": args.scale_down_at})
     if args.scale_up_at is not None and args.scale_down_rank:
-        planned.append((args.scale_up_at, "scale_up", args.scale_down_rank))
-    planned.sort(key=lambda p: p[0])
+        commands.append({"cmd": "scale_up", "ranks": args.scale_down_rank,
+                         "at": args.scale_up_at})
+    for command in commands:
+        resp = fe.admin.execute(command)
+        print(f"admin> {json.dumps(command)}")
+        print(f"admin< {json.dumps(resp, sort_keys=True)}")
 
-    cursor = [0]
-
-    def fire_planned():
-        while cursor[0] < len(planned) \
-                and planned[cursor[0]][0] <= rt.clock.now():
-            _, op, ranks = planned[cursor[0]]
-            rt.control.request(op, ranks)
-            cursor[0] += 1
-
-    eng.run(until=args.until, max_steps=100_000,
-            before_step=fire_planned if planned else None)
+    fe.run(until=args.until, max_steps=100_000)
 
     s = eng.sched.stats
     print(f"finished={s.finished} failed={s.failed} retried={s.retried} "
-          f"preempted={s.preempted} tokens={s.tokens_out}")
+          f"preempted={s.preempted} suspended={s.suspended} "
+          f"cancelled={s.cancelled} rejected={s.rejected} "
+          f"tokens={s.tokens_out}")
+    m = fe.metrics()
+    print(f"client-perceived: ttft_p50={m['ttft_p50_s']}s "
+          f"stall_p50={m['stall_p50_s']}s stall_p99={m['stall_p99_s']}s "
+          f"stall_max={m['stall_max_s']}s goodput={m['goodput_tok_s']} tok/s "
+          f"recomputed={m['tokens_recomputed']} "
+          f"error_events={m['error_events']}")
+    bad = fe.stream_violations()
+    print(f"stream contract: {'OK (exactly-once, in-order)' if not bad else bad[:3]}")
     print(f"serve-step compilations: {eng.compile_count()} (no recompile "
           f"across membership changes; dispatch={eng.dispatch})")
     print(f"membership epoch: {rt.epoch} (every transition committed "

@@ -243,6 +243,34 @@ def build_report(doc: dict, static_doc: Optional[dict] = None,
                   f"{r.get('tokens_out', 0)} |")
     md += ["", f"![phase breakdown]({svg_dir}/phase_breakdown.svg)", ""]
 
+    md += ["## Client-perceived latency", "",
+           "What the serving frontend's per-request event streams actually "
+           "delivered (docs/serving-api.md): time-to-first-token, "
+           "inter-token stall percentiles measured between TOKEN "
+           "timestamps (so recovery pauses count exactly as a client "
+           "feels them), goodput, the continuation cost (tokens replayed "
+           "through chunk-1 prefill on resume) and client-visible error "
+           "events — zero under the elastic policy's fault-transparent "
+           "continuation.", "",
+           "| scenario | dispatch | ttft p50 (s) | stall p50 (s) | "
+           "stall p99 (s) | stall max (s) | goodput (tok/s) | "
+           "recomputed | errors |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in _elastic_rows(doc):
+        c = r.get("client") or {}
+        if not c:
+            continue            # pre-frontend artifact row
+        md.append(
+            f"| {r['name']} | {r.get('dispatch', 'dense')} | "
+            f"{_fmt(c.get('ttft_p50_s'), 3)} | "
+            f"{_fmt(c.get('stall_p50_s'), 3)} | "
+            f"{_fmt(c.get('stall_p99_s'), 3)} | "
+            f"{_fmt(c.get('stall_max_s'), 3)} | "
+            f"{_fmt(c.get('goodput_tok_s'))} | "
+            f"{c.get('tokens_recomputed', 0)} | "
+            f"{c.get('error_events', 0)} |")
+    md.append("")
+
     md += ["## Throughput-restore trajectories", "",
            "Elastic (blue) vs the fixed-membership full-restart baseline "
            "(orange) where the sweep paired one; dashed red markers are "
@@ -280,6 +308,7 @@ def build_report(doc: dict, static_doc: Optional[dict] = None,
             "joins": r.get("joins", 0),
             "incident_pauses_s": [round(p, 6) for p in _incident_pauses(r)],
             "join_pauses_s": [round(p, 6) for p in _join_pauses(r)],
+            "client": r.get("client") or {},
         } for r in rows],
     }
     return "\n".join(md) + "\n", json_doc, svgs
@@ -325,6 +354,14 @@ def _synthetic_doc() -> dict:
             "joins": 1,
             "phases": {"detect": 1.5, "replan": 0.8, "repair-transfer": 0.1,
                        "warmup": 5.0, "table-patch": 0.4},
+            "client": {"ttft_p50_s": 0.2, "ttft_p99_s": 0.9,
+                       "stall_p50_s": 0.05, "stall_p99_s": 0.066,
+                       "stall_max_s": 5.01, "goodput_tok_s": 62.0,
+                       "tokens_recomputed": 152, "stall_events": 4,
+                       "error_events": 0,
+                       "events": {"TOKEN": 900, "STALL_BEGIN": 4,
+                                  "RESUMED": 4, "STALL_END": 4,
+                                  "FINISHED": 28}},
             "spans": spans(),
             "trace": [{"t": 0.5, "tokens_per_s": 80.0, "active_fraction": 1.0},
                       {"t": 2.5, "tokens_per_s": 0.0, "active_fraction": 0.875},
@@ -358,6 +395,7 @@ def selftest() -> None:
     assert a_svg.keys() == b_svg.keys() and all(
         a_svg[k] == b_svg[k] for k in a_svg), "SVGs not deterministic"
     for section in ("## Paper parity", "## Per-scenario phase breakdown",
+                    "## Client-perceived latency",
                     "## Throughput-restore trajectories",
                     "## Telemetry health"):
         assert section in a_md, f"missing section {section!r}"

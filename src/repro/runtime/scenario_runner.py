@@ -2,8 +2,11 @@
 
 The runner is the deterministic test/benchmark surface for the fault-scenario
 engine (``repro.core.scenarios``): it builds a simulated EP instance, feeds a
-steady request stream, applies the scenario's fault schedule, and checks the
-core invariants at EVERY engine-step boundary:
+steady request stream through the serving frontend
+(``repro.serving.api.ServingFrontend`` — planned transitions go through its
+admin gateway, client metrics come from its per-request event streams),
+applies the scenario's fault schedule, and checks the core invariants at
+EVERY engine-step boundary:
 
   * live-EP validity (peer set, expert coverage, graph-visible routing),
   * zero recompilations on healthy ranks (one compiled serve step, ever),
@@ -48,8 +51,8 @@ from repro.core.scenarios import Scenario, get_scenario
 from repro.core.validity import check as validity_check
 from repro.models import init_params
 from repro.runtime.elastic import ElasticEPRuntime
+from repro.serving.api import ServingFrontend, _jsonable
 from repro.serving.engine import ServingEngine
-from repro.serving.request import Request
 
 
 @dataclass
@@ -72,6 +75,9 @@ class ScenarioResult:
     requests_retried: int = 0
     requests_dropped: int = 0
     requests_preempted: int = 0     # gracefully requeued by drains/scales
+    requests_suspended: int = 0     # continuation: fault absorbed, no error
+    requests_cancelled: int = 0
+    requests_rejected: int = 0
     recoveries: int = 0
     recovery_rounds: int = 0        # > recoveries when cascades composed
     joins: int = 0
@@ -92,16 +98,24 @@ class ScenarioResult:
     spans: list[dict] = field(default_factory=list)
     phase_totals: dict = field(default_factory=dict)
     restore_95_s: float = -1.0      # -1 = never restored (or no failure)
+    # client-perceived metrics from the serving frontend (TTFT, inter-token
+    # stall percentiles, goodput, tokens recomputed on resume, per-event
+    # counts) and the stream-ordering contract (exactly-once, in-order,
+    # nothing after a terminal event) checked over every stream
+    client: dict = field(default_factory=dict)
+    stream_violations: list[str] = field(default_factory=list)
 
     @property
     def invariants_ok(self) -> bool:
         """Every expert kept >= 1 active replica (unless the scenario is
         *designed* to lose coverage, in which case the loss must have been
-        recorded), validity held at each step, and nothing recompiled."""
+        recorded), validity held at each step, nothing recompiled, and
+        every client stream honored the exactly-once ordering contract."""
         coverage_ok = (bool(self.coverage_loss_events)
                        == self.coverage_loss_expected)
         return (self.compile_count == 1
                 and not self.validity_violations
+                and not self.stream_violations
                 and coverage_ok)
 
     def summary(self) -> dict:
@@ -114,6 +128,9 @@ class ScenarioResult:
             "requests_failed": self.requests_failed,
             "requests_dropped": self.requests_dropped,
             "requests_preempted": self.requests_preempted,
+            "requests_suspended": self.requests_suspended,
+            "requests_cancelled": self.requests_cancelled,
+            "requests_rejected": self.requests_rejected,
             "recoveries": self.recoveries,
             "recovery_rounds": self.recovery_rounds,
             "joins": self.joins,
@@ -137,22 +154,9 @@ class ScenarioResult:
             "phases": {k: round(float(v), 6)
                        for k, v in sorted(self.phase_totals.items())},
             "restore_95_s": round(self.restore_95_s, 6),
+            "client": dict(self.client),
+            "stream_violations": len(self.stream_violations),
         }
-
-
-def _jsonable(x):
-    if isinstance(x, dict):
-        return {str(k): _jsonable(v) for k, v in x.items()}
-    if isinstance(x, (list, tuple, set)):
-        return [_jsonable(v) for v in sorted(x)] if isinstance(x, set) \
-            else [_jsonable(v) for v in x]
-    if isinstance(x, (np.integer,)):
-        return int(x)
-    if isinstance(x, (np.floating,)):
-        return float(x)
-    if isinstance(x, np.ndarray):
-        return x.tolist()
-    return x
 
 
 def build_scenario_runtime(scn: Scenario, *, seed: int = 0,
@@ -219,6 +223,9 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     rt = build_scenario_runtime(scn, seed=seed, arch=arch, dispatch=dispatch)
     eng = ServingEngine(rt, max_batch=max_batch, max_len=scn.max_new_tokens + 8,
                         fixed_membership=fixed_membership)
+    # the runner is a driver like any other: requests, planned transitions
+    # and client-perceived metrics all go through the serving frontend
+    fe = ServingFrontend(eng)
     res = ScenarioResult(name=scn.name, seed=seed,
                          fixed_membership=fixed_membership,
                          dispatch=dispatch,
@@ -235,7 +242,6 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
             deferred.append(a)
     deferred.sort(key=lambda a: a.t)
 
-    rid = 0
     next_action = 0
     coverage_exc = None
     last_epoch = rt.epoch
@@ -251,22 +257,21 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                 rt.record(a.op, ranks=list(a.ranks),
                           **({"factor": a.factor} if a.op == "slow" else {}))
             elif a.op == "scale":
-                # planned transitions land at the next step boundary via the
-                # control pump, where the engine observes them (preemption)
+                # planned transitions go through the admin gateway and land
+                # at the next step boundary via the control pump, where the
+                # engine observes them (preemption)
                 rt.record("scale_requested", ranks=list(a.ranks),
                           direction=a.direction)
-                rt.control.request(f"scale_{a.direction}", a.ranks)
+                fe.admin.execute({"cmd": f"scale_{a.direction}",
+                                  "ranks": list(a.ranks)})
             else:                       # drain | undrain
                 rt.record(f"{a.op}_requested", ranks=list(a.ranks))
-                rt.control.request(a.op, a.ranks)
+                fe.admin.execute({"cmd": a.op, "ranks": list(a.ranks)})
         # steady offered load: keep a full admission queue
         while len(eng.sched.queue) < max_batch:
-            eng.sched.submit(Request(rid=rid, prompt=[1, 2, 3],
-                                     max_new_tokens=scn.max_new_tokens,
-                                     t_submit=now))
-            rid += 1
+            fe.submit([1, 2, 3], max_new=scn.max_new_tokens)
         try:
-            eng.step()
+            fe.step()
         except CoverageLossError as e:
             # the runtime recorded a coverage_loss timeline event before
             # raising; the harvest below picks it up — just stop serving
@@ -363,6 +368,13 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     res.requests_retried = st.retried
     res.requests_dropped = st.dropped
     res.requests_preempted = st.preempted
+    res.requests_suspended = st.suspended
+    res.requests_cancelled = st.cancelled
+    res.requests_rejected = st.rejected
+    # client-perceived view: what the streams actually delivered, and
+    # whether every one honored the exactly-once ordering contract
+    res.client = _jsonable(fe.metrics())
+    res.stream_violations = fe.stream_violations()
     res.final_active_fraction = rt.active_fraction()
     res.sim_duration_s = rt.clock.now()
     res.restore_95_s = _restore_95_s(res.timeline, res.trace)

@@ -1,4 +1,20 @@
+"""Serving layer: client-session API (frontend + admin gateway) over the
+continuous-batching engine.
+
+``repro.serving.events`` is stdlib-only (the docs drift gate imports it
+without jax); everything else requires the full runtime stack. Drivers use
+:class:`ServingFrontend` — the engine/scheduler are internal machinery.
+"""
+from repro.serving.api import AdminGateway, ServingFrontend, StreamHandle
 from repro.serving.engine import FullRestartCostModel, ServingEngine, ThroughputSample
+from repro.serving.events import EVENT_KINDS, StreamEvent, validate_stream
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler
+
+__all__ = [
+    "AdminGateway", "EVENT_KINDS", "FullRestartCostModel", "KVCacheManager",
+    "Request", "RequestState", "Scheduler", "ServingEngine",
+    "ServingFrontend", "StreamEvent", "StreamHandle", "ThroughputSample",
+    "validate_stream",
+]

@@ -5,6 +5,14 @@ degraded execution and the restored configuration all replay a single
 compiled executable — the runtime asserts it never recompiles across
 failure/reintegration (the paper's CUDA-graph-stability analogue).
 
+The same chunk-1 replay path powers **continuation semantics**: when a
+fault or planned drain evicts in-flight work under the elastic policy, the
+scheduler snapshots each request's prompt + generated prefix (epoch-tagged)
+and replays it here at resume, so clients observe a bounded stall — never
+an error, never a duplicated token. ``FullRestartPolicy`` keeps the paper's
+fail-and-retry-from-scratch baseline. Drivers should not poke this class
+directly; ``repro.serving.api.ServingFrontend`` is the serving surface.
+
 Timing: real compute runs on CPU; serving-time dynamics (step latency,
 recovery pauses, warmup) come from the deterministic SimClock + cost models
 in the elastic runtime, which is what lets the Fig. 1/10/11 traces be
@@ -31,7 +39,6 @@ from repro.launch.steps import make_serve_step
 from repro.models.model import init_caches
 from repro.runtime.elastic import ElasticEPRuntime
 from repro.serving.kv_cache import KVCacheManager
-from repro.serving.request import Request, RequestState
 from repro.serving.scheduler import Scheduler
 
 __all__ = ["FullRestartCostModel", "ServingEngine", "ThroughputSample"]
@@ -117,8 +124,10 @@ class ServingEngine:
         for slot in self.kv.active_slots():
             req = self.sched.running[int(self.kv.owner[slot])]
             pos = self._prompt_pos[slot]
-            if pos < len(req.prompt):
-                tokens[slot, 0] = req.prompt[pos]
+            if pos < req.replay_len:
+                # chunk-1 prefill replay: the prompt — and, on a
+                # continuation resume, the preserved generated prefix
+                tokens[slot, 0] = req.replay_token(pos)
             else:
                 tokens[slot, 0] = req.generated[-1] if req.generated else 0
         lengths = self.kv.lengths.copy()
@@ -132,22 +141,35 @@ class ServingEngine:
         # drains every pending control transition — possibly several
         # overlapping failures and a batch of joins — in event order. ---
         ctl = rt.pump_control()
+        now = rt.clock.now()
         if ctl.failures_handled or ctl.restarts:
-            # every in-flight request is failed and requeued, once per
-            # interruption batch (overlapping failures were composed into a
-            # single recovery by the runtime; a baseline full restart —
-            # including one answering a planned drain — fails them too)
-            self.sched.fail_inflight()
+            # one eviction per interruption batch (overlapping failures
+            # were composed into a single recovery by the runtime). The
+            # elastic path SUSPENDS in-flight work with its generated
+            # prefix intact — an epoch-tagged continuation snapshot that
+            # replays through the chunk-1 prefill path, so clients observe
+            # a bounded stall instead of an error. The fixed-membership
+            # baseline (a full restart — including one answering a planned
+            # drain) keeps the paper's fail-and-retry-from-scratch.
+            if ctl.restarts or self.fixed_membership:
+                self.sched.fail_inflight(
+                    now=now, cause="restart" if ctl.restarts else "fault")
+            else:
+                self.sched.suspend_inflight(now=now, cause="fault",
+                                            epoch=rt.epoch)
             self._prompt_pos[:] = 0
-            self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+            self.trace.append(ThroughputSample(now, 0.0,
                                                rt.active_fraction()))
         if ctl.drained or ctl.scaled_down:
             # planned shrink: in-flight work on the departing ranks is
-            # PREEMPTED, not failed — requeued at the front with no retry
-            # budget consumed (the clients never see an error)
-            self.sched.preempt_inflight()
+            # PREEMPTED, not failed — requeued at the front with progress
+            # kept and no retry budget consumed (the clients never see an
+            # error)
+            self.sched.preempt_inflight(
+                now=now, cause="drain" if ctl.drained else "scale_down",
+                epoch=rt.epoch)
             self._prompt_pos[:] = 0
-            self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+            self.trace.append(ThroughputSample(now, 0.0,
                                                rt.active_fraction()))
         if ctl.joined or ctl.undrained:
             self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
@@ -156,8 +178,10 @@ class ServingEngine:
             rt.observe_step_latencies(self.base_step_time)
             rt.mitigate_stragglers()
 
-        # --- admit into free slots ---
-        admitted = self.sched.admit()
+        # --- admit into free slots: resumes validate their continuation
+        # snapshot against the device-published membership epoch ---
+        admitted = self.sched.admit(now=rt.clock.now(),
+                                    epoch=int(np.asarray(rt.membership.version)))
         if admitted:
             mask = np.zeros((self.kv.num_slots,), bool)
             for req in admitted:
@@ -177,19 +201,29 @@ class ServingEngine:
             jnp.asarray(tokens), jnp.asarray(lengths))
         next_tok = np.asarray(next_tok)
 
-        # --- bookkeeping: prefill replay vs real decode ---
+        # --- bookkeeping: prefill replay vs real decode. ``replay_len``
+        # covers the prompt plus, on a continuation resume, the preserved
+        # generated prefix: replayed positions rebuild KV state without
+        # re-emitting tokens, so the client stream stays exactly-once.
+        # The throughput trace still counts re-decoded prefix positions —
+        # that is real decode-rate work (the retry baseline regenerates
+        # and counts the same tokens), only the client-facing delivery is
+        # deduplicated. ---
         produced = {}
+        redecoded = 0
         for slot in active:
             req = self.sched.running.get(int(self.kv.owner[slot]))
             if req is None:
                 continue
             pos = self._prompt_pos[slot]
-            if pos + 1 < len(req.prompt):
-                # still consuming the prompt
+            if pos + 1 < req.replay_len:
+                # still consuming the replay sequence
                 self._prompt_pos[slot] += 1
                 self.kv.lengths[slot] = int(pos + 1)
+                if pos >= len(req.prompt):
+                    redecoded += 1       # generated-prefix replay (resume)
             else:
-                if pos + 1 == len(req.prompt):
+                if pos + 1 == req.replay_len:
                     self._prompt_pos[slot] += 1
                 produced[slot] = int(next_tok[slot, 0]) % self.cfg.vocab_size
         now = rt.clock.now()
@@ -201,27 +235,36 @@ class ServingEngine:
         rt.clock.advance(step_t)
         rt.heartbeat()
         self.trace.append(ThroughputSample(
-            rt.clock.now(), len(produced) / step_t, rt.active_fraction()))
+            rt.clock.now(), (len(produced) + redecoded) / step_t,
+            rt.active_fraction()))
         return len(produced)
 
     # ------------------------------------------------------------------
     def run(self, *, until: Optional[float] = None,
             max_steps: int = 10_000,
-            before_step: Optional[callable] = None) -> None:
+            before_step: Optional[callable] = None,
+            idle_stop: Optional[callable] = None) -> None:
         """Step until ``until`` (sim seconds) or the work dries up.
         ``before_step`` runs ahead of each step — the hook drivers use to
         fire time-scheduled planned transitions (ControlPlane requests)
-        without re-implementing this loop."""
+        without re-implementing this loop. ``idle_stop`` replaces the
+        default drained-out check: the engine alone cannot see transitions
+        a driver has scheduled for a FUTURE time, so the frontend supplies
+        its "no live sessions and no pending admin ops" predicate here —
+        otherwise an idle engine would exit before a scheduled drain ever
+        fires."""
         steps = 0
+        if idle_stop is None:
+            idle_stop = (lambda: self.sched.inflight == 0
+                         and not self.sched.queue
+                         and not self.rt.control_queue
+                         and not self.rt.controller.recovering)
         while steps < max_steps:
             if until is not None and self.rt.clock.now() >= until:
                 break
             if before_step is not None:
                 before_step()
-            if (self.sched.inflight == 0 and not self.sched.queue
-                    and not self.rt.control_queue
-                    and not self.rt.controller.recovering
-                    and until is None):
+            if until is None and idle_stop():
                 break
             self.step()
             steps += 1

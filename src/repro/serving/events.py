@@ -1,0 +1,169 @@
+"""Client-visible stream-event vocabulary for the serving frontend.
+
+The paper's headline claim is *user-visible*: a rank fault becomes "two
+bounded interruptions" instead of downtime. This module defines what a
+client actually observes — the ordered per-request event stream yielded by
+``repro.serving.api.ServingFrontend.submit`` — as a canonical vocabulary,
+the same way ``repro.obs.phases`` defines the recovery-phase vocabulary.
+Code and prose must not drift: the event table in ``docs/serving-api.md``
+is cross-checked against :data:`EVENT_KINDS` by ``tools/check_docs.py``.
+
+Event vocabulary (see docs/serving-api.md for full field schemas):
+
+  TOKEN        one generated token (``index`` is the 0-based position in
+               the stream; delivered exactly once, in order)
+  STALL_BEGIN  generation interrupted by an *unplanned* fault; under
+               continuation semantics nothing is lost — the request's
+               prompt + generated prefix was snapshotted (epoch-tagged)
+  PREEMPTED    generation interrupted by a *planned* transition (drain /
+               scale-down): the control plane knew it was coming, so the
+               client sees a preemption marker, never an error
+  RESUMED      the continuation snapshot was re-admitted into a KV slot
+               (validated against the membership epoch); the prefix is
+               replaying through the chunk-1 prefill path
+  STALL_END    the stall is over — the next fresh TOKEN follows
+               immediately (``stall_s`` = event time minus the opening
+               STALL_BEGIN / PREEMPTED / FAILED time)
+  FAILED       an error the client sees. ``final=False``: the baseline
+               fail-and-retry path (paper §3.1 — the request restarts
+               from scratch; recomputed duplicates are suppressed so the
+               stream stays exactly-once). ``final=True``: terminal —
+               retries exhausted, retry disabled, or an invariant breach
+  FINISHED     terminal: the request completed normally
+  REJECTED     terminal: refused at submit (admission control on queue
+               depth, or prompt + max_new cannot fit the KV slot)
+  CANCELLED    terminal: client-side ``cancel()`` or a missed deadline
+
+Exactly-once ordering contract (checked by :func:`validate_stream`,
+asserted across the whole scenario registry x both dispatch modes by the
+tier-1 tests): every stream delivers each token index exactly once, in
+order, and emits nothing after a terminal event — across fail, drain and
+rejoin. Stall windows are well-bracketed: at most one open at a time,
+``STALL_END``/``RESUMED`` only while one is open, and no ``TOKEN`` is
+delivered inside an open window.
+
+Dependency-free on purpose: the docs drift gate (CI lint job) imports this
+module with nothing installed beyond the standard library.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+#: Canonical client-visible event kinds (documented in docs/serving-api.md
+#: — keep the two in sync; tools/check_docs.py enforces it).
+EVENT_KINDS = ("TOKEN", "STALL_BEGIN", "STALL_END", "PREEMPTED", "RESUMED",
+               "FAILED", "FINISHED", "REJECTED", "CANCELLED")
+
+#: Kinds that always end the stream. FAILED is terminal only when its
+#: ``final`` detail flag is set (a baseline retry emits a non-final FAILED
+#: and the stream continues).
+ALWAYS_TERMINAL = ("FINISHED", "REJECTED", "CANCELLED")
+
+#: Kinds that open a client-perceived stall window (closed by STALL_END or
+#: the end of the stream). A non-final FAILED opens one too: the client is
+#: waiting out the baseline's retry.
+STALL_OPENERS = ("STALL_BEGIN", "PREEMPTED")
+
+#: Kinds a client should treat as errors. Continuation semantics exist so
+#: that, under ElasticPolicy, a fault produces ZERO of these.
+ERROR_KINDS = ("FAILED", "REJECTED")
+
+
+@dataclass(frozen=True)
+class StreamEvent:
+    """One event on a per-request stream."""
+    kind: str
+    t: float                      # simulated seconds (SimClock)
+    seq: int                      # 0-based position in this stream
+    index: int = -1               # token index (TOKEN only)
+    token: int = -1               # token id (TOKEN only)
+    detail: dict = field(default_factory=dict)
+
+    @property
+    def terminal(self) -> bool:
+        return self.kind in ALWAYS_TERMINAL or (
+            self.kind == "FAILED" and bool(self.detail.get("final")))
+
+    @property
+    def is_error(self) -> bool:
+        return self.kind in ERROR_KINDS
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "t": round(self.t, 6), "seq": self.seq,
+                "index": self.index, "token": self.token,
+                "detail": dict(self.detail)}
+
+
+def _get(ev, name, default=None):
+    if isinstance(ev, dict):
+        return ev.get(name, default)
+    return getattr(ev, name, default)
+
+
+def _is_terminal(ev) -> bool:
+    kind = _get(ev, "kind")
+    return kind in ALWAYS_TERMINAL or (
+        kind == "FAILED" and bool((_get(ev, "detail") or {}).get("final")))
+
+
+def validate_stream(events, eps: float = 1e-9) -> list[str]:
+    """Return every ordering-contract violation in one stream (empty = ok).
+
+    Checks, in order:
+      1. every kind is in the canonical vocabulary;
+      2. ``seq`` is exactly 0..n-1 and times never move backwards;
+      3. nothing follows a terminal event;
+      4. token indices are exactly 0..k-1, each delivered once, in order;
+      5. stall windows are well-bracketed: STALL_BEGIN / PREEMPTED never
+         nest, STALL_END and RESUMED appear only inside an open window,
+         and no TOKEN is delivered while a window is open. A further
+         non-final FAILED *inside* an open window is legal — the client
+         really does see every error; it extends the window rather than
+         nesting a new one (back-to-back baseline restarts).
+    """
+    bad: list[str] = []
+    prev_t = -1.0
+    next_index = 0
+    stalled_by: str | None = None
+    terminal_seen = False
+    for i, ev in enumerate(events):
+        kind, t, seq = _get(ev, "kind"), _get(ev, "t"), _get(ev, "seq")
+        if kind not in EVENT_KINDS:
+            bad.append(f"seq {i}: unknown event kind {kind!r}")
+            continue
+        if seq != i:
+            bad.append(f"seq {i}: event carries seq {seq}")
+        if t < prev_t - eps:
+            bad.append(f"seq {i}: time moved backwards ({prev_t} -> {t})")
+        prev_t = max(prev_t, t)
+        if terminal_seen:
+            bad.append(f"seq {i}: {kind} after a terminal event")
+            continue
+        if kind == "TOKEN":
+            if stalled_by is not None:
+                bad.append(f"seq {i}: TOKEN inside an open {stalled_by} "
+                           f"stall window")
+            idx = _get(ev, "index")
+            if idx != next_index:
+                bad.append(f"seq {i}: token index {idx}, expected "
+                           f"{next_index} (exactly-once, in order)")
+            next_index = max(next_index, (idx if idx is not None else -1) + 1)
+        elif kind in STALL_OPENERS or (
+                kind == "FAILED" and not _is_terminal(ev)):
+            # a repeat error while already stalled (a second fault landing
+            # before the retry delivered a fresh token) extends the window;
+            # only the explicit stall markers must not nest
+            if stalled_by is not None and kind in STALL_OPENERS:
+                bad.append(f"seq {i}: {kind} nested inside an open "
+                           f"{stalled_by} stall window")
+            stalled_by = stalled_by or kind
+        elif kind == "RESUMED":
+            if stalled_by is None:
+                bad.append(f"seq {i}: RESUMED outside any stall window")
+        elif kind == "STALL_END":
+            if stalled_by is None:
+                bad.append(f"seq {i}: STALL_END without an open window")
+            stalled_by = None
+        if _is_terminal(ev):
+            terminal_seen = True
+    return bad

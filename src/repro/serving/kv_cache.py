@@ -7,7 +7,6 @@ layout); this class owns only the host-side allocation state.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
@@ -21,8 +20,25 @@ class KVCacheManager:
         self.lengths = np.zeros((num_slots,), np.int32)
         self.owner = np.full((num_slots,), -1, np.int64)   # request id
 
-    def allocate(self, rid: int, context_len: int) -> Optional[int]:
-        if not self.free or context_len >= self.max_len:
+    def fits(self, context_len: int, max_new: int = 0) -> bool:
+        """Whether a sequence of ``context_len`` tokens plus up to
+        ``max_new`` generated tokens can EVER live in one slot. The submit
+        path rejects a request that fails this with a structured per-request
+        error event instead of letting decode silently overflow the slot
+        length bookkeeping past ``max_len``."""
+        return context_len + max_new <= self.max_len
+
+    def allocate(self, rid: int, context_len: int,
+                 reserve: int = 0) -> Optional[int]:
+        """Claim a slot for ``context_len`` tokens of existing context plus
+        ``reserve`` tokens still to be generated. Returns ``None`` when no
+        slot is free; raises on a sequence that can never fit (such a
+        request must be rejected at submit, never queued)."""
+        if not self.fits(context_len, max(reserve, 1)):
+            raise ValueError(
+                f"request {rid}: context {context_len} + reserve {reserve} "
+                f"can never fit max_len={self.max_len}; reject at submit")
+        if not self.free:
             return None
         slot = self.free.pop(0)
         self.owner[slot] = rid
@@ -36,7 +52,8 @@ class KVCacheManager:
             self.free.append(slot)
 
     def release_all(self) -> list[int]:
-        """Fail every in-flight sequence (rank-failure semantics)."""
+        """Evict every in-flight sequence (rank-failure/suspension
+        semantics). Returns the owning request ids."""
         owners = [int(r) for r in self.owner if r >= 0]
         for s in range(self.num_slots):
             self.release(s)

@@ -10,8 +10,12 @@ class RequestState(Enum):
     QUEUED = "queued"
     PREFILLING = "prefilling"
     DECODING = "decoding"
+    STALLED = "stalled"        # suspended by a fault/drain, awaiting resume
+                               # (continuation: prompt + generated prefix kept)
     FINISHED = "finished"
     FAILED = "failed"          # in-flight at a rank failure (client retries)
+    CANCELLED = "cancelled"    # client cancel() or missed deadline
+    REJECTED = "rejected"      # refused at submit (admission / KV overflow)
 
 
 @dataclass
@@ -26,10 +30,26 @@ class Request:
     t_first_token: float = -1.0
     t_finish: float = -1.0
     retries: int = 0
+    deadline: Optional[float] = None   # sim-seconds; missed => cancelled
+    # continuation snapshot: the membership epoch at which this request was
+    # suspended (-1 = not a resume). Validated against the device-published
+    # MembershipState.version when the request is re-admitted.
+    snapshot_epoch: int = -1
+    # tokens to replay through the chunk-1 prefill path before fresh decode
+    # resumes: len(prompt) for a fresh admit, len(prompt) + len(generated)
+    # for a continuation resume. Set by Scheduler.admit.
+    replay_len: int = 0
 
     @property
     def context_len(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    def replay_token(self, pos: int) -> int:
+        """The token at position ``pos`` of the replay sequence (prompt
+        followed by the preserved generated prefix)."""
+        if pos < len(self.prompt):
+            return self.prompt[pos]
+        return self.generated[pos - len(self.prompt)]
 
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens

@@ -1,11 +1,23 @@
 """Continuous-batching scheduler: admit queued requests into free KV slots,
-retire finished ones, and fail+requeue in-flight work on rank failures
-(paper §3.1: EEP reports in-flight requests as failed; clients retry)."""
+retire finished ones, and — on a membership interruption — either *suspend*
+in-flight work with its progress intact (continuation semantics: the
+prompt + generated prefix replays through the chunk-1 prefill path, so the
+client observes a bounded stall, never an error) or fail+requeue it from
+scratch (paper §3.1's fixed-membership baseline: EEP reports in-flight
+requests as failed; clients retry).
+
+Every client-visible transition is reported through an optional ``sink``
+callback (``sink(kind, req, **detail)``) — the hook by which
+``repro.serving.api.ServingFrontend`` turns scheduler state changes into
+per-request event streams. The scheduler itself stays policy-free: which
+eviction flavor runs on which interruption is the engine's decision
+(``TransitionPolicy``-driven).
+"""
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 from repro.serving.kv_cache import KVCacheManager
 from repro.serving.request import Request, RequestState
@@ -19,33 +31,79 @@ class SchedulerStats:
     retried: int = 0
     dropped: int = 0           # exceeded max_retries under repeated failures
     preempted: int = 0         # gracefully requeued by a planned drain/scale
+    suspended: int = 0         # continuation: fault absorbed with progress kept
+    resumed: int = 0           # continuation snapshots re-admitted
+    cancelled: int = 0         # client cancel() / missed deadline
+    rejected: int = 0          # refused at submit (overflow / admission)
     tokens_out: int = 0
+    tokens_recomputed: int = 0  # generated tokens replayed on resume
 
 
 class Scheduler:
     def __init__(self, kv: KVCacheManager, retry_failed: bool = True,
-                 max_retries: Optional[int] = None):
+                 max_retries: Optional[int] = None,
+                 sink: Optional[Callable] = None):
         self.kv = kv
         self.queue: deque[Request] = deque()
         self.running: dict[int, Request] = {}
         self.stats = SchedulerStats()
         self.retry_failed = retry_failed
         self.max_retries = max_retries
+        # event sink: sink(kind, req, **detail) with kind in {"token",
+        # "finished", "failed", "suspended", "preempted", "resumed",
+        # "cancelled", "rejected"} — set by the serving frontend
+        self.sink = sink
 
-    def submit(self, req: Request) -> None:
+    def _emit(self, kind: str, req: Request, **detail) -> None:
+        if self.sink is not None:
+            self.sink(kind, req, **detail)
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request. Returns ``False`` — with a structured
+        ``rejected`` sink event and ``stats.rejected`` — when
+        ``prompt + max_new_tokens`` can never fit a KV slot, instead of
+        silently overflowing slot length bookkeeping mid-decode."""
+        if not self.kv.fits(len(req.prompt), max(req.max_new_tokens, 1)):
+            req.state = RequestState.REJECTED
+            self.stats.rejected += 1
+            self._emit("rejected", req, t=req.t_submit, reason="overflow",
+                       context_len=len(req.prompt),
+                       max_new=req.max_new_tokens, max_len=self.kv.max_len)
+            return False
         req.state = RequestState.QUEUED
         self.queue.append(req)
+        return True
 
-    def admit(self) -> list[Request]:
-        """Move queued requests into free slots (to be prefilled)."""
+    def admit(self, *, now: float = 0.0, epoch: int = -1) -> list[Request]:
+        """Move queued requests into free slots (to be prefilled). A request
+        carrying a continuation snapshot is *resumed*: its snapshot epoch is
+        validated against the current membership epoch (a resume must never
+        observe an older membership than the one it was suspended under)
+        and its full prompt + generated prefix is scheduled for chunk-1
+        prefill replay."""
         admitted = []
         while self.queue:
             req = self.queue[0]
-            slot = self.kv.allocate(req.rid, len(req.prompt))
+            reserve = req.max_new_tokens - len(req.generated)
+            slot = self.kv.allocate(req.rid, req.context_len, reserve=reserve)
             if slot is None:
                 break
             self.queue.popleft()
             req.slot = slot
+            req.replay_len = req.context_len
+            if req.snapshot_epoch >= 0:
+                if 0 <= epoch < req.snapshot_epoch:
+                    raise RuntimeError(
+                        f"request {req.rid}: continuation snapshot from "
+                        f"epoch {req.snapshot_epoch} resumed at older "
+                        f"membership epoch {epoch}")
+                recomputed = len(req.generated)
+                self.stats.resumed += 1
+                self.stats.tokens_recomputed += recomputed
+                self._emit("resumed", req, t=now, epoch=epoch,
+                           snapshot_epoch=req.snapshot_epoch,
+                           recomputed=recomputed)
+                req.snapshot_epoch = -1
             req.state = RequestState.DECODING
             self.running[req.rid] = req
             self.stats.admitted += 1
@@ -66,68 +124,128 @@ class Scheduler:
             req.generated.append(int(tok))
             self.kv.lengths[slot] += 1
             self.stats.tokens_out += 1
+            self._emit("token", req, t=now, index=len(req.generated) - 1,
+                       token=int(tok))
             if req.done() or (eos_id is not None and tok == eos_id):
                 req.state = RequestState.FINISHED
                 req.t_finish = now
                 self.kv.release(slot)
                 del self.running[rid]
                 self.stats.finished += 1
+                self._emit("finished", req, t=now,
+                           tokens=len(req.generated))
                 finished.append(req)
         return finished
 
-    def _evict_inflight(self) -> list[Request]:
-        """Shared eviction machinery: release every slot and reset each
-        in-flight request's progress, in rid order. Per-request bookkeeping
-        (stats, retry budget, requeue decision) is the caller's contract;
-        requeue is FRONT-ordered so work interrupted by back-to-back
-        interruptions is not starved by newly arriving requests."""
+    def _evict_inflight(self, *, keep_progress: bool) -> list[Request]:
+        """Shared eviction machinery: release every slot and (unless the
+        caller keeps continuation progress) reset each in-flight request's
+        generated prefix, in rid order. Per-request bookkeeping (stats,
+        retry budget, requeue decision) is the caller's contract; requeue
+        is FRONT-ordered so work interrupted by back-to-back interruptions
+        is not starved by newly arriving requests."""
         evicted = []
         for rid in sorted(self.kv.release_all()):
             req = self.running.pop(rid)
-            req.generated = []
+            if not keep_progress:
+                req.generated = []
             req.slot = -1
             evicted.append(req)
         return evicted
 
     @staticmethod
-    def _requeue_front(queue, reqs) -> None:
+    def _requeue_front(queue, reqs, state=RequestState.QUEUED) -> None:
         for req in reversed(reqs):
-            req.state = RequestState.QUEUED
+            req.state = state
             queue.appendleft(req)
 
-    def fail_inflight(self) -> list[Request]:
-        """Rank failure: every in-flight request is reported failed and (per
-        client policy) resubmitted from scratch. A request that exceeds
+    def fail_inflight(self, *, now: float = 0.0,
+                      cause: str = "fault") -> list[Request]:
+        """Fixed-membership interruption semantics: every in-flight request
+        is reported failed and (per client policy) resubmitted FROM SCRATCH
+        — its generated prefix is discarded and recomputed, and the client
+        sees an explicit error event. A request that exceeds
         ``max_retries`` is dropped (counted in stats) instead of retrying
         forever — e.g. under a flapping rank."""
-        failed = self._evict_inflight()
+        failed = self._evict_inflight(keep_progress=False)
         retried = []
         for req in failed:
             req.state = RequestState.FAILED
             self.stats.failed += 1
-            if not self.retry_failed:
-                continue
-            if self.max_retries is not None and req.retries >= self.max_retries:
+            final = True
+            if self.retry_failed and (self.max_retries is None
+                                      or req.retries < self.max_retries):
+                req.retries += 1
+                retried.append(req)
+                self.stats.retried += 1
+                final = False
+            elif self.retry_failed:
                 self.stats.dropped += 1
-                continue
-            req.retries += 1
-            retried.append(req)
-            self.stats.retried += 1
+            self._emit("failed", req, t=now, cause=cause, final=final,
+                       retry=req.retries)
         self._requeue_front(self.queue, retried)
         return failed
 
-    def preempt_inflight(self) -> list[Request]:
+    def suspend_inflight(self, *, now: float = 0.0, cause: str = "fault",
+                         epoch: int = -1) -> list[Request]:
+        """Continuation semantics (the elastic path): a fault interrupts
+        generation but loses nothing — each in-flight request's prompt +
+        generated prefix is snapshotted (tagged with the membership
+        ``epoch`` it was suspended under), requeued at the front, and
+        replayed through the chunk-1 prefill path at resume. The client
+        observes a bounded stall: never an error, never a duplicated or
+        reordered token, and no retry budget is consumed."""
+        suspended = self._evict_inflight(keep_progress=True)
+        for req in suspended:
+            req.snapshot_epoch = epoch
+            self.stats.suspended += 1
+            self._emit("suspended", req, t=now, cause=cause, epoch=epoch,
+                       progress=len(req.generated))
+        self._requeue_front(self.queue, suspended, RequestState.STALLED)
+        return suspended
+
+    def preempt_inflight(self, *, now: float = 0.0, cause: str = "drain",
+                         epoch: int = -1) -> list[Request]:
         """Planned drain/scale-down: in-flight work is *preempted*, not
         failed — the control plane knew the capacity change was coming, so
         every request requeues with no error reported to the client and no
-        retry budget consumed. Progress restarts from the prompt (the same
-        replay path a failure retry uses); the difference is purely
-        contractual: ``stats.preempted`` instead of ``failed``/``retried``,
-        and ``max_retries`` never drops them."""
-        preempted = self._evict_inflight()
-        self.stats.preempted += len(preempted)
-        self._requeue_front(self.queue, preempted)
+        retry budget consumed. Progress is kept (the same continuation
+        snapshot a fault suspension takes); the difference is purely
+        contractual: ``stats.preempted`` and a PREEMPTED client event
+        instead of a fault stall, and ``max_retries`` never drops them."""
+        preempted = self._evict_inflight(keep_progress=True)
+        for req in preempted:
+            req.snapshot_epoch = epoch
+            self.stats.preempted += 1
+            self._emit("preempted", req, t=now, cause=cause, epoch=epoch,
+                       progress=len(req.generated))
+        self._requeue_front(self.queue, preempted, RequestState.STALLED)
         return preempted
+
+    def cancel(self, rid: int, *, now: float = 0.0,
+               cause: str = "client") -> bool:
+        """Client-side cancellation: releases the KV slot and emits a
+        terminal event from ANY live state — queued, decoding, or
+        stalled-in-recovery. Returns ``False`` for an unknown/already
+        terminal rid (cancel is idempotent)."""
+        req = self.running.pop(rid, None)
+        if req is not None:
+            self.kv.release(req.slot)
+            req.slot = -1
+        else:
+            for queued in self.queue:
+                if queued.rid == rid:
+                    req = queued
+                    self.queue.remove(queued)
+                    break
+        if req is None:
+            return False
+        req.state = RequestState.CANCELLED
+        req.snapshot_epoch = -1
+        self.stats.cancelled += 1
+        self._emit("cancelled", req, t=now, cause=cause,
+                   tokens=len(req.generated))
+        return True
 
     @property
     def inflight(self) -> int:

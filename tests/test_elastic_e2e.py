@@ -81,7 +81,12 @@ def test_recovery_phases_bounded():
     assert sum(mix.values()) > 0
 
 
-def test_inflight_requests_failed_and_retried():
+def test_inflight_requests_suspended_and_resumed_not_failed():
+    """Elastic fault semantics are continuation, not retry: in-flight work
+    is suspended with its generated prefix intact (epoch-tagged snapshot)
+    and resumed through the chunk-1 replay path — clients never see a
+    failure. (The fixed-membership baseline keeps fail-and-retry:
+    tests/test_serving_api.py.)"""
     cfg, rt = _runtime()
     eng = ServingEngine(rt, max_batch=4, max_len=64)
     for i in range(4):
@@ -90,13 +95,17 @@ def test_inflight_requests_failed_and_retried():
     for _ in range(5):
         eng.step()
     assert eng.sched.inflight > 0
+    progress = {r.rid: len(r.generated) for r in eng.sched.running.values()}
     rt.injector.inject_at(rt.clock.now(), [1])
     rt.clock.advance(1.2)
     eng.step()
-    assert eng.sched.stats.failed > 0
-    assert eng.sched.stats.retried == eng.sched.stats.failed
+    assert eng.sched.stats.suspended > 0
+    assert eng.sched.stats.failed == 0 and eng.sched.stats.retried == 0
     eng.run(until=rt.clock.now() + 100.0, max_steps=3000)
     assert eng.sched.stats.finished == 4   # clients eventually served
+    assert eng.sched.stats.resumed == eng.sched.stats.suspended
+    # the replay recomputed exactly the preserved prefixes
+    assert eng.sched.stats.tokens_recomputed == sum(progress.values())
 
 
 def test_two_bounded_pauses_vs_full_restart():

@@ -424,6 +424,44 @@ def test_ci_compare_gates_drain_pause_regressions():
                for b in bad), bad
 
 
+def test_ci_compare_gates_client_latency_regressions():
+    """TTFT and p99 inter-token stall gate per scenario x mode next to the
+    recovery pauses; goodput gates higher-is-better. Pre-frontend
+    artifacts (no `client` key) extract nothing and never fail."""
+    from benchmarks import ci_compare
+
+    def with_client(ttft=0.3, stall=0.07, goodput=60.0):
+        doc = _scen_doc()
+        doc["scenarios"][0]["client"] = {
+            "delivered_tokens": 1800,
+            "ttft_p50_s": ttft, "ttft_p99_s": ttft * 3,
+            "stall_p50_s": 0.05, "stall_p99_s": stall,
+            "stall_max_s": 5.0, "goodput_tok_s": goodput,
+            "tokens_recomputed": 152, "error_events": 0}
+        return doc
+
+    prev = ci_compare._scenario_metrics(with_client())
+    key = "cascade_mid_recovery[ragged]"
+    # the row carries client metrics -> the exactly-once delivered count
+    # replaces the legacy tokens_out trajectory for that row
+    assert f"{key}/tokens_out" not in prev
+    assert f"{key}/tokens_delivered" in prev
+    assert prev[f"{key}/client/ttft_p50_s"] == (0.3, "lower")
+    assert prev[f"{key}/client/stall_p99_s"] == (0.07, "lower")
+    assert prev[f"{key}/client/goodput_tok_s"] == (60.0, "higher")
+    assert ci_compare.compare(prev, prev, tolerance=0.15) == []
+    cur = ci_compare._scenario_metrics(
+        with_client(ttft=0.6, stall=0.2, goodput=30.0))
+    bad = ci_compare.compare(prev, cur, tolerance=0.15)
+    assert any("client/ttft_p50_s" in b for b in bad), bad
+    assert any("client/stall_p99_s" in b for b in bad), bad
+    assert any("client/goodput_tok_s" in b for b in bad), bad
+    # old artifact shape: no client metrics extracted, trivially passes
+    old = ci_compare._scenario_metrics(_scen_doc())
+    assert not any("/client/" in k for k in old)
+    assert ci_compare.compare(old, cur, tolerance=0.15) == []
+
+
 def test_ci_compare_catches_phase_and_restore_regressions():
     from benchmarks import ci_compare
     prev = ci_compare._scenario_metrics(_scen_doc())

@@ -1,0 +1,489 @@
+"""Client-session serving API (repro.serving.api / repro.serving.events):
+
+  * continuation semantics — on the single-rank-failure scenario under
+    ElasticPolicy, ``SchedulerStats.failed == 0`` and ZERO client-visible
+    error events (streams show only bounded STALL/RESUMED), while
+    FullRestartPolicy still reports failed/retried requests; the compiled
+    serve step never recompiles across the whole fail -> recover ->
+    rejoin lifetime;
+  * stream-ordering invariants — every stream delivers each token index
+    exactly once, in order, with no events after a terminal event, across
+    fail, drain and rejoin (deterministic sweep of the full registry in
+    test_scenarios.py via ``invariants_ok``; a hypothesis property here
+    samples registry x dispatch-mode cells);
+  * the satellites — submit-time KV overflow guard, queue-depth admission
+    control, cancel() from every live state, deadlines, the AdminGateway
+    JSON protocol, and the idle-drain termination fix (a driver-scheduled
+    future transition must keep the run loop alive).
+"""
+import json
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.reintegration import WarmupCostModel
+from repro.core.scenarios import list_scenarios
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.runtime.scenario_runner import run_scenario
+from repro.serving.api import ServingFrontend
+from repro.serving.engine import ServingEngine
+from repro.serving.events import EVENT_KINDS, StreamEvent, validate_stream
+from repro.serving.kv_cache import KVCacheManager
+from repro.serving.request import Request, RequestState
+from repro.serving.scheduler import Scheduler
+
+
+def _frontend(world=8, spr=1, seed=0, max_batch=4, max_len=64,
+              fixed_membership=False, max_queue_depth=None):
+    cfg = get_config("mixtral-8x22b").reduced()   # 4 experts, top-2
+    table = make_initial_membership(world, cfg.moe.num_experts, spr)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    rt = ElasticEPRuntime(cfg, params, table,
+                          warmup_model=WarmupCostModel(1, 1, 2, 1))
+    eng = ServingEngine(rt, max_batch=max_batch, max_len=max_len,
+                        fixed_membership=fixed_membership)
+    return rt, eng, ServingFrontend(eng, max_queue_depth=max_queue_depth)
+
+
+def _kinds(handle):
+    return [e.kind for e in handle.events]
+
+
+# ---------------------------------------------------------------------------
+# Continuation semantics (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+def test_single_failure_continuation_no_client_visible_errors():
+    """The acceptance criterion: a rank fault under ElasticPolicy is a
+    bounded stall — zero failed requests, zero error events, exactly-once
+    token delivery, one compiled step across fail/recover/rejoin."""
+    rt, eng, fe = _frontend()
+    handles = [fe.submit([3, 1, 4], max_new=40) for _ in range(4)]
+    rt.injector.inject_at(1.0, [3])
+    fe.run(until=200.0, max_steps=20_000)
+
+    st = eng.sched.stats
+    assert st.finished == 4
+    assert st.failed == 0 and st.retried == 0 and st.dropped == 0
+    assert st.suspended == 4 and st.resumed == 4
+    assert st.tokens_recomputed > 0          # the continuation paid replay
+    assert fe.metrics()["error_events"] == 0
+    assert not fe.stream_violations()
+    assert eng.compile_count() == 1
+    assert rt.table.active_mask.all()        # casualty rejoined
+
+    for h in handles:
+        kinds = _kinds(h)
+        assert kinds.count("STALL_BEGIN") == 1
+        assert kinds.count("RESUMED") == 1
+        assert kinds.count("STALL_END") == 1
+        assert "FAILED" not in kinds and "REJECTED" not in kinds
+        assert kinds[-1] == "FINISHED"
+        # tokens exactly once, in order
+        assert [e.index for e in h.events if e.kind == "TOKEN"] \
+            == list(range(40))
+        # the stall is bracketed: STALL_BEGIN < RESUMED <= STALL_END
+        order = {k: kinds.index(k)
+                 for k in ("STALL_BEGIN", "RESUMED", "STALL_END")}
+        assert order["STALL_BEGIN"] < order["RESUMED"] <= order["STALL_END"]
+
+
+def test_resume_validates_snapshot_epoch_against_membership_version():
+    rt, eng, fe = _frontend()
+    handles = [fe.submit([3, 1, 4], max_new=40) for _ in range(4)]
+    rt.injector.inject_at(1.0, [3])
+    fe.run(until=200.0, max_steps=20_000)
+    for h in handles:
+        resumed = [e for e in h.events if e.kind == "RESUMED"]
+        assert len(resumed) == 1
+        ev = resumed[0]
+        # suspended under the post-shrink epoch, resumed at a version that
+        # is never older than the snapshot
+        assert ev.detail["epoch"] >= ev.detail["snapshot_epoch"] >= 0
+        assert ev.detail["recomputed"] == \
+            next(e for e in h.events if e.kind == "STALL_BEGIN"
+                 ).detail["progress"]
+
+
+def test_baseline_full_restart_still_fails_and_retries():
+    """FullRestartPolicy keeps the paper's §3.1 contrast honest: clients
+    see explicit FAILED events and the request recomputes from scratch —
+    but the stream stays exactly-once (duplicates suppressed)."""
+    rt, eng, fe = _frontend(fixed_membership=True)
+    handles = [fe.submit([3, 1, 4], max_new=40) for _ in range(4)]
+    rt.injector.inject_at(1.0, [3])
+    fe.run(until=600.0, max_steps=30_000)
+
+    st = eng.sched.stats
+    assert st.finished == 4
+    assert st.failed == 4 and st.retried == 4
+    assert st.suspended == 0 and st.resumed == 0
+    assert fe.metrics()["error_events"] == 4
+    assert not fe.stream_violations()
+    assert eng.compile_count() == 1
+    for h in handles:
+        kinds = _kinds(h)
+        assert "FAILED" in kinds and "STALL_BEGIN" not in kinds
+        failed = next(e for e in h.events if e.kind == "FAILED")
+        assert failed.detail["final"] is False
+        assert [e.index for e in h.events if e.kind == "TOKEN"] \
+            == list(range(40))
+        assert h.suppressed > 0              # recomputed prefix never re-sent
+
+
+def test_baseline_double_fault_mid_replay_keeps_stream_well_formed():
+    """A second fault landing while a baseline request is still replaying
+    its suppressed prefix emits a second non-final FAILED inside the open
+    stall window — that is a legal window extension (the client sees every
+    error), not a nesting violation, and the stream stays exactly-once."""
+    rt, eng, fe = _frontend(fixed_membership=True)
+    handles = [fe.submit([1, 2], max_new=40) for _ in range(2)]
+    for _ in range(10):
+        fe.step()
+    assert all(h.delivered > 0 for h in handles)
+    rt.injector.inject_at(rt.clock.now() + 0.01, [3])
+    for _ in range(30):                      # first restart + replay begins
+        fe.step()
+    rt.injector.inject_at(rt.clock.now() + 0.01, [5])
+    fe.run(until=rt.clock.now() + 900.0, max_steps=40_000)
+    assert eng.sched.stats.failed >= 4       # both requests, both faults
+    assert not fe.stream_violations()
+    for h in handles:
+        assert h.outcome == "FINISHED"
+        assert [e.index for e in h.events if e.kind == "TOKEN"] \
+            == list(range(40))
+    # both stall windows (one per fault batch) are counted client-side
+    assert fe.metrics()["stall_events"] >= 2
+
+
+def test_deadline_is_relative_to_submit_time():
+    """deadline= is sim-seconds FROM SUBMIT, not an absolute clock value:
+    a request submitted late in a run must get its full budget."""
+    rt, eng, fe = _frontend(max_batch=2)
+    first = fe.submit([1] * 4, max_new=8)
+    fe.run(max_steps=200)
+    assert first.outcome == "FINISHED"
+    assert rt.clock.now() > 0.2
+    late = fe.submit([1] * 4, max_new=8, deadline=60.0)
+    fe.run(max_steps=400)
+    assert late.outcome == "FINISHED"        # not instantly expired
+    assert not fe.stream_violations()
+
+
+def test_drain_preemption_is_not_an_error():
+    """A planned drain preempts in-flight streams: PREEMPTED/RESUMED with
+    progress kept, zero error events, and the preempted work finishes."""
+    rt, eng, fe = _frontend()
+    handles = [fe.submit([1] * 6, max_new=40) for _ in range(4)]
+    for _ in range(8):
+        fe.step()
+    assert eng.sched.inflight > 0
+    fe.admin.execute({"cmd": "drain", "ranks": [2]})
+    fe.run(until=rt.clock.now() + 120.0, max_steps=20_000)
+
+    st = eng.sched.stats
+    assert st.preempted == 4 and st.failed == 0
+    assert st.finished == 4
+    assert fe.metrics()["error_events"] == 0
+    assert not fe.stream_violations()
+    for h in handles:
+        kinds = _kinds(h)
+        assert "PREEMPTED" in kinds and "FAILED" not in kinds
+        assert next(e for e in h.events if e.kind == "PREEMPTED"
+                    ).detail["cause"] == "drain"
+
+
+# ---------------------------------------------------------------------------
+# Satellites: admission control, overflow guard, cancel, deadlines
+# ---------------------------------------------------------------------------
+
+def test_overflow_rejected_at_submit_with_structured_event():
+    """prompt + max_new that cannot fit max_len is refused at submit with
+    a structured REJECTED event — never queued, never silently overflowing
+    slot length bookkeeping mid-decode."""
+    rt, eng, fe = _frontend(max_len=32)
+    h = fe.submit([1] * 8, max_new=64)       # 8 + 64 > 32
+    assert h.done and h.outcome == "REJECTED"
+    ev = h.events[0]
+    assert ev.detail["reason"] == "overflow"
+    assert ev.detail == {"reason": "overflow", "context_len": 8,
+                         "max_new": 64, "max_len": 32}
+    assert eng.sched.stats.rejected == 1
+    assert not eng.sched.queue               # never entered the queue
+    # a fitting request on the same frontend is unaffected
+    ok = fe.submit([1] * 8, max_new=16)
+    fe.run(max_steps=200)
+    assert ok.outcome == "FINISHED"
+    assert not fe.stream_violations()
+
+
+def test_scheduler_submit_returns_false_on_overflow():
+    kv = KVCacheManager(num_slots=2, max_len=16)
+    sched = Scheduler(kv)
+    assert sched.submit(Request(rid=0, prompt=[1] * 4,
+                                max_new_tokens=100)) is False
+    assert sched.stats.rejected == 1
+    assert sched.submit(Request(rid=1, prompt=[1] * 4,
+                                max_new_tokens=12)) is True
+    # allocate refuses a can-never-fit sequence loudly (the guard that
+    # used to be a silent overflow)
+    with pytest.raises(ValueError):
+        kv.allocate(9, context_len=4, reserve=100)
+
+
+def test_queue_depth_admission_control():
+    rt, eng, fe = _frontend(max_batch=2, max_queue_depth=2)
+    handles = [fe.submit([1, 2], max_new=4) for _ in range(6)]
+    rejected = [h for h in handles if h.outcome == "REJECTED"]
+    assert len(rejected) == 4                # 2 queued, rest refused
+    assert all(h.events[0].detail["reason"] == "queue_full"
+               for h in rejected)
+    assert fe.rejected_admission == 4
+    fe.run(max_steps=500)
+    assert sum(h.outcome == "FINISHED" for h in handles) == 2
+    assert not fe.stream_violations()
+
+
+def test_cancel_from_queued_decoding_and_stalled_states():
+    rt, eng, fe = _frontend(max_batch=2)
+    # 3 submits on a 2-slot engine: rid 2 stays QUEUED
+    handles = [fe.submit([1] * 4, max_new=60) for _ in range(3)]
+    for _ in range(6):
+        fe.step()
+    assert handles[2].delivered == 0
+    # (1) cancel from QUEUED
+    assert handles[2].cancel()
+    # (2) cancel from DECODING: slot must be released
+    free_before = len(eng.kv.free)
+    assert handles[0].cancel()
+    assert len(eng.kv.free) == free_before + 1
+    # (3) cancel from STALLED: suspend rid 1 via a fault, then cancel
+    # before it resumes
+    rt.detector.mark_unreachable(3)
+    rt.clock.advance(1.5)
+    eng.sched.suspend_inflight(now=rt.clock.now(), cause="fault",
+                               epoch=rt.epoch)
+    req1 = next(r for r in eng.sched.queue if r.rid == 1)
+    assert req1.state == RequestState.STALLED
+    assert handles[1].cancel()
+    assert eng.sched.stats.cancelled == 3
+    for h in handles:
+        assert h.outcome == "CANCELLED"
+    # idempotent: a second cancel is a no-op
+    assert handles[0].cancel() is False
+    assert eng.sched.stats.cancelled == 3
+    # the engine keeps stepping fine with everything cancelled
+    fe.run(max_steps=2000)
+    assert not fe.stream_violations()
+
+
+def test_deadline_expires_as_cancellation():
+    rt, eng, fe = _frontend(max_batch=2)
+    slow = fe.submit([1] * 4, max_new=50, deadline=1.0)
+    fast = fe.submit([1] * 4, max_new=4)
+    fe.run(until=10.0, max_steps=2000)
+    assert slow.outcome == "CANCELLED"
+    assert next(e for e in slow.events if e.kind == "CANCELLED"
+                ).detail["cause"] == "deadline"
+    assert fast.outcome == "FINISHED"
+    assert not fe.stream_violations()
+
+
+# ---------------------------------------------------------------------------
+# AdminGateway: JSON command/response protocol
+# ---------------------------------------------------------------------------
+
+def test_admin_gateway_json_round_trip_and_errors():
+    rt, eng, fe = _frontend()
+    gw = fe.admin
+    # string in / string out, round-trips through json
+    raw = gw.execute_json('{"cmd": "status"}')
+    resp = json.loads(raw)
+    assert resp["ok"] and resp["cmd"] == "status"
+    st = resp["result"]
+    assert st["policy"] == "elastic" and st["world"] == 8
+    assert st["active_ranks"] == list(range(8))
+    assert st["version"] == st["epoch"] == rt.epoch
+    assert json.loads(json.dumps(resp)) == resp
+    # epoch + incidents queries
+    assert gw.execute({"cmd": "epoch"})["result"]["version"] == rt.epoch
+    inc = gw.execute({"cmd": "incidents", "last": 5})
+    assert inc["ok"] and isinstance(inc["result"]["events"], list)
+    # malformed commands come back as error responses, never raises
+    assert not gw.execute('{"cmd": "explode"}')["ok"]
+    assert not gw.execute('not json')["ok"]
+    assert not gw.execute({"cmd": "drain"})["ok"]              # no ranks
+    assert not gw.execute({"cmd": "drain", "ranks": [99]})["ok"]
+    assert not gw.execute({"cmd": "drain", "ranks": [1],
+                           "at": -5.0})["ok"]                  # in the past
+    assert rt.epoch == json.loads(raw)["epoch"]                # no mutation
+
+
+def test_admin_gateway_drives_control_plane_transitions():
+    rt, eng, fe = _frontend()
+    for _ in range(4):
+        fe.submit([1, 2], max_new=8)
+    e0 = rt.epoch
+    resp = fe.admin.execute({"cmd": "scale_down", "ranks": [6, 7]})
+    assert resp["ok"] and resp["result"]["requested"]
+    fe.run(until=30.0, max_steps=5000)
+    assert rt.epoch > e0
+    assert not rt.table.entries[6].active and not rt.table.entries[7].active
+    status = fe.admin.execute({"cmd": "status"})["result"]
+    assert status["active_ranks"] == list(range(6))
+    resp = fe.admin.execute({"cmd": "scale_up", "ranks": [6, 7]})
+    assert resp["ok"]
+    fe.run(until=rt.clock.now() + 60.0, max_steps=5000)
+    assert rt.table.active_mask.all()
+    assert eng.compile_count() == 1
+
+
+def test_idle_run_waits_for_scheduled_admin_ops():
+    """The ride-along fix: with NO client work at all, a driver-scheduled
+    future drain/undrain pair must still fire — the old engine idle-break
+    exited before the clock ever reached it."""
+    rt, eng, fe = _frontend()
+    drain = fe.admin.execute({"cmd": "drain", "ranks": [2], "at": 5.0})
+    undrain = fe.admin.execute({"cmd": "undrain", "ranks": [2], "at": 12.0})
+    assert drain["ok"] and drain["result"]["scheduled"]
+    assert undrain["ok"]
+    assert fe.admin.execute({"cmd": "status"})["result"]["pending_admin"] == 2
+    fe.run(max_steps=5000)                   # until=None: idle-stop path
+    kinds = [e.kind for e in rt.timeline]
+    assert "drain" in kinds and "undrain" in kinds
+    assert rt.table.active_mask.all()
+    assert rt.clock.now() >= 12.0
+    # and with nothing pending the loop still terminates promptly
+    t = rt.clock.now()
+    fe.run(max_steps=5000)
+    assert rt.clock.now() == t
+
+
+# ---------------------------------------------------------------------------
+# Stream-ordering property over the scenario registry
+# ---------------------------------------------------------------------------
+
+def test_validate_stream_catches_violations():
+    def ev(kind, t, seq, index=-1, **detail):
+        return StreamEvent(kind=kind, t=t, seq=seq, index=index,
+                           detail=detail)
+    assert validate_stream([]) == []
+    ok = [ev("TOKEN", 0.1, 0, 0), ev("STALL_BEGIN", 0.2, 1, cause="fault"),
+          ev("RESUMED", 0.3, 2, epoch=3), ev("STALL_END", 0.4, 3),
+          ev("TOKEN", 0.4, 4, 1), ev("FINISHED", 0.5, 5)]
+    assert validate_stream(ok) == []
+    # duplicated index
+    assert validate_stream([ev("TOKEN", 0.1, 0, 0), ev("TOKEN", 0.2, 1, 0)])
+    # out-of-order index
+    assert validate_stream([ev("TOKEN", 0.1, 0, 1)])
+    # events after terminal
+    assert validate_stream([ev("FINISHED", 0.1, 0), ev("TOKEN", 0.2, 1, 0)])
+    # token inside an open stall window
+    assert validate_stream([ev("STALL_BEGIN", 0.1, 0, cause="fault"),
+                            ev("TOKEN", 0.2, 1, 0)])
+    # nested openers / dangling closers
+    assert validate_stream([ev("STALL_BEGIN", 0.1, 0), ev("PREEMPTED", 0.2, 1)])
+    assert validate_stream([ev("STALL_END", 0.1, 0)])
+    assert validate_stream([ev("RESUMED", 0.1, 0)])
+    # time going backwards / bad seq / unknown kind
+    assert validate_stream([ev("TOKEN", 0.5, 0, 0), ev("TOKEN", 0.1, 1, 1)])
+    assert validate_stream([ev("TOKEN", 0.1, 7, 0)])
+    assert validate_stream([ev("NOPE", 0.1, 0)])
+    # non-final FAILED opens a stall window; final FAILED is terminal
+    retry = [ev("TOKEN", 0.1, 0, 0), ev("FAILED", 0.2, 1, final=False),
+             ev("STALL_END", 0.3, 2), ev("TOKEN", 0.3, 3, 1),
+             ev("FAILED", 0.4, 4, final=True)]
+    assert validate_stream(retry) == []
+    assert validate_stream(retry + [ev("TOKEN", 0.5, 5, 2)])
+    # a second non-final FAILED inside the open window EXTENDS it (legal:
+    # back-to-back baseline restarts), but a stall marker nesting is not
+    double_fail = [ev("FAILED", 0.1, 0, final=False),
+                   ev("FAILED", 0.2, 1, final=False),
+                   ev("STALL_END", 0.3, 2), ev("TOKEN", 0.3, 3, 0),
+                   ev("FINISHED", 0.4, 4)]
+    assert validate_stream(double_fail) == []
+    assert validate_stream([ev("FAILED", 0.1, 0, final=False),
+                            ev("STALL_BEGIN", 0.2, 1)])
+
+
+def test_stream_invariants_hold_across_registry_property():
+    """Hypothesis property over the full scenario registry (both dispatch
+    modes): every stream delivers each token index exactly once, in order,
+    with no events after a terminal event — across fail, drain and rejoin.
+    (The deterministic full sweep rides test_scenarios.py through
+    ``invariants_ok``, which now includes stream violations; here
+    hypothesis varies the registry cell and the seed.)"""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    cells = [(name, mode) for name in list_scenarios()
+             for mode in ("dense", "ragged")]
+
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(cell=st.sampled_from(cells), seed=st.integers(0, 3))
+    def prop(cell, seed):
+        name, mode = cell
+        res = run_scenario(name, seed=seed, dispatch=mode)
+        assert not res.stream_violations, \
+            (name, mode, seed, res.stream_violations[:3])
+        ev = res.client["events"]
+        assert set(ev) <= set(EVENT_KINDS)
+        # elastic continuation: a fault or planned transition never shows
+        # the client an error event
+        assert res.client["error_events"] == 0, (name, mode, seed)
+        assert res.requests_failed == 0, (name, mode, seed)
+
+    prop()
+
+
+def test_runner_exposes_client_metrics_and_baseline_contrast():
+    """One registry scenario end-to-end through the runner: the elastic
+    run reports suspended-but-never-failed with client metrics attached;
+    the fixed-membership baseline still reports failed/retried."""
+    res = run_scenario("concurrent_multi_failure")
+    assert res.requests_failed == 0 and res.requests_suspended > 0
+    assert res.client["error_events"] == 0
+    assert res.client["stall_events"] > 0
+    assert res.client["tokens_recomputed"] > 0
+    assert res.client["ttft_p50_s"] > 0
+    assert res.client["stall_p99_s"] > 0
+    assert res.client["goodput_tok_s"] > 0
+    assert res.invariants_ok
+    summary = res.summary()
+    assert summary["client"]["stall_max_s"] > 0
+    assert summary["stream_violations"] == 0
+    json.dumps(summary)                      # BENCH row stays serializable
+
+    base = run_scenario("concurrent_multi_failure", fixed_membership=True,
+                        check_invariants=False)
+    assert base.requests_failed > 0 and base.requests_retried > 0
+    assert base.requests_suspended == 0
+    assert base.client["error_events"] > 0
+    assert not base.stream_violations        # exactly-once even under retry
+
+
+def test_continuation_preserves_token_values_across_failure():
+    """The resumed stream continues from the preserved prefix: tokens
+    delivered before the fault keep their values (never re-sent), and the
+    engine's compiled step replays the prefix through chunk-1 prefill."""
+    rt, eng, fe = _frontend()
+    h = fe.submit([3, 1, 4], max_new=30)
+    for _ in range(12):
+        fe.step()
+    pre_fault = list(h.tokens)
+    assert len(pre_fault) > 3
+    rt.injector.inject_at(rt.clock.now() + 0.01, [3])
+    fe.run(until=rt.clock.now() + 120.0, max_steps=10_000)
+    assert h.outcome == "FINISHED"
+    assert h.tokens[:len(pre_fault)] == pre_fault
+    assert len(h.tokens) == 30
+    assert not validate_stream(h.events)

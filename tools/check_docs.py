@@ -1,6 +1,7 @@
 """Fast docs check: internal links resolve + the phase vocabulary in
-docs/recovery-lifecycle.md matches repro.obs.phases (code and prose must
-not drift).
+docs/recovery-lifecycle.md matches repro.obs.phases + the serving-event
+vocabulary in docs/serving-api.md matches repro.serving.events (code and
+prose must not drift).
 
   python tools/check_docs.py        # stdlib only, < 1 s
 
@@ -8,6 +9,7 @@ Run by the CI lint job next to `python -m repro.launch.report --selftest`.
 """
 from __future__ import annotations
 
+import importlib.util
 import os
 import re
 import sys
@@ -70,14 +72,39 @@ def check_phase_vocabulary() -> list[str]:
     return bad
 
 
+def check_event_vocabulary() -> list[str]:
+    """The client-visible stream-event vocabulary lives in BOTH
+    repro.serving.events.EVENT_KINDS and docs/serving-api.md; flag any
+    drift. The module is loaded straight from its file (not through the
+    package) so this stays importable with only the standard library —
+    ``repro.serving.__init__`` pulls in jax."""
+    path = os.path.join(ROOT, "src", "repro", "serving", "events.py")
+    spec = importlib.util.spec_from_file_location("_serving_events", path)
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod     # dataclass machinery needs the module
+    spec.loader.exec_module(mod)     # registered before execution
+    doc = os.path.join(ROOT, "docs", "serving-api.md")
+    with open(doc) as f:
+        text = f.read()
+    bad = [f"docs/serving-api.md: event `{kind}` (from "
+           f"repro.serving.events) is undocumented"
+           for kind in mod.EVENT_KINDS if f"`{kind}`" not in text]
+    # and the prose must not define events the code doesn't know: every
+    # event cell of the vocabulary table must be canonical
+    table = re.findall(r"^\| `([A-Z_]+)` \|", text, re.MULTILINE)
+    bad += [f"docs/serving-api.md: table defines unknown event `{kind}`"
+            for kind in table if kind not in mod.EVENT_KINDS]
+    return bad
+
+
 def main() -> int:
-    bad = check_links() + check_phase_vocabulary()
+    bad = check_links() + check_phase_vocabulary() + check_event_vocabulary()
     if bad:
         for line in bad:
             print(f"DOCS CHECK FAILED: {line}", file=sys.stderr)
         return 1
     print(f"docs check ok: {len(_md_files())} files, links + phase "
-          f"vocabulary consistent")
+          f"vocabulary + event vocabulary consistent")
     return 0
 
 
