@@ -82,6 +82,19 @@ def _scenario_metrics(doc: dict) -> dict[str, Metric]:
             v = client.get(metric)
             if v is not None and float(v) >= 0:
                 out[f"{key}/client/{metric}"] = (float(v), direction)
+        # recompute gate (KV migration era): a PURE planned-transition
+        # scenario — drains/scale-downs, zero unplanned recoveries — must
+        # recompute NOTHING: the departing ranks' KV pages moved to the
+        # survivors, so any replayed token is a hard failure, not a trend.
+        # Scenarios with unplanned faults keep the trajectory direction
+        # (non-increasing within tolerance).
+        recomputed = client.get("tokens_recomputed")
+        if recomputed is not None and not row.get("fixed_membership", False):
+            pure_planned = ((row.get("drains", 0)
+                             or row.get("scale_downs", 0))
+                            and not row.get("recoveries", 0))
+            out[f"{key}/client/tokens_recomputed"] = (
+                float(recomputed), "zero" if pure_planned else "lower")
     return out
 
 

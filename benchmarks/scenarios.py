@@ -124,7 +124,13 @@ def main(argv=None) -> int:
                   f"_stall_max={c.get('stall_max_s', -1)}"
                   f"_goodput={c.get('goodput_tok_s', 0)}"
                   f"_recomputed={c.get('tokens_recomputed', 0)}"
+                  f"_migrated={c.get('tokens_migrated', 0)}"
                   f"_errors={c.get('error_events', 0)}")
+            if res.kv_pages_moved:
+                print(f"scenario/{name}[{mode}]/kv,0,"
+                      f"pages_moved={res.kv_pages_moved}"
+                      f"_migrated_reqs={res.requests_migrated}"
+                      f"_migrate_s={res.kv_migrate_s:.4f}")
             if "baseline" in row:
                 b = row["baseline"]
                 print(f"scenario/{name}/vs_restart,0,"

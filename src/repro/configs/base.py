@@ -123,6 +123,10 @@ class ArchConfig:
     microbatch: int = 1                # grad-accum steps inside train_step
     capacity_factor: float = 2.0
     dispatch_mode: str = "dense"       # "dense" | "ragged" (dropless) dispatch
+    # ---- serving KV pool (repro.serving.kv_cache) ----
+    kv_pool: str = "paged"             # "paged" (block tables, drain-time KV
+                                       # migration) | "slot" (contiguous A/B)
+    kv_block_size: int = 16            # tokens per KV page (paged pool)
     # ---- beyond-paper perf knobs (EXPERIMENTS SSPerf) ----
     attn_head_pad: int = 0             # zero-pad Q heads to divide the TP axis
     expert_serving_dtype: str = ""     # e.g. "float8_e4m3fn" weight storage
@@ -137,6 +141,8 @@ class ArchConfig:
         assert self.attention in ATTENTION_KINDS, self.attention
         assert self.activation in ACTIVATIONS, self.activation
         assert self.dispatch_mode in ("dense", "ragged"), self.dispatch_mode
+        assert self.kv_pool in ("slot", "paged"), self.kv_pool
+        assert self.kv_block_size > 0, self.kv_block_size
 
     # -- derived -----------------------------------------------------------
     @property

@@ -124,6 +124,25 @@ def slot_bytes(leaves: dict) -> int:
 _PROPOSED, _COMMITTED, _ABORTED = "proposed", "committed", "aborted"
 
 
+@dataclass(frozen=True)
+class KVPageManifest:
+    """KV pages a planned drain must ship off the departing ranks.
+
+    Produced by the serving engine (the only component that knows the live
+    block tables) when the runtime opens a drain window, and attached to
+    the drain's :class:`MembershipTransaction` as ``kv_manifest``: the
+    page transfer is sequenced INSIDE the transaction — after the weight
+    repair-transfer, before ``commit()`` publishes the shrunk table — so
+    by the time the table patch lands every surviving rank already holds
+    the KV it needs and re-admission replays nothing.
+    """
+    pages_total: int      # pages held by all in-flight requests
+    pages_moved: int      # the departing ranks' share (what actually ships)
+    bytes_moved: int      # pages_moved * page_bytes (Tier-2 transfer timing)
+    requests: int         # live requests whose KV the manifest covers
+    page_bytes: int       # modeled bytes per page (block_size x token KV)
+
+
 class MembershipTransaction:
     """One atomic membership transition: propose -> plan -> validate ->
     commit.
@@ -160,6 +179,10 @@ class MembershipTransaction:
         self.rank_capacity: Optional[np.ndarray] = None
         self._staged_leaves: Optional[dict] = None
         self.epoch: Optional[int] = None         # set on commit
+        # planned drains: the KV pages shipped off the departing ranks
+        # inside this transaction's window (set by the runtime between the
+        # weight transfer and commit; None when nothing was resident)
+        self.kv_manifest: Optional[KVPageManifest] = None
 
     # -- guards -------------------------------------------------------------
     def _live(self) -> None:
@@ -514,7 +537,12 @@ class ControlPlane:
 
     # -- immediate operations ------------------------------------------------
     def drain(self, *ranks):
-        """Planned maintenance drain: replan + transfer, no detect pause."""
+        """Planned maintenance drain: replan + transfer, no detect pause.
+        Sequencing inside the window: weight repair-transfer, then the
+        departing ranks' KV pages ship to the survivors (the transaction's
+        ``kv_manifest``, the ``kv-migrate`` phase), and only then does the
+        table patch publish the shrunk membership — transfer before
+        table-patch, so re-admitted requests find their pages intact."""
         return self.dispatch("drain", ranks)
 
     def undrain(self, *ranks):

@@ -58,6 +58,12 @@ def main(argv=None):
     ap.add_argument("--dispatch", choices=["dense", "ragged"], default=None,
                     help="capacity-padded vs dropless size-exchange dispatch "
                     "(default: the arch config's dispatch_mode)")
+    ap.add_argument("--kv-pool", choices=["slot", "paged"], default=None,
+                    help="KV cache layout: contiguous per-request slots "
+                    "(replay on drain) vs paged blocks with live migration "
+                    "(default: the arch config's kv_pool, normally paged)")
+    ap.add_argument("--kv-block-size", type=int, default=None,
+                    help="tokens per KV page (paged pool only)")
     ap.add_argument("--max-queue-depth", type=int, default=None,
                     help="admission control: reject submits past this queue "
                     "depth with a structured REJECTED event")
@@ -81,6 +87,9 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
+    if args.kv_block_size is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_block_size=args.kv_block_size)
     E = cfg.moe.num_experts if cfg.is_moe else 1
     table = make_initial_membership(args.world, E, args.slots_per_rank)
     params = init_params(cfg, jax.random.key(0), jnp.float32,
@@ -88,7 +97,8 @@ def main(argv=None):
     rt = ElasticEPRuntime(cfg, params, table, dispatch=args.dispatch)
     eng = ServingEngine(rt, max_batch=args.max_batch,
                         max_len=args.prompt_len + args.max_new + 8,
-                        fixed_membership=args.fixed_membership)
+                        fixed_membership=args.fixed_membership,
+                        kv_pool=args.kv_pool)
     fe = ServingFrontend(eng, max_queue_depth=args.max_queue_depth)
 
     rng = np.random.RandomState(0)
@@ -133,6 +143,7 @@ def main(argv=None):
           f"stall_p50={m['stall_p50_s']}s stall_p99={m['stall_p99_s']}s "
           f"stall_max={m['stall_max_s']}s goodput={m['goodput_tok_s']} tok/s "
           f"recomputed={m['tokens_recomputed']} "
+          f"migrated={m['tokens_migrated']} "
           f"error_events={m['error_events']}")
     bad = fe.stream_violations()
     print(f"stream contract: {'OK (exactly-once, in-order)' if not bad else bad[:3]}")

@@ -30,8 +30,14 @@ phases run off the serving path):
                    transfer, no detect window                  (critical)
   scale-down       planned elastic shrink (same mechanics as
                    drain; tracked separately)                  (critical)
+  kv-migrate       departing ranks' KV pages ship to the
+                   survivors, nested INSIDE the drain /
+                   scale-down window before its table patch    (nested)
 
 The fixed-membership baseline reports a single ``full-restart`` span.
+``kv-migrate`` is deliberately NOT critical-path: it nests inside the
+already-critical drain span (the pause is charged once, by the outer
+span), so the no-critical-overlap rule stays intact.
 
 Well-formedness (checked by :func:`validate_spans`, asserted across the
 whole scenario registry by the tier-1 tests): spans are closed and
@@ -64,15 +70,20 @@ PHASES = ("detect", "replan", "repair-transfer", "warmup", "table-patch",
 #: detect window (the departing rank is alive and cooperating). Undrains
 #: and scale-ups reuse ``warmup``/``table-patch``/``rejoin``.
 PLANNED_PHASES = ("drain", "scale-down")
+#: Sub-phases: timed segments nested inside another phase's span. The KV
+#: page transfer of a planned drain (serving data plane: PagedKVPool
+#: residency moving to the survivors) runs inside the drain/scale-down
+#: window, sequenced before the table patch.
+SUB_PHASES = ("kv-migrate",)
 #: Phases only the fixed-membership baseline emits.
 BASELINE_PHASES = ("full-restart",)
-ALL_PHASES = PHASES + PLANNED_PHASES + BASELINE_PHASES
+ALL_PHASES = PHASES + PLANNED_PHASES + SUB_PHASES + BASELINE_PHASES
 
 #: Lifecycle stage per phase: within one incident the stage index of
 #: successive spans (by start time) must be non-decreasing.
 _STAGE = {"detect": 0, "replan": 1, "repair-transfer": 1, "warmup": 2,
           "table-patch": 3, "rejoin": 3, "full-restart": 0,
-          "drain": 1, "scale-down": 1}
+          "drain": 1, "scale-down": 1, "kv-migrate": 1}
 
 #: Critical-path phases pause every healthy rank, so they are globally
 #: serial: no two such spans may overlap, across incidents included.

@@ -23,7 +23,8 @@ from __future__ import annotations
 import json
 from typing import Optional
 
-from repro.obs.phases import PHASES, PLANNED_PHASES, validate_spans
+from repro.obs.phases import (PHASES, PLANNED_PHASES, SUB_PHASES,
+                              validate_spans)
 from repro.obs.svg import line_chart, phase_bars
 
 #: The paper's headline, time-shaped claims (abstract / Figs. 1, 9, 10, 11).
@@ -51,8 +52,11 @@ CLAIM_LABELS = {
 }
 
 #: Phases shown as table columns, in lifecycle order (plus the planned
-#: drain/scale-down pauses so maintenance scenarios are visible too).
-_COLS = [p for p in PHASES if p != "rejoin"] + list(PLANNED_PHASES)
+#: drain/scale-down pauses so maintenance scenarios are visible too, and
+#: the nested kv-migrate sub-phase so the page-shipping cost of a drain is
+#: visible next to the pause it hides inside).
+_COLS = [p for p in PHASES if p != "rejoin"] + list(PLANNED_PHASES) \
+    + list(SUB_PHASES)
 
 
 def _rows(doc: dict) -> list[dict]:
@@ -249,13 +253,15 @@ def build_report(doc: dict, static_doc: Optional[dict] = None,
            "inter-token stall percentiles measured between TOKEN "
            "timestamps (so recovery pauses count exactly as a client "
            "feels them), goodput, the continuation cost (tokens replayed "
-           "through chunk-1 prefill on resume) and client-visible error "
-           "events — zero under the elastic policy's fault-transparent "
-           "continuation.", "",
+           "through chunk-1 prefill on resume) next to the migration "
+           "credit (KV tokens moved to survivors instead of being "
+           "replayed — pure planned drains must show recomputed 0), and "
+           "client-visible error events — zero under the elastic "
+           "policy's fault-transparent continuation.", "",
            "| scenario | dispatch | ttft p50 (s) | stall p50 (s) | "
            "stall p99 (s) | stall max (s) | goodput (tok/s) | "
-           "recomputed | errors |",
-           "|---|---|---|---|---|---|---|---|---|"]
+           "recomputed | migrated | errors |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
     for r in _elastic_rows(doc):
         c = r.get("client") or {}
         if not c:
@@ -268,6 +274,7 @@ def build_report(doc: dict, static_doc: Optional[dict] = None,
             f"{_fmt(c.get('stall_max_s'), 3)} | "
             f"{_fmt(c.get('goodput_tok_s'))} | "
             f"{c.get('tokens_recomputed', 0)} | "
+            f"{c.get('tokens_migrated', 0)} | "
             f"{c.get('error_events', 0)} |")
     md.append("")
 
@@ -308,6 +315,8 @@ def build_report(doc: dict, static_doc: Optional[dict] = None,
             "joins": r.get("joins", 0),
             "incident_pauses_s": [round(p, 6) for p in _incident_pauses(r)],
             "join_pauses_s": [round(p, 6) for p in _join_pauses(r)],
+            "kv_pages_moved": r.get("kv_pages_moved", 0),
+            "kv_migrate_s": r.get("kv_migrate_s", 0.0),
             "client": r.get("client") or {},
         } for r in rows],
     }
@@ -357,11 +366,12 @@ def _synthetic_doc() -> dict:
             "client": {"ttft_p50_s": 0.2, "ttft_p99_s": 0.9,
                        "stall_p50_s": 0.05, "stall_p99_s": 0.066,
                        "stall_max_s": 5.01, "goodput_tok_s": 62.0,
-                       "tokens_recomputed": 152, "stall_events": 4,
+                       "tokens_recomputed": 152, "tokens_migrated": 64,
+                       "migrations": 2, "stall_events": 4,
                        "error_events": 0,
                        "events": {"TOKEN": 900, "STALL_BEGIN": 4,
                                   "RESUMED": 4, "STALL_END": 4,
-                                  "FINISHED": 28}},
+                                  "MIGRATED": 2, "FINISHED": 28}},
             "spans": spans(),
             "trace": [{"t": 0.5, "tokens_per_s": 80.0, "active_fraction": 1.0},
                       {"t": 2.5, "tokens_per_s": 0.0, "active_fraction": 0.875},

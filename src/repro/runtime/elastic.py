@@ -188,6 +188,11 @@ class ElasticEPRuntime:
         self.policy: TransitionPolicy = policy or ElasticPolicy()
         # planned-operations facade: drain/undrain/scale_down/scale_up
         self.control = ControlPlane(self)
+        # KV-migration hook: the serving engine (when its pool can pin and
+        # move pages) registers a callback returning a KVPageManifest for
+        # a set of departing ranks; drain_ranks sequences the page
+        # transfer inside the drain window, before the table patch.
+        self.kv_migration_source = None
 
         # bootstrap commit: the initial device publication is itself a
         # transaction, so `epoch`, `MembershipState.version` and the
@@ -561,6 +566,23 @@ class ElasticEPRuntime:
                         self.table.slots_per_rank)["weight_transfer"]
                     if xfer > 0:
                         self.clock.advance(xfer)
+                # transfer-before-table-patch: the departing ranks' KV
+                # pages ship to the survivors over the same Tier-2 window
+                # the weights just used, so re-admitted requests find
+                # their pages intact and replay NOTHING. The serving
+                # engine owns the block tables; it registered the
+                # manifest source at construction (paged pool only).
+                manifest = (self.kv_migration_source(sorted(ranks))
+                            if self.kv_migration_source is not None else None)
+                if manifest is not None and manifest.pages_moved > 0:
+                    with self.obs.span("kv-migrate", incident,
+                                       pages=manifest.pages_moved,
+                                       bytes=manifest.bytes_moved,
+                                       requests=manifest.requests):
+                        self.clock.advance(
+                            manifest.bytes_moved
+                            / (self.cost_model.ici_gbps * 1e9))
+                    txn.kv_manifest = manifest
                 txn.commit()
         except TransitionAborted as e:
             self.record("transition_abort", _incident=incident, op=kind,
@@ -575,7 +597,11 @@ class ElasticEPRuntime:
                     pause_s=round(pause, 6), epoch=self.epoch,
                     mix=last.source_mix() if last else {},
                     tier2_bytes=last.tier2_bytes if last else 0,
-                    tier3_bytes=last.tier3_bytes if last else 0)
+                    tier3_bytes=last.tier3_bytes if last else 0,
+                    kv_pages_moved=(txn.kv_manifest.pages_moved
+                                    if txn.kv_manifest else 0),
+                    kv_bytes_moved=(txn.kv_manifest.bytes_moved
+                                    if txn.kv_manifest else 0))
         return {"pause_s": pause, "epoch": self.epoch}
 
     def undrain_ranks(self, ranks: list[int]) -> dict:

@@ -76,8 +76,12 @@ class ScenarioResult:
     requests_dropped: int = 0
     requests_preempted: int = 0     # gracefully requeued by drains/scales
     requests_suspended: int = 0     # continuation: fault absorbed, no error
+    requests_migrated: int = 0      # KV moved intact: re-admitted, no replay
     requests_cancelled: int = 0
     requests_rejected: int = 0
+    tokens_migrated: int = 0        # resident KV tokens that skipped replay
+    kv_pages_moved: int = 0         # pages shipped inside drain windows
+    kv_migrate_s: float = 0.0       # summed kv-migrate phase seconds
     recoveries: int = 0
     recovery_rounds: int = 0        # > recoveries when cascades composed
     joins: int = 0
@@ -129,8 +133,12 @@ class ScenarioResult:
             "requests_dropped": self.requests_dropped,
             "requests_preempted": self.requests_preempted,
             "requests_suspended": self.requests_suspended,
+            "requests_migrated": self.requests_migrated,
             "requests_cancelled": self.requests_cancelled,
             "requests_rejected": self.requests_rejected,
+            "tokens_migrated": self.tokens_migrated,
+            "kv_pages_moved": self.kv_pages_moved,
+            "kv_migrate_s": round(self.kv_migrate_s, 6),
             "recoveries": self.recoveries,
             "recovery_rounds": self.recovery_rounds,
             "joins": self.joins,
@@ -348,6 +356,7 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
         elif e.kind == "drain":
             res.drains += len(e.detail.get("ranks", [0]))
             res.downtime_s += float(e.detail.get("pause_s", 0.0))
+            res.kv_pages_moved += int(e.detail.get("kv_pages_moved", 0))
         elif e.kind in ("undrain", "undrain_relaunch"):
             # a warm undrain commits directly; a cold one (rank died while
             # drained) registers here and completes through the join path —
@@ -356,6 +365,7 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
         elif e.kind == "scale_down":
             res.scale_downs += len(e.detail.get("ranks", [0]))
             res.downtime_s += float(e.detail.get("pause_s", 0.0))
+            res.kv_pages_moved += int(e.detail.get("kv_pages_moved", 0))
         elif e.kind == "scale_up":
             res.scale_ups += 1
         elif e.kind == "transition_abort":
@@ -369,8 +379,11 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     res.requests_dropped = st.dropped
     res.requests_preempted = st.preempted
     res.requests_suspended = st.suspended
+    res.requests_migrated = st.migrated
     res.requests_cancelled = st.cancelled
     res.requests_rejected = st.rejected
+    res.tokens_migrated = st.tokens_migrated
+    res.kv_migrate_s = float(rt.obs.phase_totals().get("kv-migrate", 0.0))
     # client-perceived view: what the streams actually delivered, and
     # whether every one honored the exactly-once ordering contract
     res.client = _jsonable(fe.metrics())

@@ -293,6 +293,16 @@ class ServingFrontend:
             handle._emit("RESUMED", t, epoch=detail["epoch"],
                          snapshot_epoch=detail["snapshot_epoch"],
                          recomputed=detail["recomputed"])
+        elif kind == "migrated":
+            # KV pages moved intact (paged pool, planned drain): nothing
+            # replays, so the stall is over the moment the pages land —
+            # the window its PREEMPTED opened closes here, and a later
+            # fault opens a fresh one (MIGRATED and RESUMED never share
+            # a window; validate_stream enforces it)
+            handle._emit("MIGRATED", t, epoch=detail["epoch"],
+                         snapshot_epoch=detail["snapshot_epoch"],
+                         pages=detail["pages"], tokens=detail["tokens"])
+            handle._close_stall(t)
         elif kind == "cancelled":
             handle._emit("CANCELLED", t, cause=detail["cause"],
                          tokens=detail["tokens"])
@@ -346,6 +356,8 @@ class ServingFrontend:
             "tokens_recomputed": stats.tokens_recomputed
                                  + sum(h.suppressed
                                        for h in self.streams.values()),
+            "tokens_migrated": stats.tokens_migrated,
+            "migrations": stats.migrated,
             "stall_events": stall_events,
             "error_events": error_events,
             "events": dict(sorted(event_counts.items())),
@@ -470,6 +482,7 @@ class AdminGateway:
             "live_streams": len(fe.live_streams),
             "pending_admin": len(fe._scheduled),
             "scheduler": asdict(eng.sched.stats),
+            "kv": eng.kv.stats(),
         }
 
     def _epoch(self) -> dict:

@@ -33,12 +33,13 @@ from repro.core.transitions import (
     ElasticPolicy,
     FullRestartCostModel,
     FullRestartPolicy,
+    KVPageManifest,
     TransitionPolicy,
 )
 from repro.launch.steps import make_serve_step
 from repro.models.model import init_caches
 from repro.runtime.elastic import ElasticEPRuntime
-from repro.serving.kv_cache import KVCacheManager
+from repro.serving.kv_cache import make_pool
 from repro.serving.scheduler import Scheduler
 
 __all__ = ["FullRestartCostModel", "ServingEngine", "ThroughputSample"]
@@ -58,7 +59,8 @@ class ServingEngine:
                  fixed_membership: bool = False,
                  restart_model: Optional[FullRestartCostModel] = None,
                  max_retries: Optional[int] = None,
-                 policy: Optional[TransitionPolicy] = None):
+                 policy: Optional[TransitionPolicy] = None,
+                 kv_pool: Optional[str] = None):
         self.rt = runtime
         cfg = runtime.cfg
         self.cfg = cfg
@@ -66,7 +68,11 @@ class ServingEngine:
         # engine construction — recovery/reintegration patch membership
         # contents only, so the mode survives the whole fail/rejoin lifetime
         self.dispatch = getattr(runtime.dpl.moe, "dispatch", "dense")
-        self.kv = KVCacheManager(max_batch, max_len)
+        # KV pool flavor ("slot" | "paged"): the paged pool pins pages at
+        # preemption so planned drains MIGRATE KV instead of replaying it
+        self.kv = make_pool(kv_pool or getattr(cfg, "kv_pool", "paged"),
+                            max_batch, max_len,
+                            block_size=getattr(cfg, "kv_block_size", 16))
         self.sched = Scheduler(self.kv, max_retries=max_retries)
         self.caches = init_caches(cfg, max_batch, max_len, dtype)
         self.base_step_time = base_step_time
@@ -86,8 +92,19 @@ class ServingEngine:
         self.policy = policy
         self.fixed_membership = not policy.mutates_membership
         runtime.set_policy(policy)
+        # the runtime asks the live engine for a KV-page manifest when a
+        # planned drain opens its kv-migrate window (transfer sequenced
+        # before the table patch); only a migration-capable pool under the
+        # elastic policy has pages worth shipping
+        runtime.kv_migration_source = (
+            self._kv_manifest if self.kv.supports_migration
+            and not self.fixed_membership else None)
         self.trace: list[ThroughputSample] = []
         self._prompt_pos = np.zeros((max_batch,), np.int64)
+        # unplanned faults: the recovery pause (detect..rejoin) is dead
+        # time the speculative re-prefill can hide inside — replay-only
+        # steps consume this budget instead of wall-clock
+        self._overlap_budget = 0.0
 
         self._step = jax.jit(make_serve_step(cfg, runtime.dpl),
                              donate_argnums=(1,))
@@ -110,6 +127,17 @@ class ServingEngine:
             return jax.tree_util.tree_map_with_path(fix, caches)
 
         self._reset_slots = jax.jit(reset_slots, donate_argnums=(0,))
+
+        # paged-pool page relocation: the pool's pending (src, dst) moves
+        # fold into one slot-permutation gather over the donated cache
+        # buffers — the compiled-step analogue of patching an indirection
+        # table. Separate jitted helper, same donated-buffer discipline as
+        # _reset_slots; compile_count() tracks the serve step only.
+        def gather_slots(caches, src):
+            return jax.tree_util.tree_map(
+                lambda leaf: jnp.take(leaf, src, axis=1), caches)
+
+        self._gather_slots = jax.jit(gather_slots, donate_argnums=(0,))
         self._last_input = np.zeros((max_batch, 1), np.int32)
 
     # ------------------------------------------------------------------
@@ -119,18 +147,51 @@ class ServingEngine:
         return self._step._cache_size()
 
     # ------------------------------------------------------------------
+    def _kv_token_bytes(self) -> int:
+        """Modeled bytes of KV state one resident token occupies across the
+        attention layers (fp32 sim arrays, K + V per kv head)."""
+        cfg = self.cfg
+        n_attn = max(1, len(cfg.attn_layer_ids()))
+        return n_attn * 2 * cfg.num_kv_heads * cfg.head_dim * 4
+
+    def _kv_manifest(self, ranks) -> KVPageManifest:
+        """KV-page manifest for a planned drain of ``ranks``: the share of
+        live pages resident on the departing ranks, which must ship to the
+        survivors over the Tier-2 transfer path BEFORE the table patch
+        publishes the shrunk membership. Called by the runtime inside the
+        drain window (its kv-migrate phase)."""
+        pool = self.kv
+        pages_total = pool.inflight_pages()
+        mask = np.asarray(self.rt.table.active_mask, bool)
+        # pre-drain active count, whether or not the transaction already
+        # deactivated the departing ranks on the live table
+        pre = int(mask.sum()) + sum(1 for r in ranks if not mask[r])
+        share = min(1.0, len(ranks) / max(1, pre))
+        pages_moved = int(np.ceil(pages_total * share))
+        page_bytes = getattr(pool, "block_size", 0) * self._kv_token_bytes()
+        return KVPageManifest(
+            pages_total=pages_total,
+            pages_moved=pages_moved,
+            bytes_moved=pages_moved * page_bytes,
+            requests=len(pool.active_slots()) + pool.stats()["pinned"],
+            page_bytes=page_bytes)
+
+    # ------------------------------------------------------------------
     def _build_inputs(self):
         tokens = np.zeros((self.kv.num_slots, 1), np.int32)
         for slot in self.kv.active_slots():
-            req = self.sched.running[int(self.kv.owner[slot])]
+            req = self.sched.running[self.kv.owner_of(slot)]
             pos = self._prompt_pos[slot]
             if pos < req.replay_len:
                 # chunk-1 prefill replay: the prompt — and, on a
-                # continuation resume, the preserved generated prefix
+                # continuation resume, the preserved generated prefix.
+                # A migrated request re-enters here too, but with
+                # _prompt_pos already at its restored resident length,
+                # so nothing actually replays.
                 tokens[slot, 0] = req.replay_token(pos)
             else:
                 tokens[slot, 0] = req.generated[-1] if req.generated else 0
-        lengths = self.kv.lengths.copy()
+        lengths = self.kv.step_lengths()
         return tokens, lengths
 
     def step(self) -> int:
@@ -140,6 +201,7 @@ class ServingEngine:
         # --- fault handling (between forward passes, paper §3.1): one pump
         # drains every pending control transition — possibly several
         # overlapping failures and a batch of joins — in event order. ---
+        t_pre = rt.clock.now()
         ctl = rt.pump_control()
         now = rt.clock.now()
         if ctl.failures_handled or ctl.restarts:
@@ -157,6 +219,13 @@ class ServingEngine:
             else:
                 self.sched.suspend_inflight(now=now, cause="fault",
                                             epoch=rt.epoch)
+                # speculative re-prefill: the recovery pause the pump just
+                # charged (detect..rejoin) is the window replay-only steps
+                # may hide inside — with paged KV the replay was already
+                # overlapped with the repair transfer, so it costs no
+                # extra wall-clock until the budget runs out
+                if self.kv.supports_migration:
+                    self._overlap_budget = max(0.0, now - t_pre)
             self._prompt_pos[:] = 0
             self.trace.append(ThroughputSample(now, 0.0,
                                                rt.active_fraction()))
@@ -164,10 +233,18 @@ class ServingEngine:
             # planned shrink: in-flight work on the departing ranks is
             # PREEMPTED, not failed — requeued at the front with progress
             # kept and no retry budget consumed (the clients never see an
-            # error)
-            self.sched.preempt_inflight(
-                now=now, cause="drain" if ctl.drained else "scale_down",
-                epoch=rt.epoch)
+            # error). Over a migration-capable pool the KV pages are
+            # PINNED, not released: they shipped to the survivors inside
+            # the drain window (the runtime's kv-migrate phase, sequenced
+            # before the table patch), so re-admission replays nothing.
+            if self.kv.supports_migration and not self.fixed_membership:
+                self.sched.migrate_inflight(
+                    now=now, cause="drain" if ctl.drained else "scale_down",
+                    epoch=rt.epoch)
+            else:
+                self.sched.preempt_inflight(
+                    now=now, cause="drain" if ctl.drained else "scale_down",
+                    epoch=rt.epoch)
             self._prompt_pos[:] = 0
             self.trace.append(ThroughputSample(now, 0.0,
                                                rt.active_fraction()))
@@ -184,10 +261,32 @@ class ServingEngine:
                                     epoch=int(np.asarray(rt.membership.version)))
         if admitted:
             mask = np.zeros((self.kv.num_slots,), bool)
+            fresh = False
             for req in admitted:
-                mask[req.slot] = True
-                self._prompt_pos[req.slot] = 0
-            self.caches = self._reset_slots(self.caches, jnp.asarray(mask))
+                if req.kv_intact:
+                    # pages moved intact (MIGRATED): the slot's cache rows
+                    # are live state — do NOT reset them; resume feeding
+                    # from the restored resident length, replaying nothing
+                    req.kv_intact = False
+                    self._prompt_pos[req.slot] = self.kv.length_of(req.slot)
+                else:
+                    mask[req.slot] = True
+                    self._prompt_pos[req.slot] = 0
+                    fresh = True
+            if fresh:
+                self.caches = self._reset_slots(self.caches,
+                                                jnp.asarray(mask))
+
+        # pending page relocations (PagedKVPool.migrate) fold into ONE
+        # slot-permutation gather over the donated cache buffers, applied
+        # before the step reads them
+        moves = self.kv.take_moves()
+        if moves:
+            src = np.arange(self.kv.num_slots)
+            for a, b in moves:
+                src[b] = a
+            self.caches = self._gather_slots(self.caches,
+                                             jnp.asarray(src, jnp.int32))
 
         active = self.kv.active_slots()
         if not active:
@@ -211,15 +310,18 @@ class ServingEngine:
         # deduplicated. ---
         produced = {}
         redecoded = 0
+        resume_replaying = False
         for slot in active:
-            req = self.sched.running.get(int(self.kv.owner[slot]))
+            req = self.sched.running.get(self.kv.owner_of(slot))
             if req is None:
                 continue
             pos = self._prompt_pos[slot]
             if pos + 1 < req.replay_len:
                 # still consuming the replay sequence
                 self._prompt_pos[slot] += 1
-                self.kv.lengths[slot] = int(pos + 1)
+                self.kv.set_length(slot, int(pos + 1))
+                if req.generated:
+                    resume_replaying = True  # a true resume, not a fresh prefill
                 if pos >= len(req.prompt):
                     redecoded += 1       # generated-prefix replay (resume)
             else:
@@ -230,9 +332,18 @@ class ServingEngine:
         self.sched.step_complete(produced, now)
 
         # --- modeled step latency: wide-EP step time scales with the
-        #     reciprocal of the live-rank fraction (reduced capacity) ---
+        #     reciprocal of the live-rank fraction (reduced capacity).
+        #     Replay-only steps right after an unplanned fault draw down
+        #     the overlap budget instead of wall-clock: the speculative
+        #     re-prefill ran inside the recovery pause (repair-transfer
+        #     window), so the stall the client sees stops growing. ---
         step_t = self.base_step_time / max(rt.active_fraction(), 1e-6)
-        rt.clock.advance(step_t)
+        charged = step_t
+        if not produced and resume_replaying and self._overlap_budget > 0:
+            hidden = min(charged, self._overlap_budget)
+            self._overlap_budget -= hidden
+            charged -= hidden
+        rt.clock.advance(charged)
         rt.heartbeat()
         self.trace.append(ThroughputSample(
             rt.clock.now(), (len(produced) + redecoded) / step_t,

@@ -21,6 +21,10 @@ Event vocabulary (see docs/serving-api.md for full field schemas):
   RESUMED      the continuation snapshot was re-admitted into a KV slot
                (validated against the membership epoch); the prefix is
                replaying through the chunk-1 prefill path
+  MIGRATED     the request's KV pages moved intact (paged pool, planned
+               drain): re-admitted with ZERO replay — emitted instead of
+               the RESUMED-with-recompute flavor, inside the same stall
+               window its PREEMPTED opened, and the window closes at once
   STALL_END    the stall is over — the next fresh TOKEN follows
                immediately (``stall_s`` = event time minus the opening
                STALL_BEGIN / PREEMPTED / FAILED time)
@@ -52,7 +56,7 @@ from dataclasses import dataclass, field
 #: Canonical client-visible event kinds (documented in docs/serving-api.md
 #: — keep the two in sync; tools/check_docs.py enforces it).
 EVENT_KINDS = ("TOKEN", "STALL_BEGIN", "STALL_END", "PREEMPTED", "RESUMED",
-               "FAILED", "FINISHED", "REJECTED", "CANCELLED")
+               "MIGRATED", "FAILED", "FINISHED", "REJECTED", "CANCELLED")
 
 #: Kinds that always end the stream. FAILED is terminal only when its
 #: ``final`` detail flag is set (a baseline retry emits a non-final FAILED
@@ -115,16 +119,22 @@ def validate_stream(events, eps: float = 1e-9) -> list[str]:
       3. nothing follows a terminal event;
       4. token indices are exactly 0..k-1, each delivered once, in order;
       5. stall windows are well-bracketed: STALL_BEGIN / PREEMPTED never
-         nest, STALL_END and RESUMED appear only inside an open window,
-         and no TOKEN is delivered while a window is open. A further
-         non-final FAILED *inside* an open window is legal — the client
-         really does see every error; it extends the window rather than
-         nesting a new one (back-to-back baseline restarts).
+         nest, STALL_END, RESUMED and MIGRATED appear only inside an open
+         window, and no TOKEN is delivered while a window is open. A
+         further non-final FAILED *inside* an open window is legal — the
+         client really does see every error; it extends the window rather
+         than nesting a new one (back-to-back baseline restarts);
+      6. one stall window resolves ONE way: MIGRATED (pages moved intact,
+         zero replay) and RESUMED (prefix replays) never coexist inside
+         the same window — migrated KV must not also report replayed
+         positions.
     """
     bad: list[str] = []
     prev_t = -1.0
     next_index = 0
     stalled_by: str | None = None
+    resumed_in_window = False
+    migrated_in_window = False
     terminal_seen = False
     for i, ev in enumerate(events):
         kind, t, seq = _get(ev, "kind"), _get(ev, "t"), _get(ev, "seq")
@@ -156,14 +166,30 @@ def validate_stream(events, eps: float = 1e-9) -> list[str]:
             if stalled_by is not None and kind in STALL_OPENERS:
                 bad.append(f"seq {i}: {kind} nested inside an open "
                            f"{stalled_by} stall window")
+            if stalled_by is None:
+                resumed_in_window = migrated_in_window = False
             stalled_by = stalled_by or kind
         elif kind == "RESUMED":
             if stalled_by is None:
                 bad.append(f"seq {i}: RESUMED outside any stall window")
+            if migrated_in_window:
+                bad.append(f"seq {i}: RESUMED after MIGRATED in the same "
+                           f"stall window (migrated KV must not also "
+                           f"replay positions)")
+            resumed_in_window = True
+        elif kind == "MIGRATED":
+            if stalled_by is None:
+                bad.append(f"seq {i}: MIGRATED outside any stall window")
+            if resumed_in_window:
+                bad.append(f"seq {i}: MIGRATED after RESUMED in the same "
+                           f"stall window (KV cannot both replay and move "
+                           f"intact)")
+            migrated_in_window = True
         elif kind == "STALL_END":
             if stalled_by is None:
                 bad.append(f"seq {i}: STALL_END without an open window")
             stalled_by = None
+            resumed_in_window = migrated_in_window = False
         if _is_terminal(ev):
             terminal_seen = True
     return bad

@@ -1,18 +1,110 @@
-"""Slot-based KV cache manager for continuous batching.
+"""KV-cache pools for continuous batching: slot-contiguous and paged.
 
-The engine runs a fixed decode batch of ``num_slots`` sequences; the manager
+The engine runs a fixed decode batch of ``num_slots`` sequences; a *pool*
 tracks slot allocation/free and per-slot context lengths. Cache arrays
 themselves live in the compiled step's donated arguments (models.init_caches
-layout); this class owns only the host-side allocation state.
+layout); pools own only the host-side allocation state plus — for the paged
+pool — the block tables and pending page relocations the engine turns into a
+jitted gather over the donated cache buffers.
+
+Two implementations sit behind one explicit protocol:
+
+``SlotKVPool``
+    Today's contiguous per-request slot manager (one slot == one request's
+    whole context window). Suspension loses KV residency: a suspended
+    request replays its prompt + generated prefix through chunk-1 prefill.
+
+``PagedKVPool``
+    Fixed-size blocks (``block_size`` tokens each), per-request block
+    tables, a global free-block pool, copy-on-extend bookkeeping (crossing
+    a block boundary claims a fresh block). Because blocks survive
+    ``snapshot()`` with their contents pinned, a planned drain *migrates*
+    KV pages to the surviving ranks instead of recomputing them —
+    ``restore()`` re-admits with zero replay.
+
+``KVPool`` (the protocol) is the ONLY surface the scheduler / engine /
+frontend touch — no ``lengths`` / ``owner`` / free-list indexing outside
+this module (enforced by a source-guard test, same discipline as the
+no-direct-membership-mutation check in core/transitions).
 """
 from __future__ import annotations
 
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Optional, Protocol, runtime_checkable
+
 
 import numpy as np
 
 
-class KVCacheManager:
+@dataclass
+class KVSnapshot:
+    """Handle for a suspended request's KV residency, taken by
+    ``KVPool.snapshot`` and redeemed by ``restore`` (or ``discard`` on
+    cancel). For the paged pool the named blocks stay *pinned* — neither
+    the slot nor the blocks return to the free pools until the snapshot is
+    redeemed, so the pages can be shipped to survivors during the drain
+    window and decode continues from the exact suspended position. For the
+    slot pool ``blocks`` is empty and ``restore`` returns ``None``: the
+    content is gone and the caller falls back to prefill replay.
+
+    The membership epoch tag rides the *request* (``Request.snapshot_epoch``,
+    PR 5's suspension handle); epoch validation at re-admission stays the
+    correctness gate for both flavors.
+    """
+    rid: int
+    slot: int                       # slot whose cache rows hold the content
+    length: int                     # tokens whose KV is resident
+    blocks: tuple[int, ...] = ()    # pinned physical block ids (paged only)
+
+    @property
+    def pages(self) -> int:
+        return len(self.blocks)
+
+
+@runtime_checkable
+class KVPool(Protocol):
+    """What the scheduler and engine are allowed to call. Everything else
+    (free lists, owner arrays, block tables) is pool-private."""
+
+    num_slots: int
+    max_len: int
+
+    # -- admission -----------------------------------------------------
+    def fits(self, context_len: int, max_new: int = 0) -> bool: ...
+    def allocate(self, rid: int, context_len: int,
+                 reserve: int = 0) -> Optional[int]: ...
+
+    # -- decode bookkeeping -------------------------------------------
+    def append(self, slot: int) -> None: ...
+    def owner_of(self, slot: int) -> int: ...
+    def length_of(self, slot: int) -> int: ...
+    def set_length(self, slot: int, length: int) -> None: ...
+    def active_slots(self) -> list[int]: ...
+    def step_lengths(self) -> np.ndarray: ...
+
+    # -- release / eviction -------------------------------------------
+    def release(self, slot: int) -> None: ...
+    def release_all(self) -> list[int]: ...
+
+    # -- migration -----------------------------------------------------
+    def snapshot(self, rid: int) -> KVSnapshot: ...
+    def restore(self, snap: KVSnapshot) -> Optional[int]: ...
+    def discard(self, snap: KVSnapshot) -> None: ...
+    def take_moves(self) -> list[tuple[int, int]]: ...
+
+    # -- introspection -------------------------------------------------
+    def stats(self) -> dict: ...
+
+
+class SlotKVPool:
+    """Contiguous per-request slots (the pre-paging behavior): one slot is
+    one request's whole context window. Keeps the historical attribute
+    names (``free`` / ``lengths`` / ``owner``) for its own internals; the
+    scheduler and engine go through the ``KVPool`` protocol only."""
+
+    name = "slot"
+    supports_migration = False
+
     def __init__(self, num_slots: int, max_len: int):
         self.num_slots = num_slots
         self.max_len = max_len
@@ -45,8 +137,24 @@ class KVCacheManager:
         self.lengths[slot] = context_len
         return slot
 
+    def append(self, slot: int) -> None:
+        self.lengths[slot] += 1
+
+    def owner_of(self, slot: int) -> int:
+        return int(self.owner[slot])
+
+    def length_of(self, slot: int) -> int:
+        return int(self.lengths[slot])
+
+    def set_length(self, slot: int, length: int) -> None:
+        self.lengths[slot] = length
+
+    def step_lengths(self) -> np.ndarray:
+        """Per-slot context lengths as fed to the compiled step."""
+        return self.lengths.copy()
+
     def release(self, slot: int) -> None:
-        if self.owner[slot] >= 0:
+        if slot >= 0 and self.owner[slot] >= 0:
             self.owner[slot] = -1
             self.lengths[slot] = 0
             self.free.append(slot)
@@ -62,6 +170,320 @@ class KVCacheManager:
     def active_slots(self) -> list[int]:
         return [s for s in range(self.num_slots) if self.owner[s] >= 0]
 
+    # -- migration surface: the slot pool cannot move pages. snapshot()
+    # releases the slot (the cache rows will be reused by other work), so
+    # restore() reports the content lost and the caller replays. ----------
+    def snapshot(self, rid: int) -> KVSnapshot:
+        slot = next((s for s in range(self.num_slots)
+                     if int(self.owner[s]) == rid), -1)
+        length = int(self.lengths[slot]) if slot >= 0 else 0
+        if slot >= 0:
+            self.release(slot)
+        return KVSnapshot(rid=rid, slot=slot, length=length, blocks=())
+
+    def restore(self, snap: KVSnapshot) -> Optional[int]:
+        return None     # residency was lost at snapshot; replay instead
+
+    def discard(self, snap: KVSnapshot) -> None:
+        pass            # nothing pinned
+
+    def take_moves(self) -> list[tuple[int, int]]:
+        return []
+
+    def stats(self) -> dict:
+        used = [s for s in range(self.num_slots) if self.owner[s] >= 0]
+        cap = self.num_slots * self.max_len
+        resident = int(self.lengths.sum())
+        return {
+            "pool": self.name,
+            "block_size": self.max_len,
+            "blocks_total": self.num_slots,
+            "blocks_free": len(self.free),
+            "blocks_used": len(used),
+            "slots_total": self.num_slots,
+            "slots_free": len(self.free),
+            "pinned": 0,
+            "fragmentation": (0.0 if not used else
+                              1.0 - resident / (len(used) * self.max_len)),
+            "per_request_pages": {str(int(self.owner[s])): 1 for s in used},
+            "migrations": 0,
+            "pages_moved": 0,
+            "utilization": round(self.utilization, 4),
+        }
+
     @property
     def utilization(self) -> float:
         return 1.0 - len(self.free) / self.num_slots
+
+
+#: Back-compat alias: the pre-protocol class name.
+KVCacheManager = SlotKVPool
+
+
+class PagedKVPool:
+    """Paged KV manager: ``block_size``-token blocks, per-request block
+    tables, one global free-block pool, copy-on-extend bookkeeping.
+
+    The simulated cache arrays keep their (periods, slot, ...) layout, so a
+    *decoding* request in slot ``s`` always owns exactly the identity
+    blocks of ``s`` (its content physically lives in slot row ``s``). The
+    paging machinery earns its keep at suspension: ``snapshot()`` pins the
+    request's blocks AND its slot — neither returns to the free pools — so
+    the pages survive the drain window intact and ``restore()`` re-admits
+    with zero replay. An explicit ``migrate()`` relocates a pinned
+    request's pages into another free slot's identity blocks, queueing a
+    (src, dst) move the engine consumes as a jitted gather over the donated
+    cache buffers (``take_moves``) — the indirection-table discipline of
+    real paged-attention kernels, collapsed to slot granularity by the
+    sim's physical layout.
+    """
+
+    name = "paged"
+    supports_migration = True
+
+    def __init__(self, num_slots: int, max_len: int, block_size: int = 16):
+        assert block_size > 0
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        # ceil: the last block of a window may be partial
+        self.blocks_per_slot = -(-max_len // block_size)
+        self.num_blocks = num_slots * self.blocks_per_slot
+        self._free_slots = list(range(num_slots))
+        self._free_blocks = set(range(self.num_blocks))
+        self._owner = np.full((num_slots,), -1, np.int64)
+        self._lengths = np.zeros((num_slots,), np.int32)
+        self._tables: dict[int, list[int]] = {}     # slot -> block ids
+        self._pinned: dict[int, KVSnapshot] = {}    # rid  -> snapshot
+        self._pinned_slots: set[int] = set()
+        self._moves: list[tuple[int, int]] = []     # (src_slot, dst_slot)
+        self.migrations = 0         # snapshots restored/relocated intact
+        self.pages_moved = 0        # blocks shipped by those migrations
+        self.block_appends = 0      # copy-on-extend events
+
+    # -- identity-block helpers ---------------------------------------
+    def _identity_block(self, slot: int, i: int) -> int:
+        return slot * self.blocks_per_slot + i
+
+    def _blocks_for(self, length: int) -> int:
+        return max(1, -(-length // self.block_size))
+
+    def _claim_identity(self, slot: int, count: int) -> list[int]:
+        blocks = [self._identity_block(slot, i) for i in range(count)]
+        for b in blocks:
+            assert b in self._free_blocks, (
+                f"identity block {b} of slot {slot} is not free — "
+                f"block-pool invariant broken")
+            self._free_blocks.discard(b)
+        return blocks
+
+    # -- admission -----------------------------------------------------
+    def fits(self, context_len: int, max_new: int = 0) -> bool:
+        """Same contract as the slot pool: can the full sequence EVER be
+        resident. Paging does not change the per-request ceiling — one
+        request still caps at one slot's worth of blocks."""
+        return context_len + max_new <= self.max_len
+
+    def allocate(self, rid: int, context_len: int,
+                 reserve: int = 0) -> Optional[int]:
+        """Claim a slot and the blocks covering ``context_len`` resident
+        tokens (``reserve`` is a fit check only — blocks for tokens still
+        to be generated are claimed lazily by ``append``, copy-on-extend).
+        Returns ``None`` when no slot is free; raises on a sequence that
+        can never fit (reject at submit, never queue)."""
+        if not self.fits(context_len, max(reserve, 1)):
+            raise ValueError(
+                f"request {rid}: context {context_len} + reserve {reserve} "
+                f"can never fit max_len={self.max_len}; reject at submit")
+        if not self._free_slots:
+            return None
+        slot = self._free_slots.pop(0)
+        self._owner[slot] = rid
+        self._lengths[slot] = context_len
+        self._tables[slot] = self._claim_identity(
+            slot, self._blocks_for(context_len))
+        return slot
+
+    # -- decode bookkeeping -------------------------------------------
+    def append(self, slot: int) -> None:
+        """One more token's KV became resident. Crossing a block boundary
+        claims the next identity block (copy-on-extend)."""
+        self._lengths[slot] += 1
+        self._ensure_blocks(slot)
+
+    def _ensure_blocks(self, slot: int) -> None:
+        need = self._blocks_for(int(self._lengths[slot]))
+        table = self._tables[slot]
+        while len(table) < need:
+            b = self._identity_block(slot, len(table))
+            assert b in self._free_blocks, (
+                f"identity block {b} of slot {slot} is not free — "
+                f"block-pool invariant broken")
+            self._free_blocks.discard(b)
+            table.append(b)
+            self.block_appends += 1
+
+    def owner_of(self, slot: int) -> int:
+        return int(self._owner[slot])
+
+    def length_of(self, slot: int) -> int:
+        return int(self._lengths[slot])
+
+    def set_length(self, slot: int, length: int) -> None:
+        """Replay bookkeeping: the engine rewinds/advances the resident
+        length during chunk-1 prefill. Blocks grow to cover; they are not
+        shrunk (the content above ``length`` is garbage either way)."""
+        self._lengths[slot] = length
+        self._ensure_blocks(slot)
+
+    def step_lengths(self) -> np.ndarray:
+        """Per-slot context lengths as fed to the compiled step."""
+        return self._lengths.copy()
+
+    def active_slots(self) -> list[int]:
+        return [s for s in range(self.num_slots)
+                if self._owner[s] >= 0 and s not in self._pinned_slots]
+
+    # -- release / eviction -------------------------------------------
+    def release(self, slot: int) -> None:
+        if slot < 0 or self._owner[slot] < 0 or slot in self._pinned_slots:
+            return
+        self._free_blocks.update(self._tables.pop(slot, ()))
+        self._owner[slot] = -1
+        self._lengths[slot] = 0
+        self._free_slots.append(slot)
+
+    def release_all(self) -> list[int]:
+        """Evict every *decoding* sequence (rank-failure semantics).
+        Pinned snapshots are queued work, not in-flight — they stay."""
+        owners = [int(self._owner[s]) for s in self.active_slots()]
+        for s in self.active_slots():
+            self.release(s)
+        return owners
+
+    # -- migration -----------------------------------------------------
+    def snapshot(self, rid: int) -> KVSnapshot:
+        """Pin a decoding request's KV residency: the slot and its blocks
+        leave the active/free sets but keep their contents, so the pages
+        can be shipped during the drain window and decode continues from
+        the exact suspended position at ``restore``."""
+        slot = next((s for s in self.active_slots()
+                     if int(self._owner[s]) == rid), -1)
+        assert slot >= 0, f"request {rid} holds no active slot"
+        snap = KVSnapshot(rid=rid, slot=slot,
+                          length=int(self._lengths[slot]),
+                          blocks=tuple(self._tables[slot]))
+        self._pinned[rid] = snap
+        self._pinned_slots.add(slot)
+        return snap
+
+    def restore(self, snap: KVSnapshot) -> Optional[int]:
+        """Redeem a pinned snapshot: the request re-enters the decode batch
+        in the slot its pages live in, with its resident length intact —
+        zero tokens replay. Counts as a completed migration (the pages
+        moved off the departing rank's share during the drain window)."""
+        snap = self._pinned.pop(snap.rid, None)
+        if snap is None:
+            return None
+        self._pinned_slots.discard(snap.slot)
+        self._owner[snap.slot] = snap.rid
+        self._lengths[snap.slot] = snap.length
+        self._tables[snap.slot] = list(snap.blocks)
+        self.migrations += 1
+        self.pages_moved += snap.pages
+        return snap.slot
+
+    def discard(self, snap: KVSnapshot) -> None:
+        """Drop a pinned snapshot without restoring (client cancelled a
+        stalled request): slot and blocks return to the free pools."""
+        snap = self._pinned.pop(snap.rid, None)
+        if snap is None:
+            return
+        self._pinned_slots.discard(snap.slot)
+        self._free_blocks.update(snap.blocks)
+        self._owner[snap.slot] = -1
+        self._lengths[snap.slot] = 0
+        self._free_slots.append(snap.slot)
+        self._tables.pop(snap.slot, None)
+
+    def migrate(self, rid: int, dst_slot: int) -> KVSnapshot:
+        """Relocate a *pinned* request's pages into another free slot's
+        identity blocks (defragmentation / cross-replica placement). Queues
+        the physical (src, dst) move for the engine's jitted cache gather;
+        the updated snapshot restores into ``dst_slot``."""
+        snap = self._pinned.get(rid)
+        assert snap is not None, f"request {rid} is not pinned"
+        assert dst_slot in self._free_slots, f"slot {dst_slot} is not free"
+        src_slot = snap.slot
+        new_blocks = tuple(self._claim_identity(
+            dst_slot, self._blocks_for(snap.length)))
+        self._free_slots.remove(dst_slot)
+        # old residency returns to the pools
+        self._free_blocks.update(snap.blocks)
+        self._free_slots.append(src_slot)
+        self._owner[src_slot] = -1
+        self._lengths[src_slot] = 0
+        self._tables.pop(src_slot, None)
+        self._pinned_slots.discard(src_slot)
+        self._owner[dst_slot] = rid
+        self._lengths[dst_slot] = snap.length
+        self._tables[dst_slot] = list(new_blocks)
+        moved = KVSnapshot(rid=rid, slot=dst_slot, length=snap.length,
+                           blocks=new_blocks)
+        self._pinned[rid] = moved
+        self._pinned_slots.add(dst_slot)
+        self._moves.append((src_slot, dst_slot))
+        self.migrations += 1
+        self.pages_moved += len(new_blocks)
+        return moved
+
+    def take_moves(self) -> list[tuple[int, int]]:
+        """Drain pending physical page relocations as (src_slot, dst_slot)
+        pairs. The engine folds them into one permutation and applies a
+        single jitted gather over the donated cache buffers."""
+        moves, self._moves = self._moves, []
+        return moves
+
+    # -- introspection -------------------------------------------------
+    def inflight_pages(self) -> int:
+        """Blocks held by live work (decoding + pinned) — the population a
+        drain's KV-page manifest is computed over."""
+        return (sum(len(self._tables[s]) for s in self.active_slots())
+                + sum(s.pages for s in self._pinned.values()))
+
+    def stats(self) -> dict:
+        held = {s: self._tables[s] for s in self._tables}
+        resident = int(sum(self._lengths[s] for s in held))
+        capacity = sum(len(t) for t in held.values()) * self.block_size
+        per_request = {str(int(self._owner[s])): len(t)
+                       for s, t in held.items()}
+        return {
+            "pool": self.name,
+            "block_size": self.block_size,
+            "blocks_total": self.num_blocks,
+            "blocks_free": len(self._free_blocks),
+            "blocks_used": self.num_blocks - len(self._free_blocks),
+            "slots_total": self.num_slots,
+            "slots_free": len(self._free_slots),
+            "pinned": len(self._pinned),
+            "fragmentation": (0.0 if capacity == 0 else
+                              1.0 - resident / capacity),
+            "per_request_pages": per_request,
+            "migrations": self.migrations,
+            "pages_moved": self.pages_moved,
+            "utilization": round(self.utilization, 4),
+        }
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self._free_slots) / self.num_slots
+
+
+def make_pool(kind: str, num_slots: int, max_len: int, *,
+              block_size: int = 16) -> "SlotKVPool | PagedKVPool":
+    """Pool factory keyed by ``ArchConfig.kv_pool`` ("slot" | "paged")."""
+    if kind == "paged":
+        return PagedKVPool(num_slots, max_len, block_size=block_size)
+    if kind == "slot":
+        return SlotKVPool(num_slots, max_len)
+    raise ValueError(f"unknown kv pool kind {kind!r}")

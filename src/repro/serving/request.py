@@ -39,6 +39,14 @@ class Request:
     # resumes: len(prompt) for a fresh admit, len(prompt) + len(generated)
     # for a continuation resume. Set by Scheduler.admit.
     replay_len: int = 0
+    # KV residency handle (kv_cache.KVSnapshot) taken when this request was
+    # suspended/preempted over a pool that pins pages. Redeemed (or found
+    # void — slot pool) at re-admission; epoch validation still gates.
+    kv_snapshot: Optional[object] = None
+    # set for exactly one engine step after a restore(): the slot's KV is
+    # intact, so the engine must neither reset the slot nor replay — it
+    # resumes feeding from the restored resident length.
+    kv_intact: bool = False
 
     @property
     def context_len(self) -> int:

@@ -19,7 +19,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Optional
 
-from repro.serving.kv_cache import KVCacheManager
+from repro.serving.kv_cache import KVPool
 from repro.serving.request import Request, RequestState
 
 
@@ -32,15 +32,17 @@ class SchedulerStats:
     dropped: int = 0           # exceeded max_retries under repeated failures
     preempted: int = 0         # gracefully requeued by a planned drain/scale
     suspended: int = 0         # continuation: fault absorbed with progress kept
-    resumed: int = 0           # continuation snapshots re-admitted
+    resumed: int = 0           # continuation snapshots re-admitted (replay)
+    migrated: int = 0          # KV moved intact: re-admitted with ZERO replay
     cancelled: int = 0         # client cancel() / missed deadline
     rejected: int = 0          # refused at submit (overflow / admission)
     tokens_out: int = 0
     tokens_recomputed: int = 0  # generated tokens replayed on resume
+    tokens_migrated: int = 0    # resident KV tokens moved intact (no replay)
 
 
 class Scheduler:
-    def __init__(self, kv: KVCacheManager, retry_failed: bool = True,
+    def __init__(self, kv: KVPool, retry_failed: bool = True,
                  max_retries: Optional[int] = None,
                  sink: Optional[Callable] = None):
         self.kv = kv
@@ -51,7 +53,7 @@ class Scheduler:
         self.max_retries = max_retries
         # event sink: sink(kind, req, **detail) with kind in {"token",
         # "finished", "failed", "suspended", "preempted", "resumed",
-        # "cancelled", "rejected"} — set by the serving frontend
+        # "migrated", "cancelled", "rejected"} — set by the serving frontend
         self.sink = sink
 
     def _emit(self, kind: str, req: Request, **detail) -> None:
@@ -80,23 +82,43 @@ class Scheduler:
         validated against the current membership epoch (a resume must never
         observe an older membership than the one it was suspended under)
         and its full prompt + generated prefix is scheduled for chunk-1
-        prefill replay."""
+        prefill replay. A request whose KV residency was *pinned* at
+        preemption (``kv_snapshot``, migration-capable pool) instead
+        redeems the snapshot: it re-enters the decode batch with its pages
+        intact, replays NOTHING, and the client sees MIGRATED rather than
+        a RESUMED-with-recompute — the same epoch gate applies."""
         admitted = []
         while self.queue:
             req = self.queue[0]
-            reserve = req.max_new_tokens - len(req.generated)
-            slot = self.kv.allocate(req.rid, req.context_len, reserve=reserve)
-            if slot is None:
-                break
+            snap = req.kv_snapshot
+            slot = self.kv.restore(snap) if snap is not None else None
+            migrated_in = slot is not None
+            if not migrated_in:
+                # no (redeemable) residency: fall back to allocate + replay
+                req.kv_snapshot = None
+                reserve = req.max_new_tokens - len(req.generated)
+                slot = self.kv.allocate(req.rid, req.context_len,
+                                        reserve=reserve)
+                if slot is None:
+                    break
             self.queue.popleft()
             req.slot = slot
             req.replay_len = req.context_len
-            if req.snapshot_epoch >= 0:
-                if 0 <= epoch < req.snapshot_epoch:
-                    raise RuntimeError(
-                        f"request {req.rid}: continuation snapshot from "
-                        f"epoch {req.snapshot_epoch} resumed at older "
-                        f"membership epoch {epoch}")
+            if req.snapshot_epoch >= 0 and 0 <= epoch < req.snapshot_epoch:
+                raise RuntimeError(
+                    f"request {req.rid}: continuation snapshot from "
+                    f"epoch {req.snapshot_epoch} resumed at older "
+                    f"membership epoch {epoch}")
+            if migrated_in:
+                req.kv_snapshot = None
+                req.kv_intact = True
+                self.stats.migrated += 1
+                self.stats.tokens_migrated += snap.length
+                self._emit("migrated", req, t=now, epoch=epoch,
+                           snapshot_epoch=req.snapshot_epoch,
+                           pages=snap.pages, tokens=snap.length)
+                req.snapshot_epoch = -1
+            elif req.snapshot_epoch >= 0:
                 recomputed = len(req.generated)
                 self.stats.resumed += 1
                 self.stats.tokens_recomputed += recomputed
@@ -115,14 +137,14 @@ class Scheduler:
         """Record one decode step's outputs {slot: token}. Returns finished."""
         finished = []
         for slot, tok in new_tokens.items():
-            rid = int(self.kv.owner[slot])
+            rid = self.kv.owner_of(slot)
             if rid < 0:
                 continue
             req = self.running[rid]
             if req.t_first_token < 0:
                 req.t_first_token = now
             req.generated.append(int(tok))
-            self.kv.lengths[slot] += 1
+            self.kv.append(slot)
             self.stats.tokens_out += 1
             self._emit("token", req, t=now, index=len(req.generated) - 1,
                        token=int(tok))
@@ -222,6 +244,32 @@ class Scheduler:
         self._requeue_front(self.queue, preempted, RequestState.STALLED)
         return preempted
 
+    def migrate_inflight(self, *, now: float = 0.0, cause: str = "drain",
+                         epoch: int = -1) -> list[Request]:
+        """Planned drain/scale-down over a pool that pins pages
+        (``supports_migration``): in-flight work is preempted exactly like
+        ``preempt_inflight`` — same PREEMPTED client event, same front
+        requeue, no retry budget consumed — but instead of releasing the
+        KV it takes a pinned ``KVSnapshot``. The pages ship to survivors
+        inside the drain window (the runtime's ``kv-migrate`` phase) and
+        re-admission redeems the snapshot with ZERO replay: ``admit``
+        emits MIGRATED instead of RESUMED and neither
+        ``tokens_recomputed`` nor redecode capacity is spent."""
+        migrated = []
+        for rid in sorted(self.running):
+            req = self.running[rid]
+            req.kv_snapshot = self.kv.snapshot(rid)
+            req.snapshot_epoch = epoch
+            req.slot = -1
+            self.stats.preempted += 1
+            self._emit("preempted", req, t=now, cause=cause, epoch=epoch,
+                       progress=len(req.generated))
+            migrated.append(req)
+        for req in migrated:
+            del self.running[req.rid]
+        self._requeue_front(self.queue, migrated, RequestState.STALLED)
+        return migrated
+
     def cancel(self, rid: int, *, now: float = 0.0,
                cause: str = "client") -> bool:
         """Client-side cancellation: releases the KV slot and emits a
@@ -240,6 +288,10 @@ class Scheduler:
                     break
         if req is None:
             return False
+        if req.kv_snapshot is not None:
+            # stalled with pinned pages: return them to the free pools
+            self.kv.discard(req.kv_snapshot)
+            req.kv_snapshot = None
         req.state = RequestState.CANCELLED
         req.snapshot_epoch = -1
         self.stats.cancelled += 1

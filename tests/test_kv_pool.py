@@ -1,0 +1,446 @@
+"""Paged KV cache + live migration (repro.serving.kv_cache):
+
+  * the ``KVPool`` protocol is the ONLY pool surface the scheduler /
+    engine / frontend / scenario runner touch (source-guard test, same
+    discipline as the no-direct-membership-mutation check);
+  * paged-pool mechanics — copy-on-extend block claiming, free-pool
+    accounting, snapshot/restore pinning, ``migrate()`` relocation and
+    the engine's one-gather application of the queued moves;
+  * a property test over random allocate/append/release/snapshot/
+    restore/migrate/discard sequences: no block is ever aliased by two
+    requests, free+used always partitions the pool, and a redeemed
+    snapshot restores slot/length/blocks identically (runs under
+    hypothesis when installed, a seeded random walk otherwise);
+  * migrate-vs-replay equivalence under BOTH dispatch modes: the paged
+    pool's drain path delivers the exact token stream the slot pool's
+    replay path does, with ``tokens_recomputed == 0`` and MIGRATED
+    (never RESUMED) client events;
+  * the AdminGateway ``kv`` status section and the registry-level
+    ``rolling_maintenance_drain`` acceptance: zero recompute, pages
+    moved, a nonzero ``kv-migrate`` phase, invariants green.
+"""
+import inspect
+import json
+import random
+import re
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.reintegration import WarmupCostModel
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.runtime.scenario_runner import run_scenario
+from repro.serving.api import ServingFrontend
+from repro.serving.engine import ServingEngine
+from repro.serving.events import StreamEvent, validate_stream
+from repro.serving.kv_cache import (
+    KVPool,
+    PagedKVPool,
+    SlotKVPool,
+    make_pool,
+)
+
+
+def _frontend(kv_pool=None, dispatch=None, world=8, seed=0, max_batch=4,
+              max_len=64, fixed_membership=False):
+    cfg = get_config("mixtral-8x22b").reduced()
+    table = make_initial_membership(world, cfg.moe.num_experts, 1)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    rt = ElasticEPRuntime(cfg, params, table, dispatch=dispatch,
+                          warmup_model=WarmupCostModel(1, 1, 2, 1))
+    eng = ServingEngine(rt, max_batch=max_batch, max_len=max_len,
+                        fixed_membership=fixed_membership, kv_pool=kv_pool)
+    return rt, eng, ServingFrontend(eng)
+
+
+# ---------------------------------------------------------------------------
+# The protocol boundary
+# ---------------------------------------------------------------------------
+
+def test_both_pools_satisfy_the_protocol_and_factory_selects():
+    slot = make_pool("slot", 4, 32)
+    paged = make_pool("paged", 4, 32, block_size=8)
+    assert isinstance(slot, SlotKVPool) and isinstance(slot, KVPool)
+    assert isinstance(paged, PagedKVPool) and isinstance(paged, KVPool)
+    assert not slot.supports_migration and paged.supports_migration
+    with pytest.raises(ValueError):
+        make_pool("mmap", 4, 32)
+    # the ArchConfig switch is validated at construction
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.kv_pool in ("slot", "paged") and cfg.kv_block_size > 0
+
+
+def test_source_guard_pool_internals_stay_private():
+    """The scheduler, engine, frontend and scenario runner speak KVPool
+    only — no reaching into ``lengths``/``owner``/``free`` arrays or any
+    underscore-private pool state. This is what makes the slot/paged
+    switch an ArchConfig flag instead of a fork."""
+    from repro.runtime import scenario_runner
+    from repro.serving import api, engine, scheduler
+    for mod in (scheduler, engine, api, scenario_runner):
+        src = inspect.getsource(mod)
+        assert not re.search(r"\bkv\.(lengths|owner|free)\b", src), \
+            f"{mod.__name__} touches pool-internal arrays"
+        assert not re.search(r"\bkv\._", src), \
+            f"{mod.__name__} touches private pool state"
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool mechanics
+# ---------------------------------------------------------------------------
+
+def test_copy_on_extend_claims_blocks_at_boundaries():
+    pool = PagedKVPool(num_slots=2, max_len=32, block_size=4)
+    slot = pool.allocate(7, context_len=6)          # ceil(6/4) = 2 blocks
+    assert slot is not None
+    st = pool.stats()
+    assert st["per_request_pages"] == {"7": 2}
+    assert st["blocks_used"] == 2
+    pool.append(slot)                               # 7 resident: still 2
+    pool.append(slot)                               # 8 resident: still 2
+    assert pool.stats()["per_request_pages"]["7"] == 2
+    assert pool.block_appends == 0
+    pool.append(slot)                               # 9 resident: 3rd block
+    assert pool.stats()["per_request_pages"]["7"] == 3
+    assert pool.block_appends == 1
+    # set_length grows coverage too (replay bookkeeping), never shrinks
+    pool.set_length(slot, 13)
+    assert pool.stats()["per_request_pages"]["7"] == 4
+    pool.set_length(slot, 2)
+    assert pool.stats()["per_request_pages"]["7"] == 4
+
+
+def test_allocate_exhaustion_and_never_fit():
+    pool = PagedKVPool(num_slots=2, max_len=16, block_size=4)
+    assert pool.allocate(0, 4) is not None
+    assert pool.allocate(1, 4) is not None
+    assert pool.allocate(2, 4) is None              # full: queue, don't raise
+    with pytest.raises(ValueError):
+        pool.allocate(3, context_len=8, reserve=100)   # can NEVER fit
+    assert not pool.fits(8, 100) and pool.fits(8, 8)
+
+
+def test_release_returns_blocks_and_fragmentation_accounting():
+    pool = PagedKVPool(num_slots=4, max_len=16, block_size=4)
+    a = pool.allocate(0, 5)                         # 2 blocks, 5 resident
+    b = pool.allocate(1, 4)                         # 1 block, 4 resident
+    st = pool.stats()
+    assert st["blocks_free"] + st["blocks_used"] == st["blocks_total"]
+    assert st["blocks_used"] == 3
+    # fragmentation = 1 - resident/capacity = 1 - 9/12
+    assert abs(st["fragmentation"] - (1 - 9 / 12)) < 1e-9
+    pool.release(a)
+    st = pool.stats()
+    assert st["blocks_used"] == 1 and st["slots_free"] == 3
+    assert pool.owner_of(a) == -1 and pool.owner_of(b) == 1
+    assert pool.active_slots() == [b]
+
+
+def test_snapshot_pins_restore_redeems_discard_frees():
+    pool = PagedKVPool(num_slots=2, max_len=16, block_size=4)
+    slot = pool.allocate(5, 6)
+    snap = pool.snapshot(5)
+    assert snap.rid == 5 and snap.slot == slot
+    assert snap.length == 6 and snap.pages == 2
+    # pinned: out of the active set, immune to release/release_all
+    assert pool.active_slots() == []
+    pool.release(slot)
+    assert pool.release_all() == []
+    assert pool.stats()["pinned"] == 1
+    assert pool.stats()["blocks_used"] == 2         # pages survive intact
+    restored = pool.restore(snap)
+    assert restored == slot
+    assert pool.owner_of(slot) == 5 and pool.length_of(slot) == 6
+    assert pool.stats()["pinned"] == 0
+    assert pool.migrations == 1 and pool.pages_moved == 2
+    # a second redeem of the same snapshot reports residency gone
+    assert pool.restore(snap) is None
+    # discard path: pinned state returns to the free pools
+    pool2 = PagedKVPool(num_slots=2, max_len=16, block_size=4)
+    s2 = pool2.allocate(9, 8)
+    snap2 = pool2.snapshot(9)
+    pool2.discard(snap2)
+    assert pool2.stats()["blocks_used"] == 0
+    assert pool2.stats()["slots_free"] == 2
+    assert s2 in [pool2.allocate(10, 4), pool2.allocate(11, 4)]
+
+
+def test_migrate_relocates_pinned_pages_and_queues_one_move():
+    pool = PagedKVPool(num_slots=4, max_len=16, block_size=4)
+    src = pool.allocate(3, 7)                       # 2 blocks in slot src
+    pool.snapshot(3)
+    dst = next(s for s in range(4) if s != src and pool.owner_of(s) < 0)
+    moved = pool.migrate(3, dst)
+    assert moved.slot == dst and moved.length == 7 and moved.pages == 2
+    # dst identity blocks, src residency freed
+    assert moved.blocks == tuple(dst * pool.blocks_per_slot + i
+                                 for i in range(2))
+    assert pool.take_moves() == [(src, dst)]
+    assert pool.take_moves() == []                  # drained
+    restored = pool.restore(moved)
+    assert restored == dst
+    assert pool.owner_of(dst) == 3 and pool.length_of(dst) == 7
+    assert pool.owner_of(src) == -1
+    st = pool.stats()
+    assert st["blocks_free"] + st["blocks_used"] == st["blocks_total"]
+
+
+def test_slot_pool_snapshot_loses_residency():
+    """The slot pool keeps the legacy semantics: snapshot releases the
+    slot (cache rows get reused), restore reports the content gone and
+    the caller replays through chunk-1 prefill."""
+    pool = SlotKVPool(num_slots=2, max_len=16)
+    slot = pool.allocate(4, 6)
+    snap = pool.snapshot(4)
+    assert snap.length == 6 and snap.pages == 0
+    assert pool.restore(snap) is None
+    assert slot in pool.free                        # released at snapshot
+    assert pool.take_moves() == []
+    assert pool.stats()["pool"] == "slot"
+
+
+# ---------------------------------------------------------------------------
+# Property: random op sequences never alias a block, never leak one
+# ---------------------------------------------------------------------------
+
+def _check_invariants(pool):
+    seen = []
+    for s, table in pool._tables.items():
+        seen.extend(table)
+        rid = pool.owner_of(s)
+        assert rid >= 0, f"slot {s} holds a table but no owner"
+        assert len(table) >= max(1, -(-pool.length_of(s) // pool.block_size))
+    assert len(seen) == len(set(seen)), "a block is aliased by two tables"
+    assert sorted(seen + list(pool._free_blocks)) == \
+        list(range(pool.num_blocks)), "block leak: free+held != pool"
+    st = pool.stats()
+    assert st["blocks_free"] + st["blocks_used"] == st["blocks_total"]
+    for rid, snap in pool._pinned.items():
+        assert tuple(pool._tables[snap.slot]) == snap.blocks
+
+
+def _random_walk(seed: int, steps: int = 120) -> None:
+    rng = random.Random(seed)
+    pool = PagedKVPool(num_slots=4, max_len=24, block_size=4)
+    next_rid = 0
+    active: dict[int, int] = {}                    # rid -> slot
+    pinned: dict[int, object] = {}                 # rid -> snapshot
+    for _ in range(steps):
+        ops = ["allocate"]
+        if active:
+            ops += ["append", "release", "snapshot"]
+        if pinned:
+            ops += ["restore", "discard"]
+            if pool._free_slots:
+                ops.append("migrate")
+        op = rng.choice(ops)
+        if op == "allocate":
+            slot = pool.allocate(next_rid, rng.randint(1, 12))
+            if slot is not None:
+                active[next_rid] = slot
+                next_rid += 1
+        elif op == "append":
+            rid = rng.choice(sorted(active))
+            if pool.length_of(active[rid]) < pool.max_len:
+                pool.append(active[rid])
+        elif op == "release":
+            rid = rng.choice(sorted(active))
+            pool.release(active.pop(rid))
+        elif op == "snapshot":
+            rid = rng.choice(sorted(active))
+            active.pop(rid)
+            pinned[rid] = pool.snapshot(rid)
+        elif op == "migrate":
+            rid = rng.choice(sorted(pinned))
+            dst = rng.choice(pool._free_slots)
+            pinned[rid] = pool.migrate(rid, dst)
+        elif op == "restore":
+            rid = rng.choice(sorted(pinned))
+            snap = pinned.pop(rid)
+            slot = pool.restore(snap)
+            # byte-identity contract: same slot, same resident length,
+            # same physical blocks as the snapshot named
+            assert slot == snap.slot
+            assert pool.length_of(slot) == snap.length
+            assert tuple(pool._tables[slot]) == snap.blocks
+            assert pool.owner_of(slot) == rid
+            active[rid] = slot
+        elif op == "discard":
+            rid = rng.choice(sorted(pinned))
+            pool.discard(pinned.pop(rid))
+        moves = pool.take_moves()
+        assert len(moves) == len(set(moves))
+        _check_invariants(pool)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_paged_pool_random_sequences_property(seed):
+        _random_walk(seed)
+except ImportError:                                 # seeded fallback
+    def test_paged_pool_random_sequences_property():
+        for seed in range(40):
+            _random_walk(seed)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: the gather, the MIGRATED stream, the equivalence
+# ---------------------------------------------------------------------------
+
+def test_engine_applies_migrate_moves_as_one_gather_tokens_identical():
+    """Relocating a pinned request's pages into another slot (the queued
+    (src, dst) move applied as one jitted gather over the donated cache
+    buffers) continues decode with byte-identical KV: the token stream
+    equals an uninterrupted run's, with zero recompute."""
+    ref_rt, ref_eng, ref_fe = _frontend(kv_pool="paged")
+    ref = ref_fe.submit([3, 1, 4], max_new=24)
+    ref_fe.run(max_steps=500)
+    assert ref.outcome == "FINISHED" and len(ref.tokens) == 24
+
+    rt, eng, fe = _frontend(kv_pool="paged")
+    h = fe.submit([3, 1, 4], max_new=24)
+    for _ in range(10):
+        fe.step()
+    pre = list(h.tokens)
+    assert len(pre) > 2
+    eng.sched.migrate_inflight(now=rt.clock.now(), epoch=rt.epoch)
+    src = next(s for s in range(eng.kv.num_slots) if s in eng.kv._pinned_slots)
+    dst = next(s for s in range(eng.kv.num_slots) if s in eng.kv._free_slots)
+    eng.kv.migrate(0, dst)
+    fe.run(max_steps=500)
+    assert h.outcome == "FINISHED"
+    assert h.tokens == ref.tokens
+    assert h.tokens[:len(pre)] == pre
+    st = eng.sched.stats
+    assert st.tokens_recomputed == 0 and st.migrated == 1
+    assert st.tokens_migrated > 0
+    assert eng.kv.owner_of(src) in (-1, 0) and eng.compile_count() == 1
+    kinds = [e.kind for e in h.events]
+    assert "MIGRATED" in kinds and "RESUMED" not in kinds
+    assert not validate_stream(h.events)
+
+
+@pytest.mark.parametrize("dispatch", ["dense", "ragged"])
+def test_drain_migrate_vs_replay_equivalence(dispatch):
+    """The api_redesign acceptance: under both dispatch modes, a planned
+    drain over the paged pool MIGRATES in-flight KV (zero recompute,
+    MIGRATED events) and over the slot pool REPLAYS it (recompute > 0,
+    RESUMED events) — and both deliver the identical token streams."""
+    streams = {}
+    for pool in ("paged", "slot"):
+        rt, eng, fe = _frontend(kv_pool=pool, dispatch=dispatch)
+        handles = [fe.submit([1] * 6, max_new=24) for _ in range(4)]
+        for _ in range(8):
+            fe.step()
+        assert eng.sched.inflight > 0
+        fe.admin.execute({"cmd": "drain", "ranks": [2]})
+        fe.run(until=rt.clock.now() + 120.0, max_steps=20_000)
+        st = eng.sched.stats
+        assert st.finished == 4 and st.failed == 0
+        assert st.preempted == 4
+        assert fe.metrics()["error_events"] == 0
+        assert not fe.stream_violations()
+        assert eng.compile_count() == 1
+        streams[pool] = [list(h.tokens) for h in handles]
+        kinds = [e.kind for h in handles for e in h.events]
+        if pool == "paged":
+            assert st.tokens_recomputed == 0 and st.migrated == 4
+            assert st.tokens_migrated > 0
+            assert "MIGRATED" in kinds and "RESUMED" not in kinds
+            assert fe.metrics()["tokens_migrated"] == st.tokens_migrated
+            # every stream brackets the drain as PREEMPTED -> MIGRATED ->
+            # STALL_END, with detail carrying the page manifest view
+            for h in handles:
+                ks = [e.kind for e in h.events]
+                mi = ks.index("MIGRATED")
+                assert ks[mi - 1] == "PREEMPTED" and ks[mi + 1] == "STALL_END"
+                ev = h.events[mi]
+                assert ev.detail["pages"] > 0 and ev.detail["tokens"] > 0
+                assert ev.detail["epoch"] >= ev.detail["snapshot_epoch"] >= 0
+        else:
+            assert st.tokens_recomputed > 0 and st.migrated == 0
+            assert "RESUMED" in kinds and "MIGRATED" not in kinds
+    assert streams["paged"] == streams["slot"]      # migrate == replay
+
+
+def test_admin_status_kv_section_round_trips():
+    rt, eng, fe = _frontend(kv_pool="paged")
+    handles = [fe.submit([1] * 6, max_new=30) for _ in range(3)]
+    for _ in range(6):
+        fe.step()
+    raw = fe.admin.execute_json('{"cmd": "status"}')
+    kv = json.loads(raw)["result"]["kv"]
+    assert kv["pool"] == "paged" and kv["block_size"] > 0
+    assert kv["blocks_free"] + kv["blocks_used"] == kv["blocks_total"]
+    assert kv["slots_total"] == 4 and kv["pinned"] == 0
+    assert len(kv["per_request_pages"]) == 3
+    assert all(p >= 1 for p in kv["per_request_pages"].values())
+    assert 0.0 <= kv["fragmentation"] <= 1.0
+    assert kv["migrations"] == 0 and kv["pages_moved"] == 0
+    fe.admin.execute({"cmd": "drain", "ranks": [2]})
+    fe.run(until=rt.clock.now() + 120.0, max_steps=20_000)
+    kv = fe.admin.execute({"cmd": "status"})["result"]["kv"]
+    assert kv["migrations"] == 3 and kv["pages_moved"] > 0
+    assert all(h.outcome == "FINISHED" for h in handles)
+
+
+def test_validate_stream_migrated_rules():
+    def ev(kind, t, seq, index=-1, **detail):
+        return StreamEvent(kind=kind, t=t, seq=seq, index=index,
+                           detail=detail)
+    ok = [ev("PREEMPTED", 0.1, 0, cause="drain"),
+          ev("MIGRATED", 0.2, 1, epoch=2, pages=2),
+          ev("STALL_END", 0.3, 2), ev("TOKEN", 0.3, 3, 0),
+          ev("FINISHED", 0.4, 4)]
+    assert validate_stream(ok) == []
+    # MIGRATED only lives inside an open stall window
+    assert validate_stream([ev("MIGRATED", 0.1, 0)])
+    assert validate_stream([ev("TOKEN", 0.1, 0, 0), ev("MIGRATED", 0.2, 1)])
+    # migrate and replay are mutually exclusive within one window
+    assert validate_stream([ev("PREEMPTED", 0.1, 0),
+                            ev("MIGRATED", 0.2, 1),
+                            ev("RESUMED", 0.3, 2)])
+    assert validate_stream([ev("STALL_BEGIN", 0.1, 0, cause="fault"),
+                            ev("RESUMED", 0.2, 1),
+                            ev("MIGRATED", 0.3, 2)])
+    # ...but separate windows may use different flavors
+    two = [ev("PREEMPTED", 0.1, 0), ev("MIGRATED", 0.2, 1),
+           ev("STALL_END", 0.3, 2), ev("TOKEN", 0.3, 3, 0),
+           ev("STALL_BEGIN", 0.4, 4, cause="fault"),
+           ev("RESUMED", 0.5, 5), ev("STALL_END", 0.6, 6),
+           ev("TOKEN", 0.6, 7, 1), ev("FINISHED", 0.7, 8)]
+    assert validate_stream(two) == []
+
+
+def test_rolling_maintenance_drain_migrates_registry_level():
+    """The ISSUE acceptance on the registry: the pure planned-drain
+    scenario recomputes NOTHING — its KV pages moved to the survivors
+    inside the drain windows (nonzero kv-migrate phase, pages in the
+    drain record) — with every invariant green."""
+    res = run_scenario("rolling_maintenance_drain")
+    assert res.invariants_ok and not res.stream_violations
+    assert res.client["tokens_recomputed"] == 0
+    assert res.client["tokens_migrated"] > 0
+    assert res.client["migrations"] > 0
+    assert res.requests_migrated > 0
+    assert res.kv_pages_moved > 0
+    assert res.kv_migrate_s > 0
+    summary = res.summary()
+    assert summary["compile_count"] == 1
+    assert summary["kv_pages_moved"] == res.kv_pages_moved
+    assert summary["tokens_migrated"] == res.client["tokens_migrated"]
+    drains = [e for e in res.timeline if e["kind"] == "drain"]
+    assert drains and any(e["detail"].get("kv_pages_moved", 0) > 0
+                          for e in drains)
+    assert any(sp["phase"] == "kv-migrate" for sp in res.spans)
+    json.dumps(summary)                             # BENCH row serializable

@@ -260,9 +260,9 @@ def test_cancel_from_queued_decoding_and_stalled_states():
     # (1) cancel from QUEUED
     assert handles[2].cancel()
     # (2) cancel from DECODING: slot must be released
-    free_before = len(eng.kv.free)
+    free_before = eng.kv.stats()["slots_free"]
     assert handles[0].cancel()
-    assert len(eng.kv.free) == free_before + 1
+    assert eng.kv.stats()["slots_free"] == free_before + 1
     # (3) cancel from STALLED: suspend rid 1 via a fault, then cancel
     # before it resumes
     rt.detector.mark_unreachable(3)
