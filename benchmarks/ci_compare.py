@@ -88,6 +88,15 @@ def _scenario_metrics(doc: dict) -> dict[str, Metric]:
         # survivors, so any replayed token is a hard failure, not a trend.
         # Scenarios with unplanned faults keep the trajectory direction
         # (non-increasing within tolerance).
+        # fence gate (fault-domain era): a scenario whose only "failures"
+        # are wrong detections or partitions of healthy ranks (fences
+        # recorded, coverage never lost) must show ZERO client-visible
+        # error events — the fence's whole point is that a mistake costs
+        # a bounded stall, never an error. Hard-zero, not a trend.
+        if (row.get("fences") and not row.get("fixed_membership", False)
+                and not row.get("coverage_loss_expected", False)):
+            out[f"{key}/client/error_events"] = (
+                float(client.get("error_events", 0)), "zero")
         recomputed = client.get("tokens_recomputed")
         if recomputed is not None and not row.get("fixed_membership", False):
             pure_planned = ((row.get("drains", 0)

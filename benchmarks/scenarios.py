@@ -33,11 +33,18 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-# the smoke set covers one concurrent-fault, one cascade, one join-storm and
-# one planned-maintenance scenario, so the PR trajectory job tracks drain
-# pauses next to recovery pauses (docs/recovery-lifecycle.md)
+# the smoke set covers one concurrent-fault, one cascade, one join-storm,
+# one planned-maintenance and one false-suspicion scenario, so the PR
+# trajectory job tracks drain pauses, recovery pauses AND the cost of a
+# wrong detection next to each other (docs/recovery-lifecycle.md)
 SMOKE_SET = ["concurrent_multi_failure", "cascade_mid_recovery",
-             "rejoin_storm", "rolling_maintenance_drain"]
+             "rejoin_storm", "rolling_maintenance_drain",
+             "false_suspicion_fence"]
+
+#: hard bound on the summed pause of a whole-host correlated failure:
+#: losing a full fault domain must still recover in one bounded shrink
+#: (detect + drain + coordinate + transfer), nowhere near a restart
+HOST_FAILURE_DOWNTIME_BOUND_S = 10.0
 
 
 def main(argv=None) -> int:
@@ -126,6 +133,11 @@ def main(argv=None) -> int:
                   f"_recomputed={c.get('tokens_recomputed', 0)}"
                   f"_migrated={c.get('tokens_migrated', 0)}"
                   f"_errors={c.get('error_events', 0)}")
+            if res.fences or res.partitions or res.heals:
+                print(f"scenario/{name}[{mode}]/robustness,0,"
+                      f"fences={res.fences}_partitions={res.partitions}"
+                      f"_heals={res.heals}_errors="
+                      f"{c.get('error_events', 0)}")
             if res.kv_pages_moved:
                 print(f"scenario/{name}[{mode}]/kv,0,"
                       f"pages_moved={res.kv_pages_moved}"
@@ -144,6 +156,20 @@ def main(argv=None) -> int:
            or r["coverage_loss"] != r["coverage_loss_expected"]
            or r.get("stream_violations", 0)]
     bad += span_bad
+    # robustness gates (hard, not trajectory): a correlated host failure
+    # recovers inside a bounded pause, and a wrong detection (fence +
+    # rejoin of a healthy rank) never surfaces a client-visible error
+    for r in rows:
+        key = f"{r['name']}[{r['dispatch']}]"
+        if r["name"] == "host_failure" \
+                and r["downtime_s"] > HOST_FAILURE_DOWNTIME_BOUND_S:
+            bad.append(f"{key}: host-failure downtime {r['downtime_s']:.1f}s"
+                       f" > {HOST_FAILURE_DOWNTIME_BOUND_S}s")
+        if (r.get("fences") and not r["coverage_loss_expected"]
+                and not r["fixed_membership"]
+                and r.get("client", {}).get("error_events", 0)):
+            bad.append(f"{key}: {r['client']['error_events']} client error "
+                       f"events on a fence/rejoin scenario (must be 0)")
     out = {
         "meta": {
             "smoke": args.smoke,

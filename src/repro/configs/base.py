@@ -114,6 +114,11 @@ class ArchConfig:
     ep_axes: Sequence[str] = ("data",)       # mesh axes forming the EP world
     expert_tp_axes: Sequence[str] = ("model",)  # TP axes *within* each expert
     slots_per_rank: int = 1
+    # fault-domain topology of the fleet (rank -> host -> switch); consumed
+    # by placement anti-affinity, repair-source preference and the
+    # scenario DSL's correlated-failure targets (repro.core.topology)
+    ranks_per_host: int = 2
+    hosts_per_switch: int = 2
     zero3_dense: bool = False          # FSDP-gather dense weights over "data"
     optimizer: str = "adamw"           # giant archs use "adafactor"
     remat: bool = True
@@ -143,6 +148,8 @@ class ArchConfig:
         assert self.dispatch_mode in ("dense", "ragged"), self.dispatch_mode
         assert self.kv_pool in ("slot", "paged"), self.kv_pool
         assert self.kv_block_size > 0, self.kv_block_size
+        assert self.ranks_per_host >= 1, self.ranks_per_host
+        assert self.hosts_per_switch >= 1, self.hosts_per_switch
 
     # -- derived -----------------------------------------------------------
     @property

@@ -1,22 +1,41 @@
-"""Failure model, detection and injection (paper §3.1, §4.1).
+"""Failure model, suspicion-based detection, and injection (paper §3.1, §4.1).
 
-Fail-stop only: a rank becomes unreachable (process crash, host loss, link
-failure). Detection in the paper happens via GPU-side RDMA-atomic progress
-counters with a 1 s timeout inside the dispatch/combine kernels; on TPU the
-collectives are globally scheduled, so detection moves to the step boundary
-(heartbeats aged against a timeout by the serving loop) — see DESIGN.md §2.
+Detection is *imperfect by construction*: there is no oracle bit that says
+"rank r is dead". The detector only sees per-rank heartbeats aging under
+the SimClock, and forms **suspicions**:
 
-In-flight requests at the moment of failure are reported failed and must be
-retried by the client (paper: EEP does not buffer or internally retry).
+* a rank that stopped answering entirely (``sigkill`` — process crash,
+  host power loss) is confirmed once its heartbeat age crosses
+  ``timeout_s`` (paper §4.1: 'currently 1 s');
+* a rank that is still reachable but silent (``hang``, a network
+  ``partition``, or plain heartbeat loss/jitter) gets a longer grace
+  window — ``timeout_s * suspect_grace`` — before suspicion converts to a
+  verdict, because an alive-but-slow rank and a dead one look identical
+  from the outside. Detection latency therefore *differs by failure
+  kind*, and the ``detect`` telemetry span reports the real measured
+  heartbeat age, not a configured constant.
+
+A suspicion can be WRONG (a falsely-suspected healthy rank, injected via
+``suppress_heartbeats``): the runtime fences the rank anyway — the
+membership transaction's epoch bump is the fence, and the scheduler's
+epoch check rejects late writes — and the rank reintegrates through the
+normal rejoin path. A wrong detection costs a bounded pause, never
+corruption.
+
+In-flight requests at the moment of failure are suspended (elastic
+continuation) or reported failed (fixed-membership baseline); see
+``repro.serving.scheduler``.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from enum import Enum
-from typing import Callable, Optional
+from typing import Iterable, Optional
 
 import numpy as np
+
+#: failure kinds the injector understands (scenario DSL + tests)
+FAILURE_KINDS = ("sigkill", "hang", "suspect", "partition", "heal")
 
 
 class RankState(Enum):
@@ -39,7 +58,8 @@ class CoverageLossError(RuntimeError):
 class FailureEvent:
     time: float
     ranks: list[int]
-    kind: str = "sigkill"        # paper injects SIGKILL on GPU processes
+    kind: str = "sigkill"        # one of FAILURE_KINDS
+    duration: float = 0.0        # "suspect": how long heartbeats stay lost
 
 
 class SimClock:
@@ -57,45 +77,153 @@ class SimClock:
 
 
 class FailureDetector:
-    """Timeout-based detection over per-rank heartbeats.
+    """Suspicion-based detection over per-rank heartbeats.
 
     In steady state every completed serving step refreshes all active peers'
     heartbeats (the analogue of the per-round RDMA-atomic counter arrivals).
-    A failed rank stops refreshing; once its heartbeat age exceeds the
-    timeout, it is deemed unreachable (paper §4.1: 'currently 1 s').
+    A crashed rank stops refreshing AND turns unreachable; a hung,
+    partitioned, or heartbeat-suppressed rank only stops refreshing. Both
+    paths converge on the same verdict — the rank is *suspected* and
+    reported exactly once — but on different latencies (see module
+    docstring).
     """
 
-    def __init__(self, world: int, clock: SimClock, timeout_s: float = 1.0):
+    def __init__(self, world: int, clock: SimClock, timeout_s: float = 1.0,
+                 suspect_grace: float = 2.0, jitter_s: float = 0.0):
         self.world = world
         self.clock = clock
         self.timeout_s = timeout_s
+        #: grace multiplier before a *reachable* silent rank is suspected
+        self.suspect_grace = suspect_grace
+        #: deterministic per-rank heartbeat arrival delay (network jitter);
+        #: a delay beyond the suspicion window is a built-in false positive
+        self.jitter_s = jitter_s
         self.last_heartbeat = np.zeros(world)
         self.reachable = np.ones(world, bool)
+        #: has ANY heartbeat round run? Until the monitoring plane is
+        #: live, silence from a reachable rank carries no signal — only
+        #: explicit unreachability (connection refused) can be suspected.
+        self.monitoring = False
         self.reported: set[int] = set()
+        self.hung: set[int] = set()
+        self.partitioned: set[int] = set()
+        self.suppressed_until: dict[int, float] = {}
+        #: how each currently-suspect rank failed (injection ground truth,
+        #: surfaced to the runtime so relaunch/fence decisions differ)
+        self.kind_of: dict[int, str] = {}
+
+    # -- heartbeat plumbing -------------------------------------------------------
+    def _jitter(self, rank: int) -> float:
+        if self.jitter_s <= 0.0:
+            return 0.0
+        # deterministic pseudo-random fraction per rank (no RNG state);
+        # the xor-fold spreads small rank indices across [0, 1)
+        h = (rank * 2654435761) & 0xFFFFFFFF
+        h ^= h >> 16
+        return self.jitter_s * ((h % 997) / 997.0)
+
+    def _delivers(self, rank: int, now: float) -> bool:
+        """Does rank's heartbeat reach the control plane right now?"""
+        if not self.reachable[rank] or rank in self.hung \
+                or rank in self.partitioned:
+            return False
+        until = self.suppressed_until.get(rank)
+        if until is not None:
+            if now < until:
+                return False
+            del self.suppressed_until[rank]
+        return True
 
     def heartbeat(self, ranks=None) -> None:
         now = self.clock.now()
+        self.monitoring = True
         for r in (range(self.world) if ranks is None else ranks):
-            if self.reachable[r]:
-                self.last_heartbeat[r] = now
+            if self._delivers(r, now):
+                self.last_heartbeat[r] = now - self._jitter(r)
 
-    def mark_unreachable(self, rank: int) -> None:
-        """Fail-stop injection: the rank stops producing heartbeats."""
+    def heartbeat_age(self, rank: int) -> float:
+        return self.clock.now() - float(self.last_heartbeat[rank])
+
+    # -- injection entry points ---------------------------------------------------
+    def mark_unreachable(self, rank: int, kind: str = "sigkill") -> None:
+        """Fail-stop injection: the rank stops producing heartbeats and its
+        endpoints refuse connections."""
         self.reachable[rank] = False
+        self.kind_of.setdefault(rank, kind)
+
+    def mark_hung(self, rank: int) -> None:
+        """The process is alive (endpoints still accept) but makes no
+        progress: only the heartbeat timeout can discover it."""
+        self.hung.add(rank)
+        self.kind_of.setdefault(rank, "hang")
+
+    def suppress_heartbeats(self, rank: int, until: float) -> None:
+        """False-positive injection: a healthy rank's heartbeats are lost
+        until ``until`` (sim seconds). If the loss outlives the suspicion
+        window the detector wrongly fences a healthy rank."""
+        self.suppressed_until[rank] = max(
+            self.suppressed_until.get(rank, 0.0), float(until))
+        self.kind_of.setdefault(rank, "suspect")
+
+    def partition(self, ranks: Iterable[int]) -> list[int]:
+        """Network partition: the given (minority) side's heartbeats stop
+        reaching the control plane. The ranks stay alive."""
+        cut = sorted(set(ranks))
+        for r in cut:
+            self.partitioned.add(r)
+            self.kind_of.setdefault(r, "partition")
+        return cut
+
+    def heal(self, ranks: Optional[Iterable[int]] = None) -> list[int]:
+        """Heal a partition (all of it, or the given ranks). Heartbeats
+        resume immediately; a rank that was already fenced stays fenced
+        until the runtime's batched reintegration clears it via
+        ``mark_reachable``."""
+        healed = sorted(set(ranks) & self.partitioned) if ranks \
+            else sorted(self.partitioned)
+        now = self.clock.now()
+        for r in healed:
+            self.partitioned.discard(r)
+            # resume: a not-yet-suspected rank must not be suspected for
+            # the silence that just ended
+            if r not in self.reported:
+                self.last_heartbeat[r] = now
+                self.kind_of.pop(r, None)
+        return healed
 
     def mark_reachable(self, rank: int) -> None:
         self.reachable[rank] = True
         self.reported.discard(rank)
+        self.hung.discard(rank)
+        self.partitioned.discard(rank)
+        self.suppressed_until.pop(rank, None)
+        self.kind_of.pop(rank, None)
         self.last_heartbeat[rank] = self.clock.now()
 
+    # -- detection ---------------------------------------------------------------
     def poll(self) -> list[int]:
-        """NEWLY detected failures (each fail-stop event reported once)."""
+        """NEWLY suspected ranks (each suspicion reported once). An
+        unreachable rank is confirmed at ``timeout_s`` of silence; a
+        reachable-but-silent one only after the longer
+        ``timeout_s * suspect_grace`` window."""
         now = self.clock.now()
-        fresh = [r for r in range(self.world)
-                 if not self.reachable[r] and r not in self.reported
-                 and now - self.last_heartbeat[r] >= self.timeout_s]
+        fresh = []
+        for r in range(self.world):
+            if r in self.reported:
+                continue
+            age = now - self.last_heartbeat[r]
+            if not self.reachable[r]:
+                if age >= self.timeout_s:
+                    fresh.append(r)
+            elif self.monitoring \
+                    and age >= self.timeout_s * self.suspect_grace:
+                self.kind_of.setdefault(r, "suspect")
+                fresh.append(r)
         self.reported.update(fresh)
         return fresh
+
+    def is_partitioned(self, rank: int) -> bool:
+        return rank in self.partitioned
 
     def known_reachable(self) -> np.ndarray:
         """The control plane's view: a failed rank is 'unreachable' only once
@@ -107,17 +235,41 @@ class FailureDetector:
             out[r] = False
         return out
 
+    # -- admin surface -----------------------------------------------------------
+    def suspicion_state(self) -> dict:
+        """JSON-serializable suspicion snapshot for the admin gateway."""
+        now = self.clock.now()
+        ranks = {}
+        for r in range(self.world):
+            until = self.suppressed_until.get(r)
+            ranks[str(r)] = {
+                "heartbeat_age_s": round(now - float(self.last_heartbeat[r]),
+                                         6),
+                "reachable": bool(self.reachable[r]),
+                "suspected": r in self.reported,
+                "hung": r in self.hung,
+                "partitioned": r in self.partitioned,
+                "suppressed_until": until,
+                "kind": self.kind_of.get(r),
+            }
+        return {"timeout_s": self.timeout_s,
+                "suspect_grace": self.suspect_grace,
+                "jitter_s": self.jitter_s,
+                "ranks": ranks}
 
 
 class FailureInjector:
-    """Scripted fail-stop / repair events for benchmarks and tests.
+    """Scripted failure/partition events for benchmarks and tests.
 
     Multi-failure aware: several events may fire in one ``step`` (concurrent
     failures), and an event may target a rank that is mid-warmup — the
     runtime interprets that as a warmup abort (the relaunched process died
-    again) rather than a fresh detection. ``fired_events`` keeps the ordered
-    log of everything that has fired; the scenario runner harvests it into
-    each result's ``injected`` list."""
+    again) rather than a fresh detection. Each event carries a ``kind``
+    (``FAILURE_KINDS``) that selects the detector entry point — a hang is
+    only ever discovered by heartbeat timeout, a partition cuts heartbeats
+    for a whole rank set, ``heal`` reverses a partition. ``fired_events``
+    keeps the ordered log of everything that has fired; the scenario runner
+    harvests it into each result's ``injected`` list."""
 
     def __init__(self, detector: FailureDetector):
         self.detector = detector
@@ -125,13 +277,34 @@ class FailureInjector:
         self.fired: set[int] = set()
         self.fired_events: list[FailureEvent] = []
 
-    def inject_at(self, time: float, ranks: list[int]) -> None:
-        self.schedule.append(FailureEvent(time=time, ranks=list(ranks)))
+    def inject_at(self, time: float, ranks: list[int],
+                  kind: str = "sigkill", duration: float = 0.0) -> None:
+        assert kind in FAILURE_KINDS, f"unknown failure kind {kind!r}"
+        self.schedule.append(FailureEvent(time=time, ranks=list(ranks),
+                                          kind=kind, duration=duration))
 
     def clear(self) -> None:
         self.schedule.clear()
         self.fired.clear()
         self.fired_events.clear()
+
+    def _apply(self, ev: FailureEvent) -> None:
+        det = self.detector
+        if ev.kind == "heal":
+            ev.ranks = det.heal(ev.ranks or None)
+        elif ev.kind == "partition":
+            det.partition(ev.ranks)
+        elif ev.kind == "hang":
+            for r in ev.ranks:
+                det.mark_hung(r)
+        elif ev.kind == "suspect":
+            horizon = ev.time + (ev.duration
+                                 or det.timeout_s * det.suspect_grace * 1.25)
+            for r in ev.ranks:
+                det.suppress_heartbeats(r, horizon)
+        else:                                   # sigkill (fail-stop)
+            for r in ev.ranks:
+                det.mark_unreachable(r, kind=ev.kind)
 
     def step(self) -> list[FailureEvent]:
         """Fire any events whose time has come; returns them."""
@@ -140,8 +313,7 @@ class FailureInjector:
         for i, ev in enumerate(self.schedule):
             if i in self.fired or ev.time > now:
                 continue
-            for r in ev.ranks:
-                self.detector.mark_unreachable(r)
+            self._apply(ev)
             self.fired.add(i)
             fired.append(ev)
         fired.sort(key=lambda e: e.time)

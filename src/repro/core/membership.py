@@ -41,6 +41,8 @@ class MembershipState:
     expert_to_slot: jax.Array   # int32[E, MAX_R]  -1 = pad
     replica_count: jax.Array    # int32[E]
     version: jax.Array          # int32[]          bumped on every patch
+    rank_host: jax.Array        # int32[world]     fault-domain: host of rank
+    rank_switch: jax.Array      # int32[world]     fault-domain: switch of host
 
     @property
     def world(self) -> int:
@@ -96,7 +98,7 @@ class PeerTable:
     """
 
     def __init__(self, world: int, num_experts: int, slots_per_rank: int = 1,
-                 max_replicas: Optional[int] = None):
+                 max_replicas: Optional[int] = None, topology=None):
         self.world = world
         self.num_experts = num_experts
         self.slots_per_rank = slots_per_rank
@@ -106,6 +108,13 @@ class PeerTable:
         self.entries = [PeerEntry(rank=r) for r in range(world)]
         self.slot_to_expert = np.full((self.num_slots,), -1, np.int32)
         self.version = 0
+        # fault-domain layout (rank -> host -> switch); a table built
+        # without one gets the degenerate flat tree (every rank its own
+        # host) so domain-aware planning reduces to the old behavior
+        if topology is None:
+            from repro.core.topology import flat_topology
+            topology = flat_topology(world)
+        self.topology = topology
 
     # -- membership transitions --------------------------------------------
     # NOTE: the runtime never calls these directly anymore — every runtime
@@ -187,11 +196,13 @@ class PeerTable:
             expert_to_slot=put(e2s),
             replica_count=put(counts),
             version=put(np.int32(self.version)),
+            rank_host=put(self.topology.rank_host_array()),
+            rank_switch=put(self.topology.rank_switch_array()),
         )
 
     def clone(self) -> "PeerTable":
         t = PeerTable(self.world, self.num_experts, self.slots_per_rank,
-                      self.max_replicas)
+                      self.max_replicas, topology=self.topology)
         t.entries = [dataclasses.replace(e) for e in self.entries]
         t.slot_to_expert = self.slot_to_expert.copy()
         t.version = self.version
@@ -199,10 +210,11 @@ class PeerTable:
 
 
 def make_initial_membership(world: int, num_experts: int,
-                            slots_per_rank: int = 1) -> PeerTable:
+                            slots_per_rank: int = 1,
+                            topology=None) -> PeerTable:
     """Initial placement: round-robin experts over slots; extra slots hold
     replicas (anti-affine: replica r of expert e lands on a different rank)."""
-    table = PeerTable(world, num_experts, slots_per_rank)
+    table = PeerTable(world, num_experts, slots_per_rank, topology=topology)
     s2e = np.full((table.num_slots,), -1, np.int32)
     for slot in range(table.num_slots):
         s2e[slot] = slot % num_experts if num_experts > 0 else -1

@@ -6,7 +6,8 @@ The balancer solves: given per-expert load weights and the active rank set,
 produce slot -> expert so that
   (1) every logical expert has >= 1 replica on an active rank   [coverage]
   (2) replica counts are ~proportional to load                  [balance]
-  (3) replicas of one expert prefer distinct ranks              [anti-affinity]
+  (3) replicas of one expert prefer distinct fault domains —
+      different hosts first, then different ranks               [anti-affinity]
   (4) the new placement maximizes overlap with the previous one [cheap repair]
 Property (4) is what keeps Tier-1 (local reuse) the common case in the repair
 hierarchy.
@@ -38,6 +39,8 @@ def eplb_place(
     max_replicas: Optional[int] = None,
     rank_capacity: Optional[np.ndarray] = None,  # float[world]: straggler
                                                  # de-weighting (1.0 = full)
+    topology=None,                       # FaultDomainTree: replica domain
+                                         # anti-affinity (None = rank-level)
 ) -> PlacementResult:
     num_slots = world * slots_per_rank
     active = np.asarray(active, bool)
@@ -114,9 +117,20 @@ def eplb_place(
     for e in order:
         e = int(e)
         for _ in range(int(remaining[e])):
-            hosts = {s // slots_per_rank for s in replicas[e]}
-            # candidate ranks with free slots, anti-affine first
-            cands = [rr for rr in active_ranks if free[int(rr)] and rr not in hosts]
+            used_ranks = {s // slots_per_rank for s in replicas[e]}
+            # candidate ranks with free slots, most anti-affine tier first:
+            # a different fault DOMAIN (host) beats a different rank beats
+            # any free slot — so no expert's full replica set shares one
+            # host unless the survivors leave no choice
+            cands: list[int] = []
+            if topology is not None and used_ranks:
+                used_hosts = {topology.host_of(int(u)) for u in used_ranks}
+                cands = [rr for rr in active_ranks if free[int(rr)]
+                         and rr not in used_ranks
+                         and topology.host_of(int(rr)) not in used_hosts]
+            if not cands:
+                cands = [rr for rr in active_ranks if free[int(rr)]
+                         and rr not in used_ranks]
             if not cands:
                 cands = [rr for rr in active_ranks if free[int(rr)]]
             if not cands:

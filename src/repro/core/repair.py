@@ -60,13 +60,21 @@ def plan_repair(
     backup: Optional[BackupStore] = None,
     bytes_per_slot: int = 0,
     source_active: Optional[np.ndarray] = None,
+    topology=None,
 ) -> RepairPlan:
     """``active`` gates transfer *destinations*; ``source_active`` (defaults
     to ``active``) gates Tier-2 *sources*. A planned drain passes the
     pre-transition mask as ``source_active`` so the departing rank — still
     alive during the transfer window, unlike a fault casualty — hands its
     uniquely-hosted experts over GPU-to-GPU instead of forcing Tier-3 DRAM
-    reloads."""
+    reloads.
+
+    ``topology`` (a ``FaultDomainTree``) makes Tier-2 source selection
+    bandwidth-aware: among the live replicas of an expert, a source on the
+    destination's own host (ICI) beats one under the same switch (host
+    NIC), which beats a cross-switch copy (spine) — the paper's transfer
+    hierarchy applied to source *choice*, with round-robin load-spreading
+    inside the winning proximity class."""
     num_slots = len(new_slot_to_expert)
     active = np.asarray(active, bool)
     source_active = active if source_active is None \
@@ -99,6 +107,12 @@ def plan_repair(
         srcs = [x for x in live_sources.get(e, ())
                 if source_active[rank_of(x)]]                 # atomic re-check
         if srcs:
+            if topology is not None:
+                # keep only the closest proximity class to the destination
+                prox = {x: topology.proximity(rank_of(s), rank_of(x))
+                        for x in srcs}
+                best = min(prox.values())
+                srcs = [x for x in srcs if prox[x] == best]
             i = rr.get(e, 0)
             src = srcs[i % len(srcs)]
             rr[e] = i + 1

@@ -2,26 +2,38 @@
 
 The paper evaluates one fail -> repair -> rejoin cycle; real fleets see
 concurrent multi-rank failures, cascades during recovery, flapping ranks and
-stragglers that degrade before they die. A *scenario* is a named, fully
-deterministic fault schedule plus the simulated-cluster shape it runs on;
-the scenario runner (``repro.runtime.scenario_runner``) drives an
-``ElasticEPRuntime`` + ``ServingEngine`` through it under the SimClock and
-checks the core invariants at every step boundary.
+stragglers that degrade before they die — and failures arrive by *fault
+domain* (host, switch), get *mis-detected* (false suspicions), and
+sometimes split the network outright. A *scenario* is a named, fully
+deterministic fault schedule plus the simulated-cluster shape it runs on
+(including its fault-domain topology); the scenario runner
+(``repro.runtime.scenario_runner``) drives an ``ElasticEPRuntime`` +
+``ServingEngine`` through it under the SimClock and checks the core
+invariants at every step boundary.
 
 Schedule DSL — one directive per line, ``#`` comments allowed::
 
-    @1.0  fail 2 5        # fail-stop ranks 2 and 5 at t=1.0s
-    @2.0  slow 3 x3.0     # rank 3 starts running 3.0x slower (straggler)
-    @14.0 restore 3       # rank 3 back to nominal speed
-    @4.0  drain 1         # planned maintenance drain of rank 1
-    @12.0 undrain 1       # bring the drained rank back
-    @5.0  scale down 6 7  # elastic shrink: decommission ranks 6 and 7
-    @20.0 scale up 6 7    # elastic regrow: relaunch + deferred join
+    @1.0  fail 2 5            # fail-stop (SIGKILL) ranks 2 and 5 at t=1.0s
+    @1.0  fail 5 kind=hang    # alive-but-stuck: found only by heartbeat age
+    @1.0  fail host:1         # correlated failure: every rank on host 1
+    @2.0  slow 3 x3.0         # rank 3 starts running 3.0x slower (straggler)
+    @14.0 restore 3           # rank 3 back to nominal speed
+    @3.0  suspect 4 x2.5      # false positive: rank 4 healthy, its
+                              #   heartbeats are lost for 2.5 s
+    @2.0  partition switch:1  # network partition: that switch's heartbeats
+                              #   stop reaching the control plane
+    @10.0 heal                # heal the partition (all of it; or name ranks)
+    @4.0  drain 1             # planned maintenance drain of rank 1
+    @12.0 undrain 1           # bring the drained rank back
+    @5.0  scale down 6 7      # elastic shrink: decommission ranks 6 and 7
+    @20.0 scale up 6 7        # elastic regrow: relaunch + deferred join
 
-``fail`` actions are fed to the FailureInjector up front; every other op
-is applied by the runner when the SimClock crosses its time — planned
-transitions (``drain``/``undrain``/``scale``) are requested through the
-runtime's ControlPlane and land at the next serving-step boundary via the
+``fail``/``suspect``/``partition``/``heal`` actions are fed to the
+FailureInjector up front (``host:N`` / ``switch:N`` tokens expand through
+the scenario's ``FaultDomainTree``); every other op is applied by the
+runner when the SimClock crosses its time — planned transitions
+(``drain``/``undrain``/``scale``) are requested through the runtime's
+ControlPlane and land at the next serving-step boundary via the
 transactional commit path (``repro.core.transitions``). Everything is
 derived from the schedule text + seed, so the same scenario always
 produces the same timeline.
@@ -33,17 +45,27 @@ recompilation** (one compiled serve step for the whole schedule) and
 **coverage** (>= 1 active replica per expert, or an *explicit*
 ``coverage_loss`` event when the scenario is designed to lose it:
 ``expect_coverage_loss=True``) — plus telemetry well-formedness (phase
-spans per docs/recovery-lifecycle.md). ``tests/test_scenarios.py``
-asserts all four across the registry; adding a scenario here is enough to
-put it under test, the benchmark sweep and the recovery report.
+spans per docs/recovery-lifecycle.md) and **epoch monotonicity** across
+every partition/heal and fence/rejoin interleaving.
+``tests/test_scenarios.py`` asserts all of these across the registry;
+adding a scenario here is enough to put it under test, the benchmark
+sweep and the recovery report.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 from typing import Iterable, Optional
 
-VALID_OPS = ("fail", "slow", "restore", "drain", "undrain", "scale")
+from repro.core.topology import DOMAIN_KINDS, FaultDomainTree
+
+VALID_OPS = ("fail", "slow", "restore", "suspect", "partition", "heal",
+             "drain", "undrain", "scale")
 SCALE_DIRECTIONS = ("down", "up")
+#: ``fail`` kinds the DSL accepts (subset of failure.FAILURE_KINDS — the
+#: others have their own ops)
+FAIL_KINDS = ("sigkill", "hang")
+#: ops that may target whole fault domains (``host:N`` / ``switch:N``)
+DOMAIN_OPS = ("fail", "partition")
 
 
 @dataclass(frozen=True)
@@ -51,15 +73,20 @@ class Action:
     t: float
     op: str                      # one of VALID_OPS
     ranks: tuple[int, ...]
-    factor: float = 1.0          # slowdown multiplier (op == "slow")
+    factor: float = 1.0          # slowdown (op=="slow") / duration ("suspect")
     direction: str = ""          # "down" | "up"       (op == "scale")
+    domains: tuple[str, ...] = ()  # "host:N"/"switch:N" (fail/partition)
+    kind: str = ""               # "sigkill" | "hang"  (op == "fail")
 
     def render(self) -> str:
         head = f"@{self.t:g} {self.op}"
         if self.op == "scale":
             head += f" {self.direction}"
-        line = f"{head} {' '.join(str(r) for r in self.ranks)}"
-        if self.op == "slow":
+        toks = [str(r) for r in self.ranks] + list(self.domains)
+        if self.op == "fail" and self.kind and self.kind != "sigkill":
+            toks.append(f"kind={self.kind}")
+        line = " ".join([head] + toks)
+        if self.op in ("slow", "suspect"):
             line += f" x{self.factor:g}"
         return line
 
@@ -90,6 +117,7 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
         op = parts[1]
         factor = 1.0
         direction = ""
+        kind = ""
         rank_toks = parts[2:]
         if op == "scale":
             if not rank_toks or rank_toks[0] not in SCALE_DIRECTIONS:
@@ -98,10 +126,12 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
                     f"{SCALE_DIRECTIONS} in {raw!r}")
             direction = rank_toks[0]
             rank_toks = rank_toks[1:]
-        if op == "slow":
+        if op in ("slow", "suspect"):
+            what = "xFACTOR" if op == "slow" else "xDURATION"
             if not rank_toks or not rank_toks[-1].startswith("x"):
                 raise ValueError(
-                    f"line {lineno}: 'slow' needs a trailing xFACTOR in {raw!r}")
+                    f"line {lineno}: {op!r} needs a trailing {what} "
+                    f"in {raw!r}")
             try:
                 factor = float(rank_toks[-1][1:])
             except ValueError:
@@ -110,7 +140,42 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
             if factor <= 0:
                 raise ValueError(f"line {lineno}: factor must be > 0 in {raw!r}")
             rank_toks = rank_toks[:-1]
-        if not rank_toks:
+        if op == "fail":
+            kept = []
+            for tok in rank_toks:
+                if tok.startswith("kind="):
+                    kind = tok[len("kind="):]
+                    if kind not in FAIL_KINDS:
+                        raise ValueError(
+                            f"line {lineno}: fail kind must be one of "
+                            f"{FAIL_KINDS}, got {raw!r}")
+                else:
+                    kept.append(tok)
+            rank_toks = kept
+        domains: list[str] = []
+        if op in DOMAIN_OPS:
+            kept = []
+            for tok in rank_toks:
+                if ":" in tok:
+                    dk, _, di = tok.partition(":")
+                    if dk not in DOMAIN_KINDS:
+                        raise ValueError(
+                            f"line {lineno}: domain must be one of "
+                            f"{DOMAIN_KINDS}, got {raw!r}")
+                    try:
+                        idx = int(di)
+                    except ValueError:
+                        raise ValueError(
+                            f"line {lineno}: bad domain index in "
+                            f"{raw!r}") from None
+                    if idx < 0:
+                        raise ValueError(
+                            f"line {lineno}: negative domain index in {raw!r}")
+                    domains.append(f"{dk}:{idx}")
+                else:
+                    kept.append(tok)
+            rank_toks = kept
+        if not rank_toks and not domains and op != "heal":
             raise ValueError(f"line {lineno}: no ranks in {raw!r}")
         try:
             ranks = tuple(int(x) for x in rank_toks)
@@ -119,7 +184,8 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
         if any(r < 0 for r in ranks):
             raise ValueError(f"line {lineno}: negative rank in {raw!r}")
         actions.append(Action(t=t, op=op, ranks=ranks, factor=factor,
-                              direction=direction))
+                              direction=direction, domains=tuple(domains),
+                              kind=kind))
     # stable sort: ties keep source order, so parsing is fully deterministic
     actions.sort(key=lambda a: a.t)
     return tuple(actions)
@@ -145,6 +211,9 @@ class Scenario:
     world: int = 8
     slots_per_rank: int = 2
     horizon_s: float = 30.0          # simulated seconds to run
+    # fault-domain topology of the simulated fleet (rank -> host -> switch)
+    ranks_per_host: int = 2
+    hosts_per_switch: int = 2
     # recovering-rank warmup phases (relaunch, runtime init, weight load,
     # graph capture) — kept short so scenarios are fast under SimClock
     warmup_s: tuple[float, float, float, float] = (1.0, 1.0, 2.0, 1.0)
@@ -156,10 +225,21 @@ class Scenario:
         return parse_schedule(self.schedule)
 
     @property
+    def topology(self) -> FaultDomainTree:
+        return FaultDomainTree(world=self.world,
+                               ranks_per_host=self.ranks_per_host,
+                               hosts_per_switch=self.hosts_per_switch)
+
+    @property
     def has_fault(self) -> bool:
-        """True when the schedule injects at least one fail-stop (as
-        opposed to a purely planned drain/scale schedule)."""
-        return any(a.op == "fail" for a in self.actions)
+        """True when the schedule injects at least one failure/suspicion
+        that triggers the unplanned-recovery path (as opposed to a purely
+        planned drain/scale schedule)."""
+        return any(a.op in ("fail", "suspect") for a in self.actions)
+
+    @property
+    def has_partition(self) -> bool:
+        return any(a.op == "partition" for a in self.actions)
 
     @property
     def has_planned(self) -> bool:
@@ -169,11 +249,19 @@ class Scenario:
                    for a in self.actions)
 
     def validate(self) -> None:
+        topo = self.topology
         for a in self.actions:
             if any(r >= self.world for r in a.ranks):
                 raise ValueError(
                     f"scenario {self.name}: rank {max(a.ranks)} out of range "
                     f"for world={self.world}")
+            for d in a.domains:
+                dk, _, di = d.partition(":")
+                limit = topo.num_hosts if dk == "host" else topo.num_switches
+                if int(di) >= limit:
+                    raise ValueError(
+                        f"scenario {self.name}: domain {d} out of range "
+                        f"(fleet has {limit} {dk}(es/s))")
             if a.t >= self.horizon_s:
                 raise ValueError(
                     f"scenario {self.name}: action at t={a.t} is beyond "
@@ -205,10 +293,12 @@ def list_scenarios() -> list[str]:
 
 # -- the registry -----------------------------------------------------------
 #
-# Timing notes (defaults): failure at t is detected ~1 s later (detector
-# timeout); recovery then takes ~2.3 s (detect 1.0 + drain 0.5 + coordinate
-# 0.8 + ~0 transfer at reduced scale); warmup (1+1+2+1) = 5 s; so a rank
-# failing at t rejoins around t + 8.5 s.
+# Timing notes (defaults): a SIGKILL at t is confirmed once its heartbeat
+# is timeout_s (1 s) old; a hang/suspicion/partition only converts to a
+# verdict after the longer grace window (timeout_s * suspect_grace = 2 s).
+# The recovery pause is then ~1.3 s (drain 0.5 + coordinate 0.8 + ~0
+# transfer at reduced scale); warmup (1+1+2+1) = 5 s; so a SIGKILLed rank
+# rejoins around t + 8 s, a hung one around t + 9 s.
 
 register(Scenario(
     name="concurrent_multi_failure",
@@ -245,7 +335,7 @@ register(Scenario(
                 "detection of a previously reintegrated peer.",
     schedule="""
         @1.0  fail 4
-        @14.0 fail 4       # after its first rejoin (~t=9.5)
+        @14.0 fail 4       # after its first rejoin (~t=9)
     """,
     horizon_s=35.0,
 ))
@@ -274,8 +364,9 @@ register(Scenario(
     name="majority_coverage_loss",
     description="Half the instance dies at once, leaving fewer live slots "
                 "than logical experts: shrink is impossible and the runtime "
-                "must record an explicit coverage-loss event (and stop) "
-                "rather than serve with unhosted experts.",
+                "must record an explicit coverage-loss event and degrade "
+                "(reject/fail structured events) rather than serve with "
+                "unhosted experts.",
     schedule="@1.0 fail 1 3 5",
     world=6, slots_per_rank=1,        # 3 surviving slots < 4 experts
     horizon_s=10.0,
@@ -357,4 +448,93 @@ register(Scenario(
         @26.0 scale up 6
     """,
     horizon_s=45.0,
+))
+
+# -- fault domains, imperfect detection, split-brain (ISSUE 7): failures
+# -- arrive correlated by host/switch, detectors fire false positives that
+# -- must cost a bounded fence+rejoin instead of corruption, and network
+# -- partitions must shrink through a lease-fenced commit and heal as ONE
+# -- batched reintegration.
+
+register(Scenario(
+    name="host_failure",
+    description="A whole host loses power: every rank on it fails at the "
+                "same instant (correlated fault domain). One shrink handles "
+                "the batch; replica anti-affinity in placement is what kept "
+                "every expert covered despite losing a full host.",
+    schedule="@1.5 fail host:1",
+))
+
+register(Scenario(
+    name="hang_detection",
+    description="An alive-but-stuck rank (kind=hang): endpoints still "
+                "accept, so only the heartbeat grace window can discover "
+                "it — detection latency is measurably longer than a "
+                "SIGKILL's and the detect span reports the real age.",
+    schedule="@1.0 fail 2 kind=hang",
+))
+
+register(Scenario(
+    name="switch_partition_heal",
+    description="A switch partitions away from the control plane: the "
+                "lease-holding majority side fences the unreachable half "
+                "and commits a shrink (monotonic epoch = the fence); the "
+                "minority parks, committing nothing. Heal reintegrates the "
+                "whole side in ONE batched warm table patch.",
+    schedule="""
+        @2.0  partition switch:1
+        @12.0 heal
+    """,
+    horizon_s=35.0,
+))
+
+register(Scenario(
+    name="false_suspicion_fence",
+    description="A healthy rank's heartbeats are lost past the suspicion "
+                "window: the detector wrongly fences it. The fence (epoch "
+                "bump) makes the mistake safe — late writes are rejected, "
+                "clients see a bounded stall and zero errors — and the "
+                "rank reintegrates through the normal rejoin path.",
+    schedule="@2.0 suspect 3 x2.5",
+))
+
+register(Scenario(
+    name="flapping_suspect",
+    description="The same rank is falsely suspected, fenced, rejoins, and "
+                "is falsely suspected again — repeated wrong detections "
+                "each cost one bounded fence/rejoin cycle, never "
+                "corruption.",
+    schedule="""
+        @2.0  suspect 4 x2.5
+        @18.0 suspect 4 x2.5
+    """,
+    horizon_s=40.0,
+))
+
+register(Scenario(
+    name="fault_during_drain",
+    description="A rank dies moments after a maintenance drain is "
+                "requested: the fault lands in the same control-pump "
+                "window and the two transitions commit back-to-back "
+                "through the one transaction path (no serialization "
+                "stall, epoch strictly monotonic).",
+    schedule="""
+        @2.0  drain 1
+        @2.3  fail 5
+        @15.0 undrain 1
+    """,
+    horizon_s=35.0,
+))
+
+register(Scenario(
+    name="coverage_loss_graceful",
+    description="Two of three hosts fail (correlated): fewer live slots "
+                "than experts, shrink impossible. The engine must degrade "
+                "gracefully — FAILED(final=true) for in-flight work, "
+                "structured REJECTED for new submits — and keep stepping "
+                "instead of crashing.",
+    schedule="@1.0 fail host:0 host:1",
+    world=6, slots_per_rank=1,        # 2 surviving slots < 4 experts
+    horizon_s=12.0,
+    expect_coverage_loss=True,
 ))

@@ -1,0 +1,131 @@
+"""Fault-domain topology: rank -> host -> switch (paper's fleet layout).
+
+Real fleets fail by *domain*, not by flat rank index: a host power event
+takes every rank on the host, a switch fault partitions every host under
+it. The `FaultDomainTree` is the single place that layout lives — it is
+carried on the `PeerTable` (and published into `MembershipState` as
+per-rank host/switch id arrays), consumed by
+
+* the scenario DSL (`fail host:2`, `partition switch:0` expand to rank
+  sets here),
+* the placement planner (`eplb_place` replica anti-affinity: no expert's
+  full replica set shares one host when it can be spread),
+* the repair planner (`plan_repair` prefers same-host, then same-switch
+  Tier-2 sources — the bandwidth hierarchy ICI > host NIC > spine), and
+* the admin surface (`AdminGateway.status` serializes `to_json()`).
+
+Worlds that do not divide evenly are legal: the last host/switch is
+simply smaller (ranks are packed in order).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+#: domain kinds the scenario DSL may target (``<kind>:<index>`` tokens)
+DOMAIN_KINDS = ("host", "switch")
+
+
+@dataclass(frozen=True)
+class FaultDomainTree:
+    """Static rank -> host -> switch mapping for one EP world."""
+
+    world: int
+    ranks_per_host: int = 2
+    hosts_per_switch: int = 2
+
+    def __post_init__(self):
+        assert self.world >= 1, "world must be >= 1"
+        assert self.ranks_per_host >= 1, "ranks_per_host must be >= 1"
+        assert self.hosts_per_switch >= 1, "hosts_per_switch must be >= 1"
+
+    # -- structure ---------------------------------------------------------------
+    @property
+    def num_hosts(self) -> int:
+        return -(-self.world // self.ranks_per_host)
+
+    @property
+    def num_switches(self) -> int:
+        return -(-self.num_hosts // self.hosts_per_switch)
+
+    def host_of(self, rank: int) -> int:
+        assert 0 <= rank < self.world, f"rank {rank} outside world {self.world}"
+        return rank // self.ranks_per_host
+
+    def switch_of(self, rank: int) -> int:
+        return self.host_of(rank) // self.hosts_per_switch
+
+    def ranks_of_host(self, host: int) -> tuple[int, ...]:
+        assert 0 <= host < self.num_hosts, \
+            f"host {host} outside {self.num_hosts}-host fleet"
+        lo = host * self.ranks_per_host
+        return tuple(range(lo, min(lo + self.ranks_per_host, self.world)))
+
+    def ranks_of_switch(self, switch: int) -> tuple[int, ...]:
+        assert 0 <= switch < self.num_switches, \
+            f"switch {switch} outside {self.num_switches}-switch fleet"
+        out: list[int] = []
+        for h in range(switch * self.hosts_per_switch,
+                       min((switch + 1) * self.hosts_per_switch,
+                           self.num_hosts)):
+            out.extend(self.ranks_of_host(h))
+        return tuple(out)
+
+    # -- proximity (repair-source preference) ------------------------------------
+    def proximity(self, a: int, b: int) -> int:
+        """0 = same host (ICI), 1 = same switch (host NIC), 2 = cross-switch
+        (spine) — lower is a cheaper/faster transfer path."""
+        if self.host_of(a) == self.host_of(b):
+            return 0
+        if self.switch_of(a) == self.switch_of(b):
+            return 1
+        return 2
+
+    # -- DSL expansion -----------------------------------------------------------
+    def expand(self, token: str) -> tuple[int, ...]:
+        """Expand one ``host:N`` / ``switch:N`` domain token to its ranks."""
+        kind, _, idx = token.partition(":")
+        assert kind in DOMAIN_KINDS, f"unknown domain kind {kind!r}"
+        i = int(idx)
+        if kind == "host":
+            return self.ranks_of_host(i)
+        return self.ranks_of_switch(i)
+
+    def expand_targets(self, ranks: tuple[int, ...],
+                       domains: tuple[str, ...]) -> list[int]:
+        """Rank list for an action: explicit ranks + every domain member,
+        deduplicated and sorted (a rank named twice fails once)."""
+        out = set(ranks)
+        for d in domains:
+            out.update(self.expand(d))
+        return sorted(out)
+
+    # -- device / JSON views -----------------------------------------------------
+    def rank_host_array(self) -> np.ndarray:
+        return np.array([self.host_of(r) for r in range(self.world)],
+                        dtype=np.int32)
+
+    def rank_switch_array(self) -> np.ndarray:
+        return np.array([self.switch_of(r) for r in range(self.world)],
+                        dtype=np.int32)
+
+    def to_json(self) -> dict:
+        return {
+            "world": self.world,
+            "ranks_per_host": self.ranks_per_host,
+            "hosts_per_switch": self.hosts_per_switch,
+            "hosts": {str(h): list(self.ranks_of_host(h))
+                      for h in range(self.num_hosts)},
+            "switches": {str(s): [h for h in range(self.num_hosts)
+                                  if h // self.hosts_per_switch == s]
+                         for s in range(self.num_switches)},
+        }
+
+
+def flat_topology(world: int) -> FaultDomainTree:
+    """Degenerate tree for callers that never configured one: every rank
+    its own host, one switch — all domain-aware code paths reduce to the
+    pre-topology behavior."""
+    return FaultDomainTree(world=world, ranks_per_host=1,
+                           hosts_per_switch=max(world, 1))

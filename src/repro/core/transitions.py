@@ -52,7 +52,7 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard (runtime hosts us)
 
 #: Every way membership can change. "bootstrap" is the initial publish.
 TRANSITION_KINDS = ("bootstrap", "fault", "join", "straggler", "drain",
-                    "undrain", "scale_down", "scale_up", "restart")
+                    "undrain", "scale_down", "scale_up", "restart", "heal")
 
 
 class TransitionAborted(RuntimeError):
@@ -253,7 +253,8 @@ class MembershipTransaction:
             self.table.slots_per_rank, self.table.active_mask,
             load=host.expert_load, prev_slot_to_expert=old_s2e,
             max_replicas=self.table.max_replicas,
-            rank_capacity=self.rank_capacity)
+            rank_capacity=self.rank_capacity,
+            topology=self.table.topology)
         if res.infeasible:
             self._fail(res.reason, reason=res.reason)
         self.placement = res
@@ -261,7 +262,8 @@ class MembershipTransaction:
             old_s2e, res.slot_to_expert, self.table.active_mask,
             self.table.slots_per_rank, host.backup,
             bytes_per_slot=self.bytes_per_slot(),
-            source_active=source_active)
+            source_active=source_active,
+            topology=self.table.topology)
         return self.repair_plan
 
     def revalidate(self) -> RepairPlan:
@@ -438,7 +440,11 @@ class FullRestartPolicy:
         rt.record("full_restart_begin", _incident=incident, ranks=list(ranks))
         txn = rt.begin("restart", incident=incident)
         with rt.obs.span("full-restart", incident, ranks=list(ranks)):
-            rt.clock.advance(self.restart_model.total_s)
+            # the rebuilt instance comes back whole: every rank (restarted
+            # casualties AND the survivors that just sat through the
+            # outage) resumes heartbeating at the same instant; injector
+            # events due inside the outage fire at their scheduled times
+            rt._advance(self.restart_model.total_s)
             for r in ranks:
                 rt.detector.mark_reachable(r)
             txn.activate(ranks)
@@ -502,6 +508,12 @@ class ControlPlane:
         rt = self.rt
         entries = rt.table.entries
         ranks = _flatten(ranks)
+        # split-brain fence: a partitioned rank is unreachable from the
+        # majority side — no planned op may target it until the partition
+        # heals (its state will be reconciled by the heal transaction)
+        part = getattr(rt.detector, "is_partitioned", None)
+        if part is not None:
+            ranks = [r for r in ranks if not part(r)]
         if op in ("drain", "scale_down"):
             return [r for r in ranks if entries[r].active]
         if op == "undrain":

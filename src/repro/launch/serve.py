@@ -34,6 +34,19 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--world", type=int, default=8)
     ap.add_argument("--slots-per-rank", type=int, default=1)
+    ap.add_argument("--hosts", type=int, default=None,
+                    help="fault-domain layout: number of hosts the ranks "
+                    "are packed onto (overrides --ranks-per-host)")
+    ap.add_argument("--ranks-per-host", type=int, default=None,
+                    help="fault-domain layout: ranks per host (default: "
+                    "the arch config's ranks_per_host)")
+    ap.add_argument("--hosts-per-switch", type=int, default=None,
+                    help="fault-domain layout: hosts per switch (default: "
+                    "the arch config's hosts_per_switch)")
+    ap.add_argument("--detect-timeout", type=float, default=None,
+                    help="heartbeat timeout (sim seconds) before an "
+                    "unreachable rank is confirmed failed; reachable-but-"
+                    "silent ranks get timeout * suspect-grace")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
@@ -91,10 +104,20 @@ def main(argv=None):
         import dataclasses
         cfg = dataclasses.replace(cfg, kv_block_size=args.kv_block_size)
     E = cfg.moe.num_experts if cfg.is_moe else 1
-    table = make_initial_membership(args.world, E, args.slots_per_rank)
+    from repro.core.topology import FaultDomainTree
+    rph = args.ranks_per_host or cfg.ranks_per_host
+    if args.hosts is not None:
+        rph = -(-args.world // args.hosts)     # pack ranks onto N hosts
+    topology = FaultDomainTree(
+        args.world, ranks_per_host=rph,
+        hosts_per_switch=args.hosts_per_switch or cfg.hosts_per_switch)
+    table = make_initial_membership(args.world, E, args.slots_per_rank,
+                                    topology=topology)
     params = init_params(cfg, jax.random.key(0), jnp.float32,
                          table.slot_to_expert, table.num_slots)
     rt = ElasticEPRuntime(cfg, params, table, dispatch=args.dispatch)
+    if args.detect_timeout is not None:
+        rt.detector.timeout_s = args.detect_timeout
     eng = ServingEngine(rt, max_batch=args.max_batch,
                         max_len=args.prompt_len + args.max_new + 8,
                         fixed_membership=args.fixed_membership,

@@ -75,15 +75,21 @@ PLANNED_PHASES = ("drain", "scale-down")
 #: residency moving to the survivors) runs inside the drain/scale-down
 #: window, sequenced before the table patch.
 SUB_PHASES = ("kv-migrate",)
+#: Fencing marker: the moment a commit invalidates a suspected /
+#: partitioned rank's epoch. Instantaneous (the fence IS the epoch bump of
+#: the shrink commit, whose time is already charged to ``replan``), so it
+#: is a marker like ``rejoin``, not a critical-path pause.
+FENCE_PHASES = ("fence",)
 #: Phases only the fixed-membership baseline emits.
 BASELINE_PHASES = ("full-restart",)
-ALL_PHASES = PHASES + PLANNED_PHASES + SUB_PHASES + BASELINE_PHASES
+ALL_PHASES = (PHASES + PLANNED_PHASES + SUB_PHASES + FENCE_PHASES
+              + BASELINE_PHASES)
 
 #: Lifecycle stage per phase: within one incident the stage index of
 #: successive spans (by start time) must be non-decreasing.
 _STAGE = {"detect": 0, "replan": 1, "repair-transfer": 1, "warmup": 2,
           "table-patch": 3, "rejoin": 3, "full-restart": 0,
-          "drain": 1, "scale-down": 1, "kv-migrate": 1}
+          "drain": 1, "scale-down": 1, "kv-migrate": 1, "fence": 1}
 
 #: Critical-path phases pause every healthy rank, so they are globally
 #: serial: no two such spans may overlap, across incidents included.
@@ -197,8 +203,24 @@ class PhaseClock:
         return self._rank_incident.get(int(rank), default)
 
     # -- spans -------------------------------------------------------------
-    def _new_span(self, phase: str, incident: int, meta: dict) -> PhaseSpan:
-        sp = PhaseSpan(incident=incident, phase=phase, t_start=self.now(),
+    def _new_span(self, phase: str, incident: int, meta: dict,
+                  t_start: Optional[float] = None) -> PhaseSpan:
+        now = self.now()
+        if t_start is None:
+            t_start = now
+        else:
+            # Retroactive start: a detect span opens at the silent rank's
+            # last heartbeat, which is in the past by the time the timeout
+            # fires. Clamp so the recorded list stays monotonic (rule 3)
+            # and critical spans stay serial (rule 4) even when the
+            # measured age reaches back past an earlier span.
+            floor = self.spans[-1].t_start if self.spans else 0.0
+            if phase in CRITICAL_PHASES:
+                for s in self.spans:
+                    if s.phase in CRITICAL_PHASES and not s.open:
+                        floor = max(floor, s.t_end)
+            t_start = min(now, max(float(t_start), floor))
+        sp = PhaseSpan(incident=incident, phase=phase, t_start=t_start,
                        step_start=self.step, meta=meta)
         self.spans.append(sp)
         return sp
@@ -212,9 +234,13 @@ class PhaseClock:
         return sp
 
     @contextmanager
-    def span(self, phase: str, incident: int, **meta):
-        """A synchronous (stacked) phase span around a block of work."""
-        sp = self._new_span(phase, incident, meta)
+    def span(self, phase: str, incident: int,
+             t_start: Optional[float] = None, **meta):
+        """A synchronous (stacked) phase span around a block of work.
+        ``t_start`` opens the span retroactively (clamped to keep the
+        span list well-formed) — used by the detect phase, whose real
+        beginning is the failed rank's last heartbeat."""
+        sp = self._new_span(phase, incident, meta, t_start=t_start)
         self._stack.append(sp)
         try:
             yield sp
@@ -254,16 +280,18 @@ class PhaseClock:
     def current_incident(self) -> int:
         return self._stack[-1].incident if self._stack else -1
 
-    def emit(self, kind: str, _incident: Optional[int] = None,
+    def emit(self, _kind: str, _incident: Optional[int] = None,
              **detail) -> ObsEvent:
         """Record one event with the current telemetry context. Events
         emitted outside any span (e.g. the failure that OPENS an incident,
         or the recovery_done after its spans closed) pass ``_incident``
-        explicitly; inside a span the innermost one wins."""
+        explicitly; inside a span the innermost one wins. The positional
+        parameter is underscored so ``detail`` may itself carry a ``kind``
+        key (e.g. a fence event's failure kind)."""
         inc = self.current_incident()
         if inc < 0 and _incident is not None:
             inc = _incident
-        ev = ObsEvent(t=self.now(), kind=kind, incident=inc,
+        ev = ObsEvent(t=self.now(), kind=_kind, incident=inc,
                       phase=self.current_phase(), step=self.step,
                       active_fraction=float(self.sample_active()),
                       detail=detail)

@@ -68,6 +68,7 @@ from repro.core.failure import (
 )
 from repro.core.membership import MembershipState, PeerTable
 from repro.core.reintegration import ReintegrationController, WarmupCostModel
+from repro.core.topology import FaultDomainTree, flat_topology
 from repro.core.straggler import StragglerMonitor
 from repro.core.repair import RecoveryCostModel
 from repro.core.transitions import (
@@ -136,6 +137,15 @@ class ElasticEPRuntime:
         self.cfg = cfg
         self.params = params
         self.table = table
+        # fault-domain layout: a table built without an explicit topology
+        # (degenerate flat tree) adopts the config's host/switch geometry,
+        # so correlated-failure planning and domain anti-affinity see the
+        # same rank -> host -> switch map the scenario/launcher declared
+        if table.topology == flat_topology(table.world):
+            table.topology = FaultDomainTree(
+                table.world,
+                ranks_per_host=getattr(cfg, "ranks_per_host", 1),
+                hosts_per_switch=getattr(cfg, "hosts_per_switch", 1))
         if deployment is None:
             from repro.models.moe import local_deployment
             deployment = Deployment(
@@ -170,6 +180,12 @@ class ElasticEPRuntime:
         self.straggler = StragglerMonitor(table.world)
         self.rank_slowdown = np.ones(table.world)   # sim: injected slowness
         self.timeline: list[TimelineEvent] = []
+        # fence log: every epoch-invalidation of a suspected/partitioned
+        # rank (admin surface + scenario harvesting)
+        self.fence_events: list[dict] = []
+        #: injector events fired inside an ``_advance`` pause, awaiting the
+        #: next ``_poll_transitions`` (which records/enqueues them)
+        self._fired_backlog: list = []
         self.record("start")
         self.events_log: list[str] = []
         self.recompile_count = 0        # must stay 0 across fail/rejoin
@@ -217,13 +233,14 @@ class ElasticEPRuntime:
     # ------------------------------------------------------------------
     # Telemetry
     # ------------------------------------------------------------------
-    def record(self, kind: str, _incident: Optional[int] = None, **detail):
+    def record(self, _kind: str, _incident: Optional[int] = None, **detail):
         """Single emission path: the enriched event (incident/phase/step/
         active-fraction tags) goes to ``self.obs``; the flat ``timeline``
         keeps the legacy shape for existing consumers. ``_incident`` tags
-        events emitted outside any phase span."""
-        ev = self.obs.emit(kind, _incident=_incident, **detail)
-        self.timeline.append(TimelineEvent(ev.t, kind, detail))
+        events emitted outside any phase span. The event kind is
+        underscored so ``detail`` may itself carry a ``kind`` key."""
+        ev = self.obs.emit(_kind, _incident=_incident, **detail)
+        self.timeline.append(TimelineEvent(ev.t, _kind, detail))
 
     def active_fraction(self) -> float:
         return float(self.table.active_mask.mean())
@@ -259,17 +276,32 @@ class ElasticEPRuntime:
         into warmup aborts, and return (newly detected failures, aborted
         warmups). The single poll sequence behind poll_failures, the
         mid-recovery phase boundaries, and pump_control."""
-        fired = self.injector.step()
+        fired = self._fired_backlog + self.injector.step()
+        self._fired_backlog = []
         aborted = self._restart_refailed_warmups(fired)
+        for ev in fired:
+            if ev.kind == "partition" and ev.ranks:
+                # the cut itself is observable only as silence — record the
+                # split so traces can tell a partition from a crash
+                self.record("partition", ranks=sorted(ev.ranks),
+                            minority=len(ev.ranks),
+                            majority=self.table.world - len(ev.ranks))
+            elif ev.kind == "heal" and ev.ranks:
+                self.record("partition_healed", ranks=sorted(ev.ranks))
+                self._enqueue("partition_heal", sorted(ev.ranks))
         return self.detector.poll(), aborted
 
     def _restart_refailed_warmups(self, fired) -> list[int]:
         """An injected failure that targets a rank currently mid-warmup is a
         warmup abort (the relaunched process died again), not a fresh
         detection: the detector already reported it, so the only action is
-        restarting its local warmup. Returns the aborted ranks."""
+        restarting its local warmup. Returns the aborted ranks. Only real
+        process deaths count — a suspicion, partition or heal event against
+        a warming rank is not a relaunch failure."""
         aborted = []
         for ev in fired:
+            if ev.kind not in ("sigkill", "hang"):
+                continue
             for r in ev.ranks:
                 if self.controller.is_recovering(r):
                     self.controller.restart_warmup(r)
@@ -301,18 +333,34 @@ class ElasticEPRuntime:
         self.record("failure", _incident=incident, ranks=list(failed))
         txn = self.begin("fault", incident=incident)
         pending = [r for r in failed if txn.is_active(r)]
-        phases = {"detect": self.cost_model.detect_s,
+        # Measured detection latency: the detect span reaches BACK to the
+        # casualties' oldest heartbeat — detection is imperfect and its
+        # latency depends on HOW the rank failed (a sigkill confirms at
+        # timeout_s, a hang/partition only after the suspicion grace
+        # window) — instead of charging a configured constant. Only the
+        # drain advances the clock here: the detection window already
+        # elapsed in wall time before the verdict fired. A direct
+        # handle_failure call without a detector verdict (unit tests,
+        # baseline bounce) falls back to the modeled constant.
+        ages = [self.detector.heartbeat_age(r) for r in failed
+                if r in self.detector.reported]
+        detect_s = max(ages) if ages else self.cost_model.detect_s
+        phases = {"detect": detect_s,
                   "drain": self.cost_model.drain_s,
                   "coordinate": 0.0, "weight_transfer": 0.0}
-        with self.obs.span("detect", incident, ranks=sorted(failed),
-                           drain_s=phases["drain"]):
-            self.clock.advance(phases["detect"] + phases["drain"])
+        with self.obs.span("detect", incident,
+                           t_start=self.clock.now() - detect_s,
+                           ranks=sorted(failed), drain_s=phases["drain"],
+                           measured=bool(ages)):
+            self._advance(phases["drain"])
 
+        casualties: set[int] = set()
         rounds = 0
         try:
             while True:
                 rounds += 1
                 txn.deactivate(pending)    # peer-set repair (staged)
+                casualties.update(pending)
                 for r in pending:
                     self.obs.bind_rank(r, incident)  # cascade casualties
                 pending = []
@@ -320,7 +368,7 @@ class ElasticEPRuntime:
                 if not self.cfg.is_moe:
                     # dense arch: membership substrate only (no experts)
                     with self.obs.span("replan", incident, round=rounds):
-                        self.clock.advance(self.cost_model.coordinate_s)
+                        self._advance(self.cost_model.coordinate_s)
                     phases["coordinate"] += self.cost_model.coordinate_s
                     pending = self._poll_mid_recovery(txn)
                     if pending:
@@ -339,7 +387,7 @@ class ElasticEPRuntime:
                 with self.obs.span("replan", incident, round=rounds,
                                    tier2=len(plan.tier2),
                                    tier3=len(plan.tier3)):
-                    self.clock.advance(self.cost_model.coordinate_s)
+                    self._advance(self.cost_model.coordinate_s)
                 phases["coordinate"] += self.cost_model.coordinate_s
                 pending = self._poll_mid_recovery(txn)
                 if pending:
@@ -358,7 +406,7 @@ class ElasticEPRuntime:
                     plan, self.table.world, self.table.slots_per_rank)
                 with self.obs.span("repair-transfer", incident,
                                    round=rounds) as xfer_span:
-                    self.clock.advance(ph["weight_transfer"])
+                    self._advance(ph["weight_transfer"])
                     phases["weight_transfer"] += ph["weight_transfer"]
                     pending = self._poll_mid_recovery(txn)
                     if pending:
@@ -376,7 +424,7 @@ class ElasticEPRuntime:
                                 self.table.slots_per_rank)["weight_transfer"] \
                                 - ph["weight_transfer"]
                             if extra > 0:
-                                self.clock.advance(extra)
+                                self._advance(extra)
                                 phases["weight_transfer"] += extra
                     xfer_span.meta.update(tier2_bytes=plan.tier2_bytes,
                                           tier3_bytes=plan.tier3_bytes)
@@ -388,6 +436,23 @@ class ElasticEPRuntime:
             # graph-visible routing repair: validate + publish the staged
             # configuration (content patch; bumps the epoch)
             txn.commit()
+            # split-brain fencing: for casualties that may in fact still be
+            # alive (false suspicion, network partition) the commit's epoch
+            # bump IS the fence — any write they attempt against the old
+            # epoch is rejected by the scheduler's epoch check. Record the
+            # fence so the admin surface and scenarios can see it.
+            for r in sorted(casualties):
+                k = self.detector.kind_of.get(r)
+                if k not in ("suspect", "partition"):
+                    continue
+                inc_r = self.obs.incident_of(r, incident)
+                self.obs.mark("fence", inc_r, rank=r, kind=k,
+                              epoch=self.epoch)
+                self.record("fence", _incident=inc_r, rank=r, kind=k,
+                            epoch=self.epoch)
+                self.fence_events.append({
+                    "t": self.clock.now(), "rank": r, "kind": k,
+                    "epoch": self.epoch, "incident": inc_r})
         except TransitionAborted as e:
             if "violations" in e.detail:
                 # a validity failure at commit is NOT coverage loss — it is
@@ -422,11 +487,14 @@ class ElasticEPRuntime:
                     tier3_bytes=last.tier3_bytes if last else 0)
         # relaunch every rank that is now inactive asynchronously (deferred
         # join) — including casualties of mid-recovery cascades, but NOT
-        # deliberately drained/decommissioned ranks
+        # deliberately drained/decommissioned ranks, and NOT partitioned
+        # ranks: their processes are alive on the minority side, so they
+        # rejoin warm when the partition heals instead of relaunching
         for r in range(self.table.world):
             entry = self.table.entries[r]
             if (not entry.active and not entry.drained
-                    and not self.controller.is_recovering(r)):
+                    and not self.controller.is_recovering(r)
+                    and not self.detector.is_partitioned(r)):
                 self.controller.schedule_relaunch(r)
                 self.obs.open_span(("warmup", r), "warmup",
                                    incident=self.obs.incident_of(r, incident),
@@ -463,6 +531,19 @@ class ElasticEPRuntime:
                          if self.controller.state_of(r) == RankState.JOIN_READY]
                 if ranks:
                     self.policy.on_join_ready(self, ranks)
+                    summary.joined += ranks
+            elif ev.kind == "partition_heal":
+                # the healed minority rejoins WARM (its processes never
+                # died): one batched table patch, composed into the same
+                # incident the partition opened. Ranks never fenced (the
+                # cut healed before detection) are still active — nothing
+                # to do for them.
+                ranks = [r for r in ev.ranks
+                         if not self.table.entries[r].active
+                         and not self.table.entries[r].drained
+                         and not self.controller.is_recovering(r)]
+                if ranks and self.policy.mutates_membership:
+                    self._rejoin_batch(ranks, kind="heal")
                     summary.joined += ranks
             elif ev.kind in PLANNED_OPS:
                 handled, mode = self.control.dispatch(ev.kind, ev.ranks)
@@ -523,7 +604,7 @@ class ElasticEPRuntime:
             txn.activate(ranks)      # refresh entries (endpoint epoch)
             txn.plan()               # EPLB over the extended active set
             txn.commit()             # apply + validate + publish
-            self.clock.advance(self.cost_model.join_patch_s)
+            self._advance(self.cost_model.join_patch_s)
         for rank in ranks:
             self.controller.complete_join(rank)
             self.record(kind, _incident=self.obs.incident_of(rank, incident),
@@ -559,13 +640,13 @@ class ElasticEPRuntime:
                 source = self.table.active_mask
                 txn.deactivate(ranks, drained=True)
                 plan = txn.plan(source_active=source)
-                self.clock.advance(self.cost_model.coordinate_s)
+                self._advance(self.cost_model.coordinate_s)
                 if plan is not None:
                     xfer = self.cost_model.recovery_seconds(
                         plan, self.table.world,
                         self.table.slots_per_rank)["weight_transfer"]
                     if xfer > 0:
-                        self.clock.advance(xfer)
+                        self._advance(xfer)
                 # transfer-before-table-patch: the departing ranks' KV
                 # pages ship to the survivors over the same Tier-2 window
                 # the weights just used, so re-admitted requests find
@@ -579,7 +660,7 @@ class ElasticEPRuntime:
                                        pages=manifest.pages_moved,
                                        bytes=manifest.bytes_moved,
                                        requests=manifest.requests):
-                        self.clock.advance(
+                        self._advance(
                             manifest.bytes_moved
                             / (self.cost_model.ici_gbps * 1e9))
                     txn.kv_manifest = manifest
@@ -679,3 +760,18 @@ class ElasticEPRuntime:
         # drained ranks are alive (idling for maintenance) — they heartbeat
         # too, so the detector does not misread a planned drain as a fault
         self.detector.heartbeat(self.table.live_ranks())
+
+    def _advance(self, dt: float) -> None:
+        """Advance the SimClock across a synchronous control-plane pause
+        (recovery phase, drain transfer, join patch) AND refresh live
+        ranks' heartbeats: healthy workers keep heartbeating while the
+        control plane holds them paused, so a pause longer than the
+        suspicion grace window must never convert the whole world into
+        suspects. Injector events that come due INSIDE the pause are
+        applied first (their ranks go silent from the fire time, so the
+        post-pause poll sees a real heartbeat age instead of a refresh
+        that a dying rank could never have sent); the fired events are
+        banked for the next ``_poll_transitions`` to record."""
+        self.clock.advance(dt)
+        self._fired_backlog.extend(self.injector.step())
+        self.heartbeat()

@@ -86,6 +86,9 @@ class ScenarioResult:
     recovery_rounds: int = 0        # > recoveries when cascades composed
     joins: int = 0
     warmup_aborts: int = 0
+    fences: int = 0                 # epoch-invalidation fence events
+    partitions: int = 0             # network partitions observed
+    heals: int = 0                  # partition heals observed
     drains: int = 0                 # planned transitions (ControlPlane)
     undrains: int = 0
     scale_downs: int = 0
@@ -143,6 +146,9 @@ class ScenarioResult:
             "recovery_rounds": self.recovery_rounds,
             "joins": self.joins,
             "warmup_aborts": self.warmup_aborts,
+            "fences": self.fences,
+            "partitions": self.partitions,
+            "heals": self.heals,
             "drains": self.drains,
             "undrains": self.undrains,
             "scale_downs": self.scale_downs,
@@ -176,7 +182,8 @@ def build_scenario_runtime(scn: Scenario, *, seed: int = 0,
     scenario invariant must hold on both."""
     cfg = get_config(arch).reduced()
     table = make_initial_membership(scn.world, cfg.moe.num_experts,
-                                    scn.slots_per_rank)
+                                    scn.slots_per_rank,
+                                    topology=scn.topology)
     params = init_params(cfg, jax.random.key(seed), jnp.float32,
                          table.slot_to_expert, table.num_slots)
     relaunch, init, load, capture = scn.warmup_s
@@ -239,13 +246,25 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                          dispatch=dispatch,
                          coverage_loss_expected=scn.expect_coverage_loss)
 
-    # fail-stop events go to the injector up front; slow/restore and the
-    # planned transitions are applied by this loop when the SimClock
-    # crosses their time
+    # failure-model events (fail/suspect/partition/heal) go to the injector
+    # up front — domain targets (host:N / switch:N) expand through the
+    # scenario's fault-domain tree; slow/restore and the planned
+    # transitions are applied by this loop when the SimClock crosses
+    # their time
+    topo = scn.topology
     deferred = []
     for a in scn.actions:
         if a.op == "fail":
-            rt.injector.inject_at(a.t, list(a.ranks))
+            rt.injector.inject_at(a.t, topo.expand_targets(a.ranks, a.domains),
+                                  kind=a.kind or "sigkill")
+        elif a.op == "suspect":
+            rt.injector.inject_at(a.t, list(a.ranks), kind="suspect",
+                                  duration=a.factor)
+        elif a.op == "partition":
+            rt.injector.inject_at(a.t, topo.expand_targets(a.ranks, a.domains),
+                                  kind="partition")
+        elif a.op == "heal":
+            rt.injector.inject_at(a.t, list(a.ranks), kind="heal")
         else:
             deferred.append(a)
     deferred.sort(key=lambda a: a.t)
@@ -275,9 +294,15 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
             else:                       # drain | undrain
                 rt.record(f"{a.op}_requested", ranks=list(a.ranks))
                 fe.admin.execute({"cmd": a.op, "ranks": list(a.ranks)})
-        # steady offered load: keep a full admission queue
-        while len(eng.sched.queue) < max_batch:
+        # steady offered load: keep a full admission queue. A degraded
+        # engine REJECTS submissions without enqueueing, so the queue
+        # never fills — offer a bounded trickle instead, which keeps the
+        # structured-REJECTED path exercised without spinning.
+        if eng.degraded:
             fe.submit([1, 2, 3], max_new=scn.max_new_tokens)
+        else:
+            while len(eng.sched.queue) < max_batch:
+                fe.submit([1, 2, 3], max_new=scn.max_new_tokens)
         try:
             fe.step()
         except CoverageLossError as e:
@@ -287,11 +312,17 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
             break
         res.steps += 1
         if check_invariants:
-            rep = validity_check(rt.table, rt.membership,
-                                 reachable=rt.detector.known_reachable())
-            if not rep.valid:
-                res.validity_violations += [
-                    f"t={rt.clock.now():.3f}: {v}" for v in rep.violations]
+            # a degraded instance (coverage loss absorbed by the engine) is
+            # formally invalid by design — coverage violations are the
+            # recorded loss, not a regression — but the epoch contract
+            # below must STILL hold: degradation never unwinds a commit
+            if not eng.degraded:
+                rep = validity_check(rt.table, rt.membership,
+                                     reachable=rt.detector.known_reachable())
+                if not rep.valid:
+                    res.validity_violations += [
+                        f"t={rt.clock.now():.3f}: {v}"
+                        for v in rep.violations]
             if eng.compile_count() != 1:
                 res.validity_violations.append(
                     f"t={rt.clock.now():.3f}: serve step recompiled "
@@ -330,7 +361,7 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
                   "tokens_per_s": round(float(s.tokens_per_s), 3),
                   "active_fraction": float(s.active_fraction)}
                  for s in eng.trace]
-    res.injected = [{"t": ev.time, "ranks": list(ev.ranks)}
+    res.injected = [{"t": ev.time, "ranks": list(ev.ranks), "kind": ev.kind}
                     for ev in rt.injector.fired_events]
     res.coverage_loss_events = [
         {"t": e.t, **_jsonable(e.detail)} for e in rt.timeline
@@ -347,6 +378,15 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
             res.joins += 1
         elif e.kind == "warmup_abort":
             res.warmup_aborts += 1
+        elif e.kind == "fence":
+            res.fences += 1
+        elif e.kind == "partition":
+            res.partitions += 1
+        elif e.kind == "partition_healed":
+            res.heals += 1
+        elif e.kind == "heal":
+            # warm heal rejoin: counts as a join (same batched table patch)
+            res.joins += 1
         elif e.kind == "full_restart_done":
             res.recoveries += 1
             res.downtime_s += float(e.detail["seconds"])
@@ -381,7 +421,9 @@ def run_scenario(scenario, *, seed: int = 0, arch: str = "mixtral-8x22b",
     res.requests_suspended = st.suspended
     res.requests_migrated = st.migrated
     res.requests_cancelled = st.cancelled
-    res.requests_rejected = st.rejected
+    # frontend-level refusals (queue depth, degraded coverage loss) never
+    # reach the scheduler, so they live in a separate counter
+    res.requests_rejected = st.rejected + fe.rejected_admission
     res.tokens_migrated = st.tokens_migrated
     res.kv_migrate_s = float(rt.obs.phase_totals().get("kv-migrate", 0.0))
     # client-perceived view: what the streams actually delivered, and

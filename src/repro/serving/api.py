@@ -201,6 +201,14 @@ class ServingFrontend:
         if expires is not None:
             self._deadline_watch.append(handle)
         sched = self.engine.sched
+        if self.engine.degraded:
+            # graceful degradation after coverage loss: the frontend stays
+            # up and answers, but refuses work it could never finish —
+            # a structured terminal REJECTED, not a hang or a crash
+            self.rejected_admission += 1
+            handle._emit("REJECTED", now, reason="coverage_loss",
+                         degraded=self.engine.degraded_reason)
+            return handle
         if (self.max_queue_depth is not None
                 and len(sched.queue) >= self.max_queue_depth):
             self.rejected_admission += 1
@@ -483,6 +491,13 @@ class AdminGateway:
             "pending_admin": len(fe._scheduled),
             "scheduler": asdict(eng.sched.stats),
             "kv": eng.kv.stats(),
+            "degraded": eng.degraded,
+            # imperfect-detection surface: per-rank heartbeat ages,
+            # suspicion verdicts and the fault-domain tree, so an operator
+            # can tell a fenced-but-alive rank from a dead one
+            "suspicion": rt.detector.suspicion_state(),
+            "topology": rt.table.topology.to_json(),
+            "fences": len(rt.fence_events),
         }
 
     def _epoch(self) -> dict:
@@ -498,4 +513,5 @@ class AdminGateway:
                           for inc, phases in
                           sorted(rt.obs.incident_totals().items())],
             "events": [e.to_dict() for e in rt.obs.events[-last:]],
+            "fences": list(rt.fence_events[-last:]),
         }

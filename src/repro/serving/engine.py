@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.failure import CoverageLossError
 from repro.core.transitions import (
     ElasticPolicy,
     FullRestartCostModel,
@@ -38,7 +39,7 @@ from repro.core.transitions import (
 )
 from repro.launch.steps import make_serve_step
 from repro.models.model import init_caches
-from repro.runtime.elastic import ElasticEPRuntime
+from repro.runtime.elastic import ControlSummary, ElasticEPRuntime
 from repro.serving.kv_cache import make_pool
 from repro.serving.scheduler import Scheduler
 
@@ -100,6 +101,12 @@ class ServingEngine:
             self._kv_manifest if self.kv.supports_migration
             and not self.fixed_membership else None)
         self.trace: list[ThroughputSample] = []
+        # graceful degradation: set when a fault's recovery aborts on
+        # coverage loss — the engine keeps stepping (serving what the
+        # surviving experts can cover) but in-flight work was failed
+        # terminally and the frontend refuses new admissions
+        self.degraded = False
+        self.degraded_reason = ""
         self._prompt_pos = np.zeros((max_batch,), np.int64)
         # unplanned faults: the recovery pause (detect..rejoin) is dead
         # time the speculative re-prefill can hide inside — replay-only
@@ -202,7 +209,25 @@ class ServingEngine:
         # drains every pending control transition — possibly several
         # overlapping failures and a batch of joins — in event order. ---
         t_pre = rt.clock.now()
-        ctl = rt.pump_control()
+        try:
+            ctl = rt.pump_control()
+        except CoverageLossError as e:
+            # graceful degradation instead of a crashed serving loop: the
+            # survivors cannot cover every expert, so the work that needed
+            # the lost ones can never finish. Fail in-flight AND queued
+            # requests terminally (final=true, no retry budget burned),
+            # flip the degraded flag (the frontend rejects new submits),
+            # and keep stepping for observability/admin traffic.
+            if not self.degraded:
+                self.degraded = True
+                self.degraded_reason = str(e)
+                self.sched.fail_inflight(now=rt.clock.now(),
+                                         cause="coverage_loss",
+                                         force_final=True)
+                self._prompt_pos[:] = 0
+                self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+                                                   rt.active_fraction()))
+            ctl = ControlSummary()
         now = rt.clock.now()
         if ctl.failures_handled or ctl.restarts:
             # one eviction per interruption batch (overlapping failures

@@ -181,22 +181,30 @@ class Scheduler:
             req.state = state
             queue.appendleft(req)
 
-    def fail_inflight(self, *, now: float = 0.0,
-                      cause: str = "fault") -> list[Request]:
+    def fail_inflight(self, *, now: float = 0.0, cause: str = "fault",
+                      force_final: bool = False) -> list[Request]:
         """Fixed-membership interruption semantics: every in-flight request
         is reported failed and (per client policy) resubmitted FROM SCRATCH
         — its generated prefix is discarded and recomputed, and the client
         sees an explicit error event. A request that exceeds
         ``max_retries`` is dropped (counted in stats) instead of retrying
-        forever — e.g. under a flapping rank."""
+        forever — e.g. under a flapping rank. ``force_final`` fails every
+        request terminally with no retry — graceful degradation when the
+        capacity to ever serve them is gone (coverage loss); queued work
+        is failed too, since it could never be admitted either."""
         failed = self._evict_inflight(keep_progress=False)
+        if force_final:
+            while self.queue:
+                failed.append(self.queue.popleft())
         retried = []
         for req in failed:
             req.state = RequestState.FAILED
             self.stats.failed += 1
             final = True
-            if self.retry_failed and (self.max_retries is None
-                                      or req.retries < self.max_retries):
+            if force_final:
+                pass
+            elif self.retry_failed and (self.max_retries is None
+                                        or req.retries < self.max_retries):
                 req.retries += 1
                 retried.append(req)
                 self.stats.retried += 1

@@ -1,0 +1,462 @@
+"""Fault-domain topology, imperfect detection, and split-brain fencing
+(ISSUE 7):
+
+  * `FaultDomainTree` units — rank/host/switch mapping, proximity classes,
+    domain-token expansion, the flat degenerate tree;
+  * suspicion-based detection — a SIGKILL is confirmed at `timeout_s`, a
+    hang/partition/heartbeat-loss only after the longer grace window, a
+    healthy detector without heartbeat traffic never mass-suspects, and a
+    false suspicion is cleared by reintegration;
+  * sigkill vs hang produce *measurably different* `detect` span durations
+    (the span reports real heartbeat age, not a configured constant);
+  * placement replica anti-affinity across hosts and proximity-aware
+    Tier-2 repair sources;
+  * the fence: a falsely-suspected healthy rank is fenced (epoch bump),
+    late writes die on the epoch check, the rank rejoins, and clients see
+    ZERO error events with clean stream ordering;
+  * partitions: the majority commits a lease-fenced shrink, heal lands as
+    ONE batched reintegration, and the epoch never regresses across any
+    partition/heal interleaving (deterministic enumeration always; a
+    hypothesis property when the dev extra is installed);
+  * graceful degradation on coverage loss — structured REJECTED/FAILED
+    events, the engine keeps stepping;
+  * the admin surface exposes suspicion state, fence events and the
+    fault-domain tree as round-trippable JSON.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.failure import FailureDetector, SimClock
+from repro.core.placement import eplb_place
+from repro.core.reintegration import WarmupCostModel
+from repro.core.repair import plan_repair
+from repro.core.scenarios import Scenario, parse_schedule
+from repro.core.topology import FaultDomainTree, flat_topology
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.runtime.scenario_runner import run_scenario
+from repro.serving.api import ServingFrontend
+from repro.serving.engine import ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# FaultDomainTree
+# ---------------------------------------------------------------------------
+
+def test_topology_mapping_and_proximity():
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    assert topo.num_hosts == 4 and topo.num_switches == 2
+    assert [topo.host_of(r) for r in range(8)] == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert [topo.switch_of(r) for r in range(8)] == [0, 0, 0, 0, 1, 1, 1, 1]
+    assert topo.ranks_of_host(1) == (2, 3)
+    assert topo.ranks_of_switch(1) == (4, 5, 6, 7)
+    assert topo.proximity(0, 1) == 0          # same host: ICI
+    assert topo.proximity(0, 2) == 1          # same switch: host NIC
+    assert topo.proximity(0, 4) == 2          # cross-switch: spine
+    assert list(topo.rank_host_array()) == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert topo.rank_host_array().dtype == np.int32
+
+
+def test_topology_ragged_last_domain():
+    topo = FaultDomainTree(world=7, ranks_per_host=3, hosts_per_switch=2)
+    assert topo.num_hosts == 3 and topo.num_switches == 2
+    assert topo.ranks_of_host(2) == (6,)      # packed, last host smaller
+    assert topo.ranks_of_switch(1) == (6,)
+
+
+def test_topology_expand_targets_dedup_sorted():
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    assert topo.expand("host:1") == (2, 3)
+    assert topo.expand("switch:0") == (0, 1, 2, 3)
+    # explicit rank overlapping a domain fails once
+    assert topo.expand_targets((3, 6), ("host:1",)) == [2, 3, 6]
+
+
+def test_flat_topology_degenerates():
+    topo = flat_topology(5)
+    assert topo.num_hosts == 5 and topo.num_switches == 1
+    assert all(topo.host_of(r) == r for r in range(5))
+    assert all(topo.proximity(a, b) == (0 if a == b else 1)
+               for a in range(5) for b in range(5))
+
+
+def test_topology_json_roundtrip():
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    j = json.loads(json.dumps(topo.to_json()))
+    assert j["hosts"]["1"] == [2, 3]
+    assert j["switches"]["1"] == [2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Scenario DSL: new ops
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule_domains_kinds_roundtrip():
+    src = ("@1 fail host:1\n@2 fail 2 kind=hang\n@3 suspect 4 x2.5\n"
+           "@4 partition switch:1\n@10 heal")
+    acts = parse_schedule(src)
+    assert acts[0].domains == ("host:1",) and acts[0].op == "fail"
+    assert acts[1].kind == "hang"
+    assert acts[2].op == "suspect" and acts[2].factor == 2.5
+    assert acts[3].op == "partition" and acts[3].domains == ("switch:1",)
+    assert acts[4].op == "heal" and acts[4].ranks == ()
+    from repro.core.scenarios import format_schedule
+    assert parse_schedule(format_schedule(acts)) == acts
+
+
+@pytest.mark.parametrize("bad", [
+    "@1 fail rack:0",           # unknown domain kind
+    "@1 fail host:x",           # bad domain index
+    "@1 fail host:-1",          # negative domain index
+    "@1 fail 2 kind=meteor",    # unknown fail kind
+    "@1 suspect 3",             # suspect without duration
+    "@1 partition",             # partition without targets
+    "@1 drain host:0",          # domains only on fail/partition
+])
+def test_parse_schedule_rejects_new_ops(bad):
+    with pytest.raises(ValueError):
+        parse_schedule(bad)
+
+
+def test_scenario_validate_rejects_out_of_range_domain():
+    scn = Scenario(name="x", description="", schedule="@1 fail host:9",
+                   world=8)
+    with pytest.raises(ValueError):
+        scn.validate()
+
+
+# ---------------------------------------------------------------------------
+# Suspicion-based detection
+# ---------------------------------------------------------------------------
+
+def _detector(world=8, **kw):
+    clock = SimClock()
+    det = FailureDetector(world, clock, **kw)
+    det.heartbeat()                    # monitoring plane live at t=0
+    return clock, det
+
+
+def test_sigkill_confirmed_at_timeout_only():
+    clock, det = _detector()
+    det.mark_unreachable(5)
+    clock.advance(0.9)
+    det.heartbeat()
+    assert det.poll() == []
+    clock.advance(0.2)                 # age 1.1 >= timeout_s
+    assert det.poll() == [5]
+    assert det.kind_of[5] == "sigkill"
+    assert det.poll() == []            # verdicts are reported once
+
+
+def test_hang_needs_the_longer_grace_window():
+    clock, det = _detector()
+    det.mark_hung(2)
+    clock.advance(1.5)                 # past timeout_s, inside grace
+    det.heartbeat()
+    assert det.poll() == []
+    clock.advance(0.6)                 # age 2.1 >= timeout_s * grace
+    det.heartbeat()
+    assert det.poll() == [2]
+    assert det.kind_of[2] == "hang"
+
+
+def test_no_mass_suspicion_without_heartbeat_traffic():
+    # No heartbeat round has ever run: silence carries no signal, so only
+    # explicit unreachability may be suspected (unit tests and cold starts
+    # must not see the whole world suspected at once).
+    clock = SimClock()
+    det = FailureDetector(8, clock)
+    det.mark_unreachable(5)
+    clock.advance(5.0)
+    assert det.poll() == [5]
+
+
+def test_false_suspicion_and_reintegration():
+    clock, det = _detector()
+    det.suppress_heartbeats(3, until=3.0)
+    for _ in range(4):
+        clock.advance(0.5)
+        det.heartbeat()
+    assert det.poll() == [3]           # healthy rank wrongly suspected
+    assert det.kind_of[3] == "suspect"
+    det.mark_reachable(3)              # rejoin clears every suspicion bit
+    assert det.poll() == []
+    clock.advance(0.5)
+    det.heartbeat()
+    assert det.poll() == []
+
+
+def test_partition_heal_before_verdict_leaves_no_suspicion():
+    clock, det = _detector()
+    det.partition([4, 5])
+    clock.advance(1.0)
+    det.heartbeat()
+    assert det.poll() == []            # still inside the grace window
+    det.heal()
+    clock.advance(1.5)
+    det.heartbeat()
+    assert det.poll() == []            # silence ended before suspicion
+    det.partition([4, 5])
+    for _ in range(3):                 # heartbeats keep flowing elsewhere
+        clock.advance(0.7)
+        det.heartbeat()
+    assert sorted(det.poll()) == [4, 5]
+    assert det.kind_of[4] == "partition"
+
+
+def test_jitter_can_cross_the_suspicion_window():
+    clock, det = _detector(jitter_s=3.0)
+    clock.advance(0.5)
+    det.heartbeat()
+    clock.advance(0.1)
+    # some rank's deterministic jitter pushes its recorded heartbeat far
+    # enough into the past to cross the window: a built-in false positive
+    fired = det.poll()
+    assert fired and all(det.kind_of[r] == "suspect" for r in fired)
+
+
+# ---------------------------------------------------------------------------
+# Detection latency differs by failure kind (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _first_detect_span(res):
+    spans = [sp for sp in res.spans if sp["phase"] == "detect"]
+    assert spans, "no detect span recorded"
+    return spans[0]
+
+
+def test_sigkill_vs_hang_detect_span_durations():
+    """The detect span reports the real measured heartbeat age: a hang
+    (discovered only via the grace window) must show a measurably longer
+    detect duration than a SIGKILL of the same schedule shape."""
+    kill = Scenario(name="tmp_sigkill", description="",
+                    schedule="@1.0 fail 2", world=8)
+    d_kill = _first_detect_span(run_scenario(kill))["duration_s"]
+    d_hang = _first_detect_span(run_scenario("hang_detection"))["duration_s"]
+    assert d_kill >= 1.0                       # at least the timeout
+    assert d_hang >= d_kill + 0.5, (d_kill, d_hang)
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware placement + repair
+# ---------------------------------------------------------------------------
+
+def test_placement_replica_host_anti_affinity():
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    res = eplb_place(4, 8, 2, np.ones(8, bool), topology=topo)
+    assert not res.infeasible
+    for e, slots in res.replicas.items():
+        hosts = {topo.host_of(s // 2) for s in slots}
+        assert len(hosts) >= 2, (e, slots)     # never all on one host
+
+
+def test_placement_anti_affinity_falls_back_when_survivors_force_it():
+    # only host 0 (+ one rank of host 1) survives: coverage must still win
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    active = np.zeros(8, bool)
+    active[[0, 1, 2]] = True
+    res = eplb_place(4, 8, 2, active, topology=topo)
+    assert not res.infeasible
+    assert all(len(v) >= 1 for v in res.replicas.values())
+
+
+def test_repair_prefers_proximate_tier2_source():
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    old = np.array([5, 7, 0, 1, 2, 3, 7, 4], np.int32)   # expert 7 @ ranks 1,6
+    new = old.copy()
+    new[0] = 7                                           # dst rank 0 (host 0)
+    plan = plan_repair(old, new, np.ones(8, bool), 1, topology=topo)
+    assert (0, 1) in plan.tier2        # same-host source beats cross-switch
+    plan_flat = plan_repair(old, new, np.ones(8, bool), 1)
+    assert any(d == 0 for d, _ in plan_flat.tier2)
+
+
+# ---------------------------------------------------------------------------
+# Fencing, partitions, graceful degradation (e2e scenarios)
+# ---------------------------------------------------------------------------
+
+def test_false_suspicion_fences_then_rejoins_with_zero_client_errors():
+    """A wrongly-fenced healthy rank costs a bounded pause, never an
+    error: the fence event is recorded, the rank reintegrates through the
+    normal rejoin path, and every client stream is clean."""
+    res = run_scenario("false_suspicion_fence")
+    assert res.fences >= 1
+    assert res.recoveries >= 1 and res.joins >= 1
+    assert res.final_active_fraction == 1.0
+    assert res.requests_failed == 0
+    assert res.client["error_events"] == 0
+    assert not res.stream_violations
+    fence = next(e for e in res.timeline if e["kind"] == "fence")
+    assert fence["detail"]["kind"] == "suspect"
+    assert fence["detail"]["epoch"] >= 1
+
+
+def test_switch_partition_fences_and_heals_in_one_batch():
+    res = run_scenario("switch_partition_heal")
+    assert res.partitions >= 1 and res.heals >= 1
+    assert res.fences >= 1                       # partitioned side fenced
+    assert res.final_active_fraction == 1.0      # healed side back in
+    assert not res.stream_violations
+    heal = next(e for e in res.timeline if e["kind"] == "heal_batch")
+    assert len(heal["detail"]["ranks"]) >= 2     # ONE batched reintegration
+
+
+def test_epoch_never_regresses_across_partition_heal_interleavings():
+    """Deterministic enumeration (always runs): shift the heal across the
+    detection/shrink/rejoin boundary and assert the fence (epoch) stays
+    strictly monotonic and the world converges back to full strength."""
+    for heal_t in (3.0, 8.0, 14.0):
+        scn = Scenario(
+            name=f"tmp_part_heal_{heal_t:g}", description="",
+            schedule=f"@2.0 partition 4 5\n@{heal_t:g} heal",
+            world=8, horizon_s=heal_t + 14.0)
+        res = run_scenario(scn)
+        epochs = [e["detail"]["epoch"] for e in res.timeline
+                  if e["kind"] == "membership_commit"]
+        assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs), \
+            (heal_t, epochs)
+        assert res.final_active_fraction == 1.0, heal_t
+        assert not res.validity_violations, (heal_t,
+                                             res.validity_violations[:3])
+
+
+def test_epoch_monotonic_property_hypothesis():
+    pytest.importorskip(
+        "hypothesis", reason="dev extra not installed: pip install -e .[dev]")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=5, deadline=None)
+    @given(part_t=st.sampled_from([1.5, 2.5]),
+           heal_t=st.sampled_from([4.0, 9.0]),
+           target=st.sampled_from(["4 5", "switch:1"]))
+    def prop(part_t, heal_t, target):
+        scn = Scenario(
+            name="tmp_prop", description="",
+            schedule=f"@{part_t:g} partition {target}\n@{heal_t:g} heal",
+            world=8, horizon_s=heal_t + 14.0)
+        res = run_scenario(scn)
+        epochs = [e["detail"]["epoch"] for e in res.timeline
+                  if e["kind"] == "membership_commit"]
+        assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs)
+        assert res.final_active_fraction == 1.0
+
+    prop()
+
+
+def test_coverage_loss_degrades_gracefully():
+    """Losing two of three hosts makes shrink impossible: the engine keeps
+    stepping (no crash), in-flight work gets FAILED(final=true), new
+    submits get structured REJECTED, and the streams stay well-formed."""
+    res = run_scenario("coverage_loss_graceful")
+    assert res.coverage_loss_events
+    assert res.sim_duration_s >= 11.0            # kept stepping to horizon
+    assert res.requests_failed >= 1              # in-flight: FAILED final
+    assert res.requests_rejected >= 1            # new submits: REJECTED
+    ev = res.client["events"]
+    assert ev.get("FAILED", 0) >= 1 and ev.get("REJECTED", 0) >= 1
+    assert not res.stream_violations
+    assert res.tokens_out > 0                    # served until the loss
+
+
+def test_host_failure_is_one_composed_shrink():
+    res = run_scenario("host_failure")
+    assert res.recoveries == 1                   # the whole host in ONE saga
+    assert res.final_active_fraction == 1.0
+    assert res.min_live_replicas >= 1            # anti-affinity paid off
+    failed = [e for e in res.injected if e["kind"] == "sigkill"]
+    assert failed and len(failed[0]["ranks"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Degraded frontend + fence epoch check (unit level)
+# ---------------------------------------------------------------------------
+
+def _frontend(world=8, spr=1, topology=None):
+    cfg = get_config("mixtral-8x22b").reduced()
+    table = make_initial_membership(world, cfg.moe.num_experts, spr,
+                                    topology=topology)
+    params = init_params(cfg, jax.random.key(0), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    rt = ElasticEPRuntime(cfg, params, table,
+                          warmup_model=WarmupCostModel(1, 1, 2, 1))
+    eng = ServingEngine(rt, max_batch=4, max_len=48)
+    return rt, eng, ServingFrontend(eng)
+
+
+def test_degraded_engine_rejects_submits_with_structured_event():
+    rt, eng, fe = _frontend(world=6, spr=1)
+    h0 = fe.submit([1, 2, 3], max_new=8)
+    for _ in range(3):
+        fe.step()
+    for r in range(1, 5):
+        rt.detector.mark_unreachable(r)          # 2 slots < 4 experts
+    rt.clock.advance(1.5)
+    for _ in range(4):
+        fe.step()
+    assert eng.degraded and "slots" in eng.degraded_reason
+    assert h0.done and h0.outcome == "FAILED"
+    assert h0.events[-1].detail["final"] is True
+    h1 = fe.submit([1, 2, 3], max_new=8)
+    assert h1.done and h1.outcome == "REJECTED"
+    assert h1.events[-1].detail["reason"] == "coverage_loss"
+    assert not fe.stream_violations()
+
+
+def test_fence_rejects_late_writes_from_stale_epoch():
+    """The epoch bump IS the fence: the fenced side still lives at the
+    pre-fence epoch, and any admission it attempts on a post-fence
+    continuation snapshot dies on the scheduler's epoch check."""
+    rt, eng, fe = _frontend()
+    fe.submit([1, 2, 3], max_new=8)
+    fe.step()
+    stale_epoch = rt.epoch
+    rt.detector.suppress_heartbeats(3, until=6.0)
+    for _ in range(4):                   # healthy ranks keep heartbeating
+        rt.clock.advance(0.7)            # only rank 3's silence accumulates
+        fe.step()
+    assert rt.fence_events and rt.fence_events[0]["rank"] == 3
+    assert rt.fence_events[0]["kind"] == "suspect"
+    assert rt.epoch > stale_epoch                # the fence moved the epoch
+    from repro.serving.request import Request
+    late = Request(rid=10_000, prompt=[1], max_new_tokens=4)
+    late.snapshot_epoch = rt.epoch               # snapshot under the fence
+    eng.sched.submit(late)
+    with pytest.raises(RuntimeError, match="older membership epoch"):
+        eng.sched.admit(epoch=stale_epoch)
+
+
+# ---------------------------------------------------------------------------
+# Admin surface (satellite 6)
+# ---------------------------------------------------------------------------
+
+def test_admin_status_and_incidents_expose_robustness_state():
+    topo = FaultDomainTree(world=8, ranks_per_host=2, hosts_per_switch=2)
+    rt, eng, fe = _frontend(topology=topo)
+    fe.submit([1, 2, 3], max_new=8)
+    fe.step()
+    rt.detector.suppress_heartbeats(3, until=6.0)
+    for _ in range(4):                   # healthy ranks keep heartbeating
+        rt.clock.advance(0.7)            # only rank 3's silence accumulates
+        fe.step()
+    resp = fe.admin.execute({"cmd": "status"})
+    resp = json.loads(json.dumps(resp))          # must round-trip as JSON
+    assert resp["ok"] is True
+    status = resp["result"]
+    assert status["topology"]["ranks_per_host"] == 2
+    assert status["topology"]["hosts"]["1"] == [2, 3]
+    assert status["fences"] >= 1
+    sus = status["suspicion"]["ranks"]["3"]
+    assert sus["kind"] == "suspect"
+    assert status["degraded"] is False
+    inc = json.loads(fe.admin.execute_json(json.dumps({"cmd": "incidents"})))
+    assert inc["ok"] is True
+    fences = inc["result"]["fences"]
+    assert fences and fences[0]["rank"] == 3
+    assert fences[0]["epoch"] >= 1

@@ -311,6 +311,13 @@ def test_registry_e2e_invariants(dispatch):
         "drain_overlapping_fault": "drain",
         "elastic_shrink_regrow": "scale_down",
         "mixed_planned_unplanned": "scale_up",
+        "host_failure": "recovery_done",
+        "hang_detection": "recovery_done",
+        "switch_partition_heal": "partition",
+        "false_suspicion_fence": "fence",
+        "flapping_suspect": "fence",
+        "fault_during_drain": "drain",
+        "coverage_loss_graceful": "coverage_loss",
     }
     for name in list_scenarios():
         res = run_scenario(name, dispatch=dispatch)
@@ -336,6 +343,15 @@ def test_registry_e2e_invariants(dispatch):
         bad_spans = validate_spans(res.spans)
         assert not bad_spans, (name, dispatch, bad_spans[:3])
         assert set(res.phase_totals) <= set(ALL_PHASES), name
+        # epoch is the fence: strictly monotonic on EVERY scenario — across
+        # fault shrinks, fences, partitions, heals and planned transitions
+        # alike (ISSUE 7 acceptance)
+        epochs = [e["detail"]["epoch"] for e in res.timeline
+                  if e["kind"] == "membership_commit"]
+        assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs), \
+            (name, dispatch, epochs)
+        if epochs:
+            assert res.final_epoch == epochs[-1], name
         if scn.has_fault and not scn.expect_coverage_loss:
             assert {"detect", "replan", "warmup",
                     "table-patch"} <= set(res.phase_totals), name
