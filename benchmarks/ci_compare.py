@@ -97,6 +97,21 @@ def _scenario_metrics(doc: dict) -> dict[str, Metric]:
                 and not row.get("coverage_loss_expected", False)):
             out[f"{key}/client/error_events"] = (
                 float(client.get("error_events", 0)), "zero")
+        # router-skew era: gate the throughput-restore trajectory (did
+        # recovery restore THROUGHPUT, not just coverage), the final
+        # routing-load imbalance, and how many replicas the placement
+        # spent on the hottest expert — a popularity-blind regression
+        # shows up in all three before any pause metric moves
+        ratio = row.get("throughput_restore_ratio")
+        if ratio is not None and float(ratio) >= 0:
+            out[f"{key}/throughput_restore_ratio"] = (float(ratio), "higher")
+        imb = row.get("final_load_imbalance")
+        if imb is not None and float(imb) > 0:
+            out[f"{key}/final_load_imbalance"] = (float(imb), "lower")
+        reps = row.get("expert_replicas_final") or {}
+        if reps and row.get("rebalances", 0):
+            out[f"{key}/hot_expert_replicas"] = (
+                float(max(reps.values())), "higher")
         recomputed = client.get("tokens_recomputed")
         if recomputed is not None and not row.get("fixed_membership", False):
             pure_planned = ((row.get("drains", 0)

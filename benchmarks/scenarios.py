@@ -34,17 +34,27 @@ if __package__ in (None, ""):                       # `python benchmarks/...`
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 # the smoke set covers one concurrent-fault, one cascade, one join-storm,
-# one planned-maintenance and one false-suspicion scenario, so the PR
-# trajectory job tracks drain pauses, recovery pauses AND the cost of a
-# wrong detection next to each other (docs/recovery-lifecycle.md)
+# one planned-maintenance, one false-suspicion and one router-skew
+# scenario, so the PR trajectory job tracks drain pauses, recovery
+# pauses, the cost of a wrong detection AND the throughput-restore gate
+# next to each other (docs/recovery-lifecycle.md)
 SMOKE_SET = ["concurrent_multi_failure", "cascade_mid_recovery",
              "rejoin_storm", "rolling_maintenance_drain",
-             "false_suspicion_fence"]
+             "false_suspicion_fence", "static_hot_expert"]
 
 #: hard bound on the summed pause of a whole-host correlated failure:
 #: losing a full fault domain must still recover in one bounded shrink
 #: (detect + drain + coordinate + transfer), nowhere near a restart
 HOST_FAILURE_DOWNTIME_BOUND_S = 10.0
+
+
+def _restore_gate(name: str) -> float:
+    """Scenario's throughput-restore gate (0.0 = ungated)."""
+    from repro.core.scenarios import get_scenario
+    try:
+        return get_scenario(name).restore_throughput_factor
+    except KeyError:
+        return 0.0
 
 
 def main(argv=None) -> int:
@@ -138,6 +148,16 @@ def main(argv=None) -> int:
                       f"fences={res.fences}_partitions={res.partitions}"
                       f"_heals={res.heals}_errors="
                       f"{c.get('error_events', 0)}")
+            if res.rebalances or scn.restore_throughput_factor > 0:
+                reps = res.expert_replicas_final
+                hot2 = sorted(reps.values(), reverse=True)[:2] \
+                    if reps else []
+                print(f"scenario/{name}[{mode}]/skew,0,"
+                      f"rebalances={res.rebalances}"
+                      f"_restore_ratio={res.throughput_restore_ratio:.3f}"
+                      f"_gate={scn.restore_throughput_factor:g}"
+                      f"_imbalance={res.final_load_imbalance:.3f}"
+                      f"_hot_replicas={hot2}")
             if res.kv_pages_moved:
                 print(f"scenario/{name}[{mode}]/kv,0,"
                       f"pages_moved={res.kv_pages_moved}"
@@ -170,6 +190,16 @@ def main(argv=None) -> int:
                 and r.get("client", {}).get("error_events", 0)):
             bad.append(f"{key}: {r['client']['error_events']} client error "
                        f"events on a fence/rejoin scenario (must be 0)")
+        # throughput-restore gate (hard): recovery must restore the skewed
+        # scenarios' throughput, not just expert coverage — a popularity-
+        # blind planner re-covers every expert and still fails this
+        gate = _restore_gate(r["name"])
+        if (gate > 0 and not r["fixed_membership"]
+                and not r["coverage_loss"]
+                and r.get("throughput_restore_ratio", -1.0) < gate):
+            bad.append(f"{key}: throughput restored to "
+                       f"{r.get('throughput_restore_ratio', -1.0):.3f}x of "
+                       f"pre-fault, below the {gate:g}x gate")
     out = {
         "meta": {
             "smoke": args.smoke,

@@ -43,6 +43,7 @@ class MembershipState:
     version: jax.Array          # int32[]          bumped on every patch
     rank_host: jax.Array        # int32[world]     fault-domain: host of rank
     rank_switch: jax.Array      # int32[world]     fault-domain: switch of host
+    expert_load: jax.Array      # float32[E]       EMA routing mass (sums to 1)
 
     @property
     def world(self) -> int:
@@ -108,6 +109,11 @@ class PeerTable:
         self.entries = [PeerEntry(rank=r) for r in range(world)]
         self.slot_to_expert = np.full((self.num_slots,), -1, np.int32)
         self.version = 0
+        # per-expert routing-mass EMA (popularity tracking). Advisory state:
+        # the placement/repair planners read it, but updating it bumps no
+        # version — only membership mutations do.
+        self.expert_load = (np.ones((num_experts,), np.float32)
+                            / max(num_experts, 1))
         # fault-domain layout (rank -> host -> switch); a table built
         # without one gets the degenerate flat tree (every rank its own
         # host) so domain-aware planning reduces to the old behavior
@@ -198,6 +204,7 @@ class PeerTable:
             version=put(np.int32(self.version)),
             rank_host=put(self.topology.rank_host_array()),
             rank_switch=put(self.topology.rank_switch_array()),
+            expert_load=put(self.expert_load.astype(np.float32)),
         )
 
     def clone(self) -> "PeerTable":
@@ -206,6 +213,7 @@ class PeerTable:
         t.entries = [dataclasses.replace(e) for e in self.entries]
         t.slot_to_expert = self.slot_to_expert.copy()
         t.version = self.version
+        t.expert_load = self.expert_load.copy()
         return t
 
 

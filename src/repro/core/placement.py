@@ -87,7 +87,11 @@ def eplb_place(
     # host this expert (anti-affinity), falling back to (a) only.
     # Preference: a slot that already held this expert (Tier-1 reuse).
     per_replica = load / r
-    order = np.argsort(-per_replica)
+    # Stable sort: tied per-replica loads resolve by expert index, so the
+    # placement is a pure function of (load, active, prev) — not of float
+    # noise or the sort algorithm's whims. The skew property suite asserts
+    # byte-identical output under tied loads.
+    order = np.argsort(-per_replica, kind="stable")
     rank_load = np.zeros((world,), np.float64)
     rcap = np.ones(world) if rank_capacity is None else np.maximum(
         np.asarray(rank_capacity, np.float64), 1e-3)
@@ -104,6 +108,13 @@ def eplb_place(
         for rr in active_ranks:
             for s in range(rr * slots_per_rank, (rr + 1) * slots_per_rank):
                 e = int(prev[s])
+                # never PIN two replicas of one expert on one rank: a
+                # degraded interim placement may have doubled up (last-
+                # resort fallback below), and blindly reusing the double
+                # would freeze the hot-spot past the rank's rejoin
+                if e >= 0 and any(p // slots_per_rank == rr
+                                  for p in replicas[e]):
+                    continue
                 if e >= 0 and budget[e] > 0 and s in free[int(rr)]:
                     s2e[s] = e
                     replicas[e].append(s)
@@ -151,6 +162,13 @@ def eplb_place(
 
 def placement_overlap(a: np.ndarray, b: np.ndarray) -> float:
     """Fraction of slots whose expert is unchanged (Tier-1 reuse rate)."""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.shape != b.shape:
+        raise ValueError(
+            f"placement_overlap: shape mismatch {a.shape} vs {b.shape}")
+    if a.size == 0:
+        return 0.0
     both = (a >= 0) & (b >= 0)
     if not both.any():
         return 0.0

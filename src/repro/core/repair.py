@@ -61,6 +61,8 @@ def plan_repair(
     bytes_per_slot: int = 0,
     source_active: Optional[np.ndarray] = None,
     topology=None,
+    load: Optional[np.ndarray] = None,     # float[E] expert load (EMA);
+                                           # orders transfers hot-first
 ) -> RepairPlan:
     """``active`` gates transfer *destinations*; ``source_active`` (defaults
     to ``active``) gates Tier-2 *sources*. A planned drain passes the
@@ -74,7 +76,16 @@ def plan_repair(
     destination's own host (ICI) beats one under the same switch (host
     NIC), which beats a cross-switch copy (spine) — the paper's transfer
     hierarchy applied to source *choice*, with round-robin load-spreading
-    inside the winning proximity class."""
+    inside the winning proximity class.
+
+    ``load`` (per-expert routing mass, any positive scale) orders the
+    Tier-2/Tier-3 transfer list by urgency: transfers that restore
+    *coverage* (the expert has no Tier-1 slot left, so it serves nothing
+    until a copy lands) come first, hottest expert first, then the
+    remaining rebalancing transfers hottest-first. The ``tier2``/``tier3``
+    lists are emitted in execution order, so the first entry is the first
+    transfer on the wire — the skew tests assert a hot expert that lost
+    every replica is the very first Tier-2 gather."""
     num_slots = len(new_slot_to_expert)
     active = np.asarray(active, bool)
     source_active = active if source_active is None \
@@ -92,7 +103,11 @@ def plan_repair(
             live_sources.setdefault(e, []).append(s)
 
     plan = RepairPlan(num_slots=num_slots, bytes_per_slot=bytes_per_slot)
-    rr: dict[int, int] = {}  # round-robin cursor per expert over its sources
+
+    # Pass 1: classify destinations. Tier-1 slots cost nothing, so they are
+    # recorded immediately; actual transfers are collected and ordered below.
+    transfers: list[tuple[int, int]] = []   # (dst slot, expert)
+    tier1_experts: set[int] = set()
     for s in range(num_slots):
         if not active[rank_of(s)]:
             if old_slot_to_expert[s] >= 0:
@@ -103,7 +118,26 @@ def plan_repair(
             continue
         if int(old_slot_to_expert[s]) == e:
             plan.tier1.append(s)                              # Tier 1
+            tier1_experts.add(e)
             continue
+        transfers.append((s, e))
+
+    # Pass 2: order transfers by urgency — coverage-restoring copies (the
+    # expert serves NOTHING until one lands) before rebalancing copies,
+    # hottest expert first inside each class, destination slot as the
+    # deterministic tie-break.
+    if load is not None:
+        w = np.maximum(np.asarray(load, np.float64), 0.0)
+
+        def hot(e: int) -> float:
+            return float(w[e]) if e < len(w) else 0.0
+    else:
+        def hot(e: int) -> float:
+            return 0.0
+    transfers.sort(key=lambda de: (de[1] in tier1_experts, -hot(de[1]), de[0]))
+
+    rr: dict[int, int] = {}  # round-robin cursor per expert over its sources
+    for s, e in transfers:
         srcs = [x for x in live_sources.get(e, ())
                 if source_active[rank_of(x)]]                 # atomic re-check
         if srcs:

@@ -27,6 +27,11 @@ Schedule DSL — one directive per line, ``#`` comments allowed::
     @12.0 undrain 1           # bring the drained rank back
     @5.0  scale down 6 7      # elastic shrink: decommission ranks 6 and 7
     @20.0 scale up 6 7        # elastic regrow: relaunch + deferred join
+    @3.0  skew 0 1 x0.8       # router skew: EXPERTS 0 and 1 now take 80%
+                              #   of routing mass (rest spread uniformly)
+    @25.0 skew                # reset the router distribution to uniform
+    @8.0  rebalance           # popularity-driven re-place over the active
+                              #   set (rank-less planned transition)
 
 ``fail``/``suspect``/``partition``/``heal`` actions are fed to the
 FailureInjector up front (``host:N`` / ``switch:N`` tokens expand through
@@ -59,7 +64,7 @@ from typing import Iterable, Optional
 from repro.core.topology import DOMAIN_KINDS, FaultDomainTree
 
 VALID_OPS = ("fail", "slow", "restore", "suspect", "partition", "heal",
-             "drain", "undrain", "scale")
+             "drain", "undrain", "scale", "skew", "rebalance")
 SCALE_DIRECTIONS = ("down", "up")
 #: ``fail`` kinds the DSL accepts (subset of failure.FAILURE_KINDS — the
 #: others have their own ops)
@@ -72,8 +77,10 @@ DOMAIN_OPS = ("fail", "partition")
 class Action:
     t: float
     op: str                      # one of VALID_OPS
-    ranks: tuple[int, ...]
-    factor: float = 1.0          # slowdown (op=="slow") / duration ("suspect")
+    ranks: tuple[int, ...]       # rank ids — except op=="skew", where the
+                                 # tokens name EXPERTS (the hot set)
+    factor: float = 1.0          # slowdown (op=="slow") / duration
+                                 # ("suspect") / hot mass share ("skew")
     direction: str = ""          # "down" | "up"       (op == "scale")
     domains: tuple[str, ...] = ()  # "host:N"/"switch:N" (fail/partition)
     kind: str = ""               # "sigkill" | "hang"  (op == "fail")
@@ -86,7 +93,7 @@ class Action:
         if self.op == "fail" and self.kind and self.kind != "sigkill":
             toks.append(f"kind={self.kind}")
         line = " ".join([head] + toks)
-        if self.op in ("slow", "suspect"):
+        if self.op in ("slow", "suspect") or (self.op == "skew" and self.ranks):
             line += f" x{self.factor:g}"
         return line
 
@@ -126,8 +133,9 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
                     f"{SCALE_DIRECTIONS} in {raw!r}")
             direction = rank_toks[0]
             rank_toks = rank_toks[1:]
-        if op in ("slow", "suspect"):
-            what = "xFACTOR" if op == "slow" else "xDURATION"
+        if op in ("slow", "suspect") or (op == "skew" and rank_toks):
+            what = {"slow": "xFACTOR", "suspect": "xDURATION",
+                    "skew": "xMASS"}[op]
             if not rank_toks or not rank_toks[-1].startswith("x"):
                 raise ValueError(
                     f"line {lineno}: {op!r} needs a trailing {what} "
@@ -139,7 +147,14 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
                     f"line {lineno}: bad factor in {raw!r}") from None
             if factor <= 0:
                 raise ValueError(f"line {lineno}: factor must be > 0 in {raw!r}")
+            if op == "skew" and factor >= 1:
+                raise ValueError(
+                    f"line {lineno}: skew mass must be < 1 in {raw!r}")
             rank_toks = rank_toks[:-1]
+            if op == "skew" and not rank_toks:
+                raise ValueError(
+                    f"line {lineno}: skew with a mass needs expert ids "
+                    f"in {raw!r}")
         if op == "fail":
             kept = []
             for tok in rank_toks:
@@ -175,7 +190,13 @@ def parse_schedule(text: str) -> tuple[Action, ...]:
                 else:
                     kept.append(tok)
             rank_toks = kept
-        if not rank_toks and not domains and op != "heal":
+        # rank-less forms: `heal` (whole partition), `skew` (reset to
+        # uniform), `rebalance` (whole active set — never takes ranks)
+        if op == "rebalance" and rank_toks:
+            raise ValueError(
+                f"line {lineno}: 'rebalance' takes no ranks in {raw!r}")
+        if not rank_toks and not domains and op not in ("heal", "skew",
+                                                        "rebalance"):
             raise ValueError(f"line {lineno}: no ranks in {raw!r}")
         try:
             ranks = tuple(int(x) for x in rank_toks)
@@ -219,6 +240,10 @@ class Scenario:
     warmup_s: tuple[float, float, float, float] = (1.0, 1.0, 2.0, 1.0)
     max_new_tokens: int = 64         # per request fed by the runner
     expect_coverage_loss: bool = False
+    # when > 0 the runner asserts post-recovery throughput returns to at
+    # least this fraction of the pre-fault steady rate — i.e. recovery
+    # restored *throughput*, not just expert coverage
+    restore_throughput_factor: float = 0.0
 
     @property
     def actions(self) -> tuple[Action, ...]:
@@ -243,15 +268,26 @@ class Scenario:
 
     @property
     def has_planned(self) -> bool:
-        """True when the schedule issues planned transitions
-        (drain/undrain/scale) through the control plane."""
+        """True when the schedule issues rank-targeted planned transitions
+        (drain/undrain/scale) through the control plane.  Rank-less
+        ``rebalance`` is tracked separately via :attr:`has_rebalance`."""
         return any(a.op in ("drain", "undrain", "scale")
                    for a in self.actions)
+
+    @property
+    def has_rebalance(self) -> bool:
+        return any(a.op == "rebalance" for a in self.actions)
+
+    @property
+    def has_skew(self) -> bool:
+        return any(a.op == "skew" for a in self.actions)
 
     def validate(self) -> None:
         topo = self.topology
         for a in self.actions:
-            if any(r >= self.world for r in a.ranks):
+            # skew tokens are expert ids, bounded by the model config the
+            # runner picks, not by the fleet size — checked at apply time
+            if a.op != "skew" and any(r >= self.world for r in a.ranks):
                 raise ValueError(
                     f"scenario {self.name}: rank {max(a.ranks)} out of range "
                     f"for world={self.world}")
@@ -537,4 +573,64 @@ register(Scenario(
     world=6, slots_per_rank=1,        # 2 surviving slots < 4 experts
     horizon_s=12.0,
     expect_coverage_loss=True,
+))
+
+# -- router-skew / popularity scenarios -------------------------------------
+#
+# In these schedules the `skew` tokens are EXPERT ids (the model the
+# runner builds has 4 experts).  The throughput gate
+# (restore_throughput_factor) is what distinguishes them from the plain
+# fault scenarios above: recovery must restore the serving RATE, not
+# merely expert coverage — a popularity-blind placement passes coverage
+# checks while hot-expert replicas stay under-provisioned.
+
+register(Scenario(
+    name="static_hot_expert",
+    description="A hot expert pair takes 80% of routing mass; a rebalance "
+                "adapts the placement, then the fault lands on hot-replica "
+                "ranks. Recovery + rejoin must restore throughput to >=90% "
+                "of the pre-fault steady rate — a popularity-blind planner "
+                "restores coverage but not rate.",
+    schedule="""
+        @1.0  skew 0 1 x0.8
+        @6.0  rebalance        # placement follows the learned popularity
+        @10.0 fail 1           # takes out hot-expert replicas
+    """,
+    horizon_s=40.0,
+    restore_throughput_factor=0.9,
+))
+
+register(Scenario(
+    name="drifting_hotspot",
+    description="The hot set drifts ({0,1} -> {1,2}) mid-run; the EMA "
+                "tracker must follow the drift and each rebalance re-place "
+                "against the CURRENT distribution, then a fault lands on "
+                "the new hotspot's replicas.",
+    schedule="""
+        @1.0  skew 0 1 x0.8
+        @8.0  rebalance
+        @14.0 skew 1 2 x0.8    # hotspot drifts
+        @22.0 rebalance        # must chase the drift, not the old EMA
+        @26.0 fail 2
+    """,
+    horizon_s=50.0,
+    restore_throughput_factor=0.9,
+))
+
+register(Scenario(
+    name="adversarial_skew_flip",
+    description="The router flips the hot set to the OPPOSITE experts "
+                "right after a rebalance commits (worst case for a "
+                "popularity tracker), then a fault lands before the next "
+                "rebalance. The follow-up rebalance must still converge "
+                "within the horizon.",
+    schedule="""
+        @1.0  skew 0 1 x0.8
+        @6.0  rebalance
+        @6.5  skew 2 3 x0.8    # adversary inverts the hotspot immediately
+        @16.0 rebalance        # EMA has re-learned by now
+        @20.0 fail 4
+    """,
+    horizon_s=55.0,
+    restore_throughput_factor=0.85,
 ))

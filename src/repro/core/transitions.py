@@ -29,10 +29,12 @@ On top of the transaction sit the :class:`TransitionPolicy` implementations
 :class:`FullRestartPolicy` for the fixed-membership baseline — previously
 an attribute-monkeypatch the serving engine performed on the runtime) and
 the :class:`ControlPlane` facade exposing *planned* operations: ``drain``,
-``undrain``, ``scale_down``, ``scale_up``. A drain is a replan + transfer
-with no detect/drain pause (the departing rank is still alive, so it even
-serves as a Tier-2 source); a scale-up rides the deferred-join warmup
-path. Lazarus/ReviveMoE-style planned elasticity and crash recovery are
+``undrain``, ``scale_down``, ``scale_up``, ``rebalance``. A drain is a
+replan + transfer with no detect/drain pause (the departing rank is still
+alive, so it even serves as a Tier-2 source); a scale-up rides the
+deferred-join warmup path; a rebalance re-places replicas against the
+tracked per-expert routing mass without touching membership at all.
+Lazarus/ReviveMoE-style planned elasticity and crash recovery are
 the same substrate — this module is where that substrate lives.
 """
 from __future__ import annotations
@@ -52,7 +54,8 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard (runtime hosts us)
 
 #: Every way membership can change. "bootstrap" is the initial publish.
 TRANSITION_KINDS = ("bootstrap", "fault", "join", "straggler", "drain",
-                    "undrain", "scale_down", "scale_up", "restart", "heal")
+                    "undrain", "scale_down", "scale_up", "restart", "heal",
+                    "rebalance")
 
 
 class TransitionAborted(RuntimeError):
@@ -263,7 +266,8 @@ class MembershipTransaction:
             self.table.slots_per_rank, host.backup,
             bytes_per_slot=self.bytes_per_slot(),
             source_active=source_active,
-            topology=self.table.topology)
+            topology=self.table.topology,
+            load=host.expert_load)
         return self.repair_plan
 
     def revalidate(self) -> RepairPlan:
@@ -392,6 +396,7 @@ class TransitionPolicy(Protocol):
     def on_undrain(self, rt: "ElasticEPRuntime", ranks: list[int]) -> dict: ...
     def on_scale_down(self, rt: "ElasticEPRuntime", ranks: list[int]) -> dict: ...
     def on_scale_up(self, rt: "ElasticEPRuntime", ranks: list[int]) -> dict: ...
+    def on_rebalance(self, rt: "ElasticEPRuntime", ranks: list[int]) -> dict: ...
 
 
 class ElasticPolicy:
@@ -420,6 +425,9 @@ class ElasticPolicy:
 
     def on_scale_up(self, rt, ranks):
         return {"mode": "elastic", **rt.scale_up_ranks(ranks)}
+
+    def on_rebalance(self, rt, ranks):
+        return {"mode": "elastic", **rt.rebalance_placement()}
 
 
 class FullRestartPolicy:
@@ -469,6 +477,13 @@ class FullRestartPolicy:
     def on_scale_up(self, rt, ranks):
         return {"mode": "restart"}
 
+    def on_rebalance(self, rt, ranks):
+        # A static placement cannot move replicas toward the hot experts;
+        # a 348 s rebuild would come back with the same table, so the only
+        # honest answer is "can't" — which is exactly the contrast the
+        # skew scenarios measure.
+        return {"mode": "restart"}
+
 
 # ---------------------------------------------------------------------------
 # ControlPlane facade: planned operations
@@ -476,7 +491,7 @@ class FullRestartPolicy:
 
 #: Control-event kinds the planned operations enqueue (handled by
 #: ``ElasticEPRuntime.pump_control`` between forward passes).
-PLANNED_OPS = ("drain", "undrain", "scale_down", "scale_up")
+PLANNED_OPS = ("drain", "undrain", "scale_down", "scale_up", "rebalance")
 
 
 def _flatten(ranks) -> list[int]:
@@ -492,7 +507,8 @@ def _flatten(ranks) -> list[int]:
 class ControlPlane:
     """Planned-operations facade over the transition machinery.
 
-    ``drain``/``undrain``/``scale_down``/``scale_up`` dispatch through the
+    ``drain``/``undrain``/``scale_down``/``scale_up``/``rebalance``
+    dispatch through the
     runtime's :class:`TransitionPolicy` immediately (returning the handled
     ranks and the outcome mode); the ``request*`` variants enqueue a
     control event so the transition lands at the next serving-step
@@ -525,6 +541,12 @@ class ControlPlane:
         if op == "scale_up":
             return [r for r in ranks if not entries[r].active
                     and not rt.controller.is_recovering(r)]
+        if op == "rebalance":
+            # rank-less: the op targets the whole active set (any requested
+            # ranks are ignored); "handled" is the set whose replicas may
+            # move, so the pump sees a non-empty result when serving ranks
+            # exist at all
+            return [r for r in range(rt.table.world) if entries[r].active]
         raise ValueError(f"unknown planned op {op!r}")
 
     def dispatch(self, op: str, ranks) -> tuple[list[int], Optional[str]]:
@@ -568,6 +590,14 @@ class ControlPlane:
     def scale_up(self, *ranks):
         """Elastic regrow: rides the deferred-join warmup path."""
         return self.dispatch("scale_up", ranks)
+
+    def rebalance(self):
+        """Popularity-driven re-place: EPLB over the *current* active set
+        against the tracked per-expert routing mass, committed through the
+        same transaction path as a drain (epoch bump, byte-identical
+        abort) — but with membership untouched, so there is no detect, no
+        warmup, and no rank leaves. Rank-less by construction."""
+        return self.dispatch("rebalance", ())
 
     # -- deferred (step-boundary) request ------------------------------------
     def request(self, op: str, ranks) -> None:

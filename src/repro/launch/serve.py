@@ -64,6 +64,11 @@ def main(argv=None):
     ap.add_argument("--scale-down-at", type=float, default=None)
     ap.add_argument("--scale-up-at", type=float, default=None,
                     help="re-add the scaled-down rank(s) (deferred join)")
+    ap.add_argument("--rebalance-at", type=float, action="append",
+                    default=None,
+                    help="popularity rebalance: re-place expert replicas "
+                    "against the tracked routing load at this time (rank-"
+                    "less planned transition; repeatable)")
     ap.add_argument("--fixed-membership", action="store_true",
                     help="full-restart baseline instead of EEP (a "
                     "TransitionPolicy: planned drains become full restarts "
@@ -149,6 +154,8 @@ def main(argv=None):
     if args.scale_up_at is not None and args.scale_down_rank:
         commands.append({"cmd": "scale_up", "ranks": args.scale_down_rank,
                          "at": args.scale_up_at})
+    for t in (args.rebalance_at or []):
+        commands.append({"cmd": "rebalance", "at": t})
     for command in commands:
         resp = fe.admin.execute(command)
         print(f"admin> {json.dumps(command)}")

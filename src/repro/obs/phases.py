@@ -30,6 +30,8 @@ phases run off the serving path):
                    transfer, no detect window                  (critical)
   scale-down       planned elastic shrink (same mechanics as
                    drain; tracked separately)                  (critical)
+  rebalance        popularity-driven re-place toward the
+                   tracked hot experts; membership untouched   (background)
   kv-migrate       departing ranks' KV pages ship to the
                    survivors, nested INSIDE the drain /
                    scale-down window before its table patch    (nested)
@@ -68,8 +70,14 @@ PHASES = ("detect", "replan", "repair-transfer", "warmup", "table-patch",
 #: the control plane (repro.core.transitions). A ``drain`` / ``scale-down``
 #: span covers the whole planned pause — replan + weight transfer, with no
 #: detect window (the departing rank is alive and cooperating). Undrains
-#: and scale-ups reuse ``warmup``/``table-patch``/``rejoin``.
-PLANNED_PHASES = ("drain", "scale-down")
+#: and scale-ups reuse ``warmup``/``table-patch``/``rejoin``. A
+#: ``rebalance`` span covers a popularity-driven re-place (replicas move
+#: toward the tracked hot experts; membership itself is untouched) — it is
+#: deliberately NOT critical-path: the extra replica copies stream in the
+#: background while every rank keeps serving from its current placement,
+#: and only the final table patch (charged to the span's recorded pause)
+#: flips routing.
+PLANNED_PHASES = ("drain", "scale-down", "rebalance")
 #: Sub-phases: timed segments nested inside another phase's span. The KV
 #: page transfer of a planned drain (serving data plane: PagedKVPool
 #: residency moving to the survivors) runs inside the drain/scale-down
@@ -89,7 +97,8 @@ ALL_PHASES = (PHASES + PLANNED_PHASES + SUB_PHASES + FENCE_PHASES
 #: successive spans (by start time) must be non-decreasing.
 _STAGE = {"detect": 0, "replan": 1, "repair-transfer": 1, "warmup": 2,
           "table-patch": 3, "rejoin": 3, "full-restart": 0,
-          "drain": 1, "scale-down": 1, "kv-migrate": 1, "fence": 1}
+          "drain": 1, "scale-down": 1, "rebalance": 1, "kv-migrate": 1,
+          "fence": 1}
 
 #: Critical-path phases pause every healthy rank, so they are globally
 #: serial: no two such spans may overlap, across incidents included.

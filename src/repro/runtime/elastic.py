@@ -33,7 +33,7 @@ How the runtime reacts to transitions is a pluggable
 ``FullRestartPolicy`` = the fixed-membership baseline), selected at
 serving-engine construction. Planned operations are issued through
 ``self.control`` (``repro.core.transitions.ControlPlane``): ``drain`` /
-``undrain`` / ``scale_down`` / ``scale_up``.
+``undrain`` / ``scale_down`` / ``scale_up`` / ``rebalance``.
 
 Telemetry: every transition is recorded through ``self.obs``
 (``repro.obs.phases.PhaseClock``) as phase-tagged spans/events using the
@@ -119,6 +119,9 @@ class ControlSummary:
     undrained: list[int] = field(default_factory=list)
     scaled_down: list[int] = field(default_factory=list)
     scaled_up: list[int] = field(default_factory=list)
+    rebalanced: list[int] = field(default_factory=list)  # ranks whose
+                                   # replicas a popularity rebalance may move
+                                   # (no rank leaves; nothing to evict)
     restarts: list[int] = field(default_factory=list)   # baseline bounces
 
 
@@ -133,7 +136,8 @@ class ElasticEPRuntime:
                  expert_load_ema: float = 0.9,
                  base_throughput: float = 7200.0,
                  dispatch: Optional[str] = None,
-                 policy: Optional[TransitionPolicy] = None):
+                 policy: Optional[TransitionPolicy] = None,
+                 popularity_aware: bool = True):
         self.cfg = cfg
         self.params = params
         self.table = table
@@ -170,6 +174,15 @@ class ElasticEPRuntime:
         self.expert_load = np.ones(
             (cfg.moe.num_experts,), np.float64) if cfg.is_moe else None
         self.load_ema = expert_load_ema
+        #: when False the runtime is deliberately popularity-BLIND: the EMA
+        #: never learns the router distribution, so every planner input
+        #: stays uniform — the contrast arm of the skew regression tests.
+        self.popularity_aware = popularity_aware
+        #: ground-truth router distribution the simulated traffic follows
+        #: (set by the scenario `skew` op; None/uniform = no skew). This is
+        #: what the *world* does; ``expert_load`` is what the runtime has
+        #: *learned* about it.
+        self.router_skew: Optional[np.ndarray] = None
 
         # DRAM-backed backup service (paper SS5.2)
         self.backup = BackupStore(num_nodes=backup_nodes)
@@ -251,12 +264,78 @@ class ElasticEPRuntime:
         return self.base_throughput * self.active_fraction()
 
     def update_expert_load(self, load) -> None:
-        if self.expert_load is None:
+        """Fold one step's per-expert routing mass into the EMA the
+        planners read, and mirror the normalized distribution into the
+        peer table so every commit publishes it
+        (``MembershipState.expert_load``). A popularity-blind runtime
+        (``popularity_aware=False``) discards the observation — its
+        planners keep seeing the uniform prior, which is exactly the
+        contrast the skew gates measure."""
+        if self.expert_load is None or not self.popularity_aware:
             return
         load = np.asarray(load, np.float64)
         if load.sum() > 0:
             self.expert_load = (self.load_ema * self.expert_load
                                 + (1 - self.load_ema) * load)
+            self.table.expert_load = (
+                self.expert_load / self.expert_load.sum()).astype(np.float32)
+
+    # -- router skew (simulated traffic popularity) ------------------------
+    def set_router_skew(self, weights) -> None:
+        """Set the ground-truth router distribution the simulated traffic
+        follows (scenario ``skew`` op). ``None`` resets to uniform."""
+        if self.expert_load is None:
+            return
+        if weights is None:
+            self.router_skew = None
+            return
+        w = np.maximum(np.asarray(weights, np.float64), 0.0)
+        if w.shape != self.expert_load.shape or w.sum() <= 0:
+            raise ValueError(f"skew weights must be positive with shape "
+                             f"{self.expert_load.shape}, got {w!r}")
+        self.router_skew = w / w.sum()
+
+    def router_distribution(self) -> Optional[np.ndarray]:
+        """The true per-expert routing mass of current traffic (uniform
+        unless a skew was injected); None for non-MoE archs."""
+        if self.expert_load is None:
+            return None
+        if self.router_skew is not None:
+            return self.router_skew
+        e = len(self.expert_load)
+        return np.full((e,), 1.0 / e)
+
+    def expert_replica_counts(self) -> dict[int, int]:
+        """Active replicas per logical expert under the current placement."""
+        if self.expert_load is None:
+            return {}
+        return {e: len(slots)
+                for e, slots in self.table.expert_to_slots().items()}
+
+    def load_imbalance(self) -> float:
+        """max/mean per-rank load of the CURRENT placement serving the TRUE
+        router distribution (each expert's mass splits evenly over its
+        active replicas). 1.0 = perfectly balanced; the serving engine
+        divides modeled throughput by this, so a hot expert crammed onto
+        too few replicas costs real (simulated) tokens — which is what the
+        skew scenarios' throughput-restore gates measure."""
+        dist = self.router_distribution()
+        if dist is None:
+            return 1.0
+        e2s = self.table.expert_to_slots()
+        spr = self.table.slots_per_rank
+        rank_load = np.zeros((self.table.world,), np.float64)
+        for e, slots in e2s.items():
+            if not slots:
+                continue
+            share = dist[e] / len(slots)
+            for s in slots:
+                rank_load[s // spr] += share
+        act = self.table.active_mask
+        if not act.any() or rank_load[act].sum() <= 0:
+            return 1.0
+        mean = rank_load[act].mean()
+        return float(rank_load[act].max() / mean) if mean > 0 else 1.0
 
     # ------------------------------------------------------------------
     # The failure -> shrink -> repair path (paper SS3.4/3.5), generalized to
@@ -426,8 +505,15 @@ class ElasticEPRuntime:
                             if extra > 0:
                                 self._advance(extra)
                                 phases["weight_transfer"] += extra
-                    xfer_span.meta.update(tier2_bytes=plan.tier2_bytes,
-                                          tier3_bytes=plan.tier3_bytes)
+                    # transfer order (experts, wire order): the plan emits
+                    # tier2/tier3 hot-coverage-first, and the skew tests
+                    # assert the hottest uncovered expert ships first
+                    s2e = txn.placement.slot_to_expert
+                    xfer_span.meta.update(
+                        tier2_bytes=plan.tier2_bytes,
+                        tier3_bytes=plan.tier3_bytes,
+                        tier2_experts=[int(s2e[d]) for d, _ in plan.tier2],
+                        tier3_experts=[int(e) for _, e in plan.tier3])
                 txn.apply()     # aborts if the plan lost experts
                 if pending:
                     continue
@@ -549,7 +635,12 @@ class ElasticEPRuntime:
                 handled, mode = self.control.dispatch(ev.kind, ev.ranks)
                 if not handled or mode == "aborted":
                     continue
-                if mode == "restart":
+                if ev.kind == "rebalance":
+                    # a fixed placement cannot move replicas: the baseline
+                    # policy's answer is a genuine no-op, not a bounce
+                    if mode != "restart":
+                        summary.rebalanced += handled
+                elif mode == "restart":
                     summary.restarts += handled
                 elif ev.kind == "drain":
                     summary.drained += handled
@@ -683,6 +774,51 @@ class ElasticEPRuntime:
                                     if txn.kv_manifest else 0),
                     kv_bytes_moved=(txn.kv_manifest.bytes_moved
                                     if txn.kv_manifest else 0))
+        return {"pause_s": pause, "epoch": self.epoch}
+
+    def rebalance_placement(self) -> dict:
+        """Popularity-driven re-place: EPLB over the CURRENT active set
+        against the tracked per-expert load EMA, committed through the
+        standard transaction (epoch bump; byte-identical abort). No rank
+        joins or leaves, so there is no detect window, no warmup and
+        nothing to evict — the extra replica copies stream in the
+        background (the non-critical ``rebalance`` span) and only the
+        final table patch, reported as ``pause_s``, pauses serving."""
+        incident = self.obs.incident("rebalance")
+        txn = self.begin("rebalance", incident=incident)
+        before = self.expert_replica_counts()
+        try:
+            with self.obs.span("rebalance", incident) as sp:
+                plan = txn.plan()
+                self._advance(self.cost_model.coordinate_s)
+                if plan is not None:
+                    xfer = self.cost_model.recovery_seconds(
+                        plan, self.table.world,
+                        self.table.slots_per_rank)["weight_transfer"]
+                    if xfer > 0:
+                        self._advance(xfer)
+                    sp.meta.update(tier2_bytes=plan.tier2_bytes,
+                                   tier3_bytes=plan.tier3_bytes,
+                                   moved=len(plan.tier2) + len(plan.tier3))
+                txn.commit()
+                self._advance(self.cost_model.join_patch_s)
+        except TransitionAborted as e:
+            self.record("transition_abort", _incident=incident,
+                        op="rebalance", ranks=[], **e.detail)
+            e.recorded = True
+            raise
+        pause = self.cost_model.join_patch_s   # only the table patch pauses
+        last = txn.plans[-1] if txn.plans else None
+        self.record("rebalance", _incident=incident,
+                    pause_s=round(pause, 6), epoch=self.epoch,
+                    mix=last.source_mix() if last else {},
+                    tier2_bytes=last.tier2_bytes if last else 0,
+                    tier3_bytes=last.tier3_bytes if last else 0,
+                    replicas_before={int(k): int(v)
+                                     for k, v in before.items()},
+                    replicas_after={int(k): int(v) for k, v in
+                                    self.expert_replica_counts().items()},
+                    imbalance=round(self.load_imbalance(), 4))
         return {"pause_s": pause, "epoch": self.epoch}
 
     def undrain_ranks(self, ranks: list[int]) -> dict:

@@ -406,7 +406,8 @@ class AdminGateway:
     """
 
     #: Planned membership transitions routed to the ControlPlane.
-    TRANSITIONS = ("drain", "undrain", "scale_down", "scale_up")
+    #: ``rebalance`` is rank-less (it targets the whole active set).
+    TRANSITIONS = ("drain", "undrain", "scale_down", "scale_up", "rebalance")
     #: Read-only queries answered from live runtime state.
     QUERIES = ("status", "epoch", "incidents")
     COMMANDS = TRANSITIONS + QUERIES
@@ -450,13 +451,22 @@ class AdminGateway:
     def _transition(self, cmd: str, command: dict) -> dict:
         rt = self.fe.rt
         ranks = command.get("ranks")
-        if not isinstance(ranks, (list, tuple)) or not ranks:
-            raise ValueError(f"{cmd} needs a non-empty 'ranks' list")
-        ranks = [int(r) for r in ranks]
-        bad = [r for r in ranks if not 0 <= r < rt.table.world]
-        if bad:
-            raise ValueError(f"ranks {bad} out of range for "
-                             f"world={rt.table.world}")
+        if cmd == "rebalance":
+            # rank-less: a popularity rebalance targets the whole active
+            # set; an explicit ranks list is a caller error (it would
+            # silently mean something else)
+            if ranks:
+                raise ValueError("rebalance takes no 'ranks' (it re-places "
+                                 "over the whole active set)")
+            ranks = []
+        else:
+            if not isinstance(ranks, (list, tuple)) or not ranks:
+                raise ValueError(f"{cmd} needs a non-empty 'ranks' list")
+            ranks = [int(r) for r in ranks]
+            bad = [r for r in ranks if not 0 <= r < rt.table.world]
+            if bad:
+                raise ValueError(f"ranks {bad} out of range for "
+                                 f"world={rt.table.world}")
         at = command.get("at")
         if at is not None:
             at = float(at)
@@ -498,6 +508,17 @@ class AdminGateway:
             "suspicion": rt.detector.suspicion_state(),
             "topology": rt.table.topology.to_json(),
             "fences": len(rt.fence_events),
+            # popularity surface: what the runtime has LEARNED about the
+            # router distribution (EMA, normalized), how the placement
+            # answers it (replicas per expert), and how balanced the
+            # result is (1.0 = every active rank equally loaded)
+            "expert_load": (None if rt.expert_load is None else
+                            [round(float(x), 6) for x in
+                             rt.expert_load / rt.expert_load.sum()]),
+            "expert_replicas": {str(e): n for e, n in
+                                sorted(rt.expert_replica_counts().items())},
+            "load_imbalance": round(rt.load_imbalance(), 6),
+            "popularity_aware": rt.popularity_aware,
         }
 
     def _epoch(self) -> dict:

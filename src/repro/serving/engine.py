@@ -276,6 +276,13 @@ class ServingEngine:
         if ctl.joined or ctl.undrained:
             self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
                                                rt.active_fraction()))
+        if ctl.rebalanced:
+            # popularity rebalance: no rank left, so nothing is evicted or
+            # preempted — the only serving-visible cost is the table-patch
+            # pause the runtime already charged. Drop a trace sample so the
+            # throughput trajectory shows the flip point.
+            self.trace.append(ThroughputSample(rt.clock.now(), 0.0,
+                                               rt.active_fraction()))
         if not self.fixed_membership:
             rt.observe_step_latencies(self.base_step_time)
             rt.mitigate_stragglers()
@@ -356,13 +363,28 @@ class ServingEngine:
         now = rt.clock.now()
         self.sched.step_complete(produced, now)
 
+        # --- popularity tracking: fold this step's routing mass into the
+        #     runtime's per-expert EMA (the planners' input). The simulated
+        #     router follows rt.router_skew (uniform unless a scenario
+        #     injected one), scaled by the live token count so heavier
+        #     steps weigh more — a popularity-blind runtime discards it. ---
+        dist = rt.router_distribution()
+        if dist is not None and active:
+            rt.update_expert_load(dist * len(active))
+
         # --- modeled step latency: wide-EP step time scales with the
-        #     reciprocal of the live-rank fraction (reduced capacity).
+        #     reciprocal of the live-rank fraction (reduced capacity) AND
+        #     with the placement's load imbalance — MoE decode is gated by
+        #     the most-loaded rank, so a hot expert squeezed onto too few
+        #     replicas costs real tokens even when coverage is nominal
+        #     (imbalance is exactly 1.0 under uniform traffic on a
+        #     balanced placement, leaving skew-free scenarios untouched).
         #     Replay-only steps right after an unplanned fault draw down
         #     the overlap budget instead of wall-clock: the speculative
         #     re-prefill ran inside the recovery pause (repair-transfer
         #     window), so the stall the client sees stops growing. ---
-        step_t = self.base_step_time / max(rt.active_fraction(), 1e-6)
+        step_t = (self.base_step_time * rt.load_imbalance()
+                  / max(rt.active_fraction(), 1e-6))
         charged = step_t
         if not produced and resume_replaying and self._overlap_budget > 0:
             hidden = min(charged, self._overlap_budget)

@@ -1,0 +1,314 @@
+"""Popularity-aware placement under router skew: hypothesis property suite
+plus the repair-ordering / placement_overlap edge cases.
+
+The properties pin down what `eplb_place` promises when fed a tracked load
+vector:
+  * full expert coverage for ANY load and failure pattern (or an explicit
+    infeasibility report),
+  * replica counts monotone non-decreasing in tracked load,
+  * the hot expert's replicas spread across distinct ranks AND hosts
+    whenever the fleet makes that feasible (anti-affinity),
+  * deterministic, byte-identical output under tied loads and under load
+    rescaling (the planner is a pure function of the normalized load).
+"""
+import numpy as np
+import pytest
+
+try:        # unlike the sibling suites, the unit tests below run even
+    #         without the dev extra — only the properties need hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):                # no-op decorators so the module
+        def deco(f):                   # still imports cleanly
+            return f
+        return deco
+
+    settings = given
+
+    class _StrategyStub:               # strategy expressions evaluate at
+        def __getattr__(self, name):   # decoration time; swallow them
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS,
+    reason="dev extra not installed: pip install -e .[dev]")
+
+from repro.core import eplb_place, make_initial_membership, plan_repair
+from repro.core.backup import BackupStore
+from repro.core.placement import placement_overlap
+from repro.core.topology import FaultDomainTree
+
+
+def _loads(draw, n):
+    vals = draw(st.lists(st.integers(1, 50), min_size=n, max_size=n))
+    return np.asarray(vals, np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Properties
+# ---------------------------------------------------------------------------
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(world=st.integers(2, 10), spr=st.integers(1, 3),
+       e_log=st.integers(2, 16), data=st.data())
+def test_property_skewed_coverage_any_failure(world, spr, e_log, data):
+    """For ANY load vector and ANY failure pattern: every expert keeps a
+    replica on an active rank, or EPLB reports infeasibility — popularity
+    weighting never trades coverage away."""
+    E = min(e_log, world * spr)
+    n_fail = data.draw(st.integers(0, world - 1))
+    failed = data.draw(st.permutations(range(world)))[:n_fail]
+    active = np.ones(world, bool)
+    active[list(failed)] = False
+    load = _loads(data.draw, E)
+    res = eplb_place(E, world, spr, active, load=load)
+    if active.sum() * spr < E:
+        assert res.infeasible
+        return
+    assert not res.infeasible
+    for e in range(E):
+        slots = res.replicas[e]
+        assert len(slots) >= 1
+        assert all(active[s // spr] for s in slots)
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(world=st.integers(2, 10), spr=st.integers(1, 3), data=st.data())
+def test_property_replicas_monotone_in_load(world, spr, data):
+    """A strictly hotter expert never gets FEWER replicas than a colder
+    one (replica counts are monotone in tracked load)."""
+    E = min(data.draw(st.integers(2, 12)), world * spr)
+    load = _loads(data.draw, E)
+    res = eplb_place(E, world, spr, np.ones(world, bool), load=load)
+    assert not res.infeasible
+    counts = np.array([len(res.replicas[e]) for e in range(E)])
+    norm = load / load.sum()
+    for i in range(E):
+        for j in range(E):
+            if norm[i] > norm[j] + 1e-12:
+                assert counts[i] >= counts[j], (
+                    f"load {norm[i]:.3f}>{norm[j]:.3f} but replicas "
+                    f"{counts[i]}<{counts[j]}")
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(world=st.integers(2, 12), spr=st.integers(1, 3), data=st.data())
+def test_property_hot_expert_anti_affinity(world, spr, data):
+    """The hottest expert's replicas land on distinct ranks — and distinct
+    HOSTS — whenever the fleet has enough of them (it places first into an
+    empty fleet, so anti-affinity is always feasible for it)."""
+    E = min(data.draw(st.integers(2, 12)), world * spr)
+    load = _loads(data.draw, E)
+    topo = FaultDomainTree(world, ranks_per_host=2, hosts_per_switch=2)
+    res = eplb_place(E, world, spr, np.ones(world, bool), load=load,
+                     topology=topo)
+    assert not res.infeasible
+    hot = int(np.argmax(load))  # ties resolve to the lowest index, same
+    #                             tie-break the stable planner sort uses
+    slots = res.replicas[hot]
+    ranks = {s // spr for s in slots}
+    assert len(ranks) == min(len(slots), world)
+    hosts = {topo.host_of(r) for r in ranks}
+    assert len(hosts) == min(len(slots), topo.num_hosts)
+
+
+@needs_hypothesis
+@settings(max_examples=60, deadline=None)
+@given(world=st.integers(2, 10), spr=st.integers(1, 3), data=st.data())
+def test_property_tied_loads_deterministic(world, spr, data):
+    """Byte-identical output on repeated calls — including under tied
+    loads, where an unstable sort would let float noise pick the order —
+    and invariant under rescaling (only the normalized load matters)."""
+    E = min(data.draw(st.integers(2, 12)), world * spr)
+    # force heavy ties: loads drawn from a tiny value set
+    vals = data.draw(st.lists(st.sampled_from([1.0, 2.0, 5.0]),
+                              min_size=E, max_size=E))
+    load = np.asarray(vals, np.float64)
+    a = eplb_place(E, world, spr, np.ones(world, bool), load=load)
+    b = eplb_place(E, world, spr, np.ones(world, bool), load=load.copy())
+    c = eplb_place(E, world, spr, np.ones(world, bool), load=load * 37.5)
+    assert np.array_equal(a.slot_to_expert, b.slot_to_expert)
+    assert np.array_equal(a.slot_to_expert, c.slot_to_expert)
+
+
+# ---------------------------------------------------------------------------
+# Unit: skewed placement shapes
+# ---------------------------------------------------------------------------
+
+
+def test_all_load_on_one_expert_caps_and_covers():
+    """Degenerate skew: one expert takes ~everything. It gets as many
+    replicas as the cap allows; every other expert still keeps coverage."""
+    E, world, spr = 4, 8, 2
+    load = np.full(E, 1e-9)
+    load[2] = 1.0
+    res = eplb_place(E, world, spr, np.ones(world, bool), load=load,
+                     max_replicas=6)
+    assert not res.infeasible
+    counts = {e: len(s) for e, s in res.replicas.items()}
+    assert counts[2] == 6                      # hot expert hits the cap
+    assert all(c >= 1 for c in counts.values())
+
+
+def test_uniform_load_matches_none():
+    """An explicitly uniform load vector is the same as no load at all."""
+    a = eplb_place(4, 8, 2, np.ones(8, bool))
+    b = eplb_place(4, 8, 2, np.ones(8, bool), load=np.ones(4))
+    assert np.array_equal(a.slot_to_expert, b.slot_to_expert)
+
+
+def test_reuse_never_pins_expert_twice_on_one_rank():
+    """A degraded interim placement that doubled an expert up on one rank
+    must not survive the next re-place via Tier-1 pinning when the fleet
+    has room to spread."""
+    E, world, spr = 4, 4, 2
+    prev = np.array([0, 0,   # rank 0 holds expert 0 twice (degraded relic)
+                     1, 2,
+                     3, 0,
+                     1, 2], np.int32)
+    res = eplb_place(E, world, spr, np.ones(world, bool),
+                     load=np.ones(E), prev_slot_to_expert=prev)
+    assert not res.infeasible
+    # every expert gets 2 replicas here; a clean spread (one per rank) is
+    # feasible, so the relic double must not be pinned back in
+    for e, slots in res.replicas.items():
+        ranks = [s // spr for s in slots]
+        assert len(set(ranks)) == len(ranks), (
+            f"expert {e} doubled on a rank: slots {slots}")
+
+
+# ---------------------------------------------------------------------------
+# Unit: placement_overlap edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_empty_inputs():
+    assert placement_overlap(np.array([], np.int32),
+                             np.array([], np.int32)) == 0.0
+
+
+def test_overlap_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="shape mismatch"):
+        placement_overlap(np.zeros(4, np.int32), np.zeros(6, np.int32))
+
+
+def test_overlap_all_inactive_slots():
+    a = np.full(8, -1, np.int32)
+    assert placement_overlap(a, a) == 0.0
+
+
+def test_overlap_accepts_lists():
+    assert placement_overlap([0, 1, 2, 3], [0, 1, 9, 3]) == 0.75
+
+
+# ---------------------------------------------------------------------------
+# Unit: repair ordering under load (hot coverage first on the wire)
+# ---------------------------------------------------------------------------
+
+
+def _expert_of(plan_dst, new_map):
+    return int(new_map[plan_dst])
+
+
+def test_repair_hot_total_loss_transfers_first():
+    """A fault kills EVERY replica of the hottest expert: restoring its
+    coverage must be the FIRST Tier-2 transfer on the wire, ahead of any
+    rebalancing copies of colder experts."""
+    spr = 2
+    old = np.array([0, 0,      # rank 0: both replicas of hot expert 0
+                    1, 2,      # rank 1
+                    3, 1,      # rank 2
+                    2, 3],     # rank 3
+                   np.int32)
+    active = np.array([False, True, True, True])
+    # survivors re-place: expert 0 must come back from... nowhere live —
+    # unless a backup exists. Make expert 0 live on rank 3 instead so the
+    # repair is a Tier-2 relocation with a live source.
+    old = np.array([0, 1,      # rank 0 dies (held hot 0 + a copy of 1)
+                    1, 2,
+                    3, 1,
+                    2, 0],     # last live replica of hot expert 0
+                   np.int32)
+    new = np.array([-1, -1,
+                    1, 2,
+                    3, 0,      # slot 5 re-covers hot expert 0 (Tier-2)
+                    2, 1],     # slot 7 re-covers expert 1 (also Tier-2)
+                   np.int32)
+    load = np.array([100.0, 1.0, 1.0, 1.0])
+    plan = plan_repair(old, new, active, spr, load=load)
+    assert plan.tier2, "expected GPU relocations"
+    first_dst, _ = plan.tier2[0]
+    assert _expert_of(first_dst, new) == 0, (
+        "hot expert's coverage-restoring copy must be first on the wire")
+
+
+def test_repair_coverage_before_rebalance_hot_first():
+    """Ordering inside the transfer list: coverage-restoring transfers
+    (expert has NO Tier-1 slot) precede rebalancing top-ups, and inside
+    each class hotter experts go first."""
+    spr = 1
+    old = np.array([0, 1, 2, 3, 1, 0, 3], np.int32)
+    active = np.array([False, True, True, True, True, True, True])
+    new = np.array([-1,
+                    1,        # Tier-1 (unchanged)
+                    1,        # slot 2: rebalance TOP-UP of hot expert 1
+                    3,        # Tier-1 (unchanged)
+                    1,        # Tier-1 (unchanged)
+                    0,        # Tier-1 (unchanged)
+                    2],       # slot 6: coverage restore — expert 2's only
+                              # new-map replica (its Tier-1 slot 2 was
+                              # reassigned to the hot expert)
+                   np.int32)
+    load = np.array([5.0, 50.0, 2.0, 1.0])
+    plan = plan_repair(old, new, active, spr, load=load)
+    moved = [_expert_of(d, new) for d, _ in plan.tier2]
+    # expert 2 has NO Tier-1 slot left -> coverage class, goes first even
+    # though expert 1 is 25x hotter (1's copy is a mere top-up)
+    assert moved == [2, 1]
+
+
+def test_repair_order_deterministic_without_load():
+    """load=None keeps the legacy deterministic order: coverage class
+    first, then destination slot."""
+    spr = 1
+    old = np.array([0, 1, 2, 3, 1, 0, 3], np.int32)
+    active = np.array([False, True, True, True, True, True, True])
+    new = np.array([-1, 1, 1, 3, 1, 0, 2], np.int32)
+    a = plan_repair(old, new, active, spr)
+    b = plan_repair(old, new, active, spr)
+    assert a.tier2 == b.tier2
+    moved = [_expert_of(d, new) for d, _ in a.tier2]
+    assert moved == [2, 1]      # coverage restore still precedes top-up
+
+
+def test_repair_hot_first_within_tier3():
+    """Tier-3 reloads come off the wire hottest-first too: when several
+    experts lose every live replica, the backup fetch order follows load."""
+    spr = 1
+    old = np.array([0, 1, 2, 3], np.int32)
+    active = np.array([False, False, True, True])
+    new = np.array([-1, -1, 0, 1], np.int32)    # 0 and 1 lost all replicas
+    backup = BackupStore(1)
+    for e in range(4):
+        backup.store(e, {"w": np.full((2,), float(e))})
+    load = np.array([1.0, 80.0, 1.0, 1.0])
+    plan = plan_repair(old, new, active, spr, backup=backup, load=load)
+    assert [e for _, e in plan.tier3] == [1, 0]  # hotter expert 1 first
+
+
+def test_repair_empty_world_degenerate():
+    """Zero-slot degenerate input produces an empty, well-formed plan."""
+    plan = plan_repair(np.array([], np.int32), np.array([], np.int32),
+                       np.array([], bool), 1)
+    assert plan.tier1 == [] and plan.tier2 == [] and plan.tier3 == []
+    assert plan.source_mix() == {"local_reuse": 0, "gpu_relocation": 0,
+                                 "dram_reload": 0}

@@ -541,3 +541,134 @@ def test_mid_transfer_recovery_events_carry_incident_tags():
     assert tagged
     assert all(e.incident >= 0 for e in tagged), \
         [(e.kind, e.incident) for e in tagged]
+
+
+# ---------------------------------------------------------------------------
+# Popularity rebalance: a rank-less planned transition (ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_rebalance_commits_one_epoch_and_follows_load():
+    """control.rebalance() is one MembershipTransaction commit over the
+    whole active set: epoch +1, device version mirrors it, and the new
+    placement over-replicates the tracked-hot experts."""
+    cfg, rt = _runtime()
+    epoch0 = rt.epoch
+    rt.expert_load = np.array([0.4, 0.4, 0.1, 0.1])
+    handled, mode = rt.control.rebalance()
+    assert mode == "elastic"
+    assert sorted(handled) == list(range(8))       # rank-less: everyone
+    assert rt.epoch == epoch0 + 1
+    assert _dev_version(rt) == rt.epoch
+    counts = rt.expert_replica_counts()
+    assert counts[0] > counts[2] and counts[1] > counts[3]
+    commits = [e for e in rt.timeline if e.kind == "membership_commit"]
+    assert commits[-1].detail["transition"] == "rebalance"
+    reb = [e for e in rt.timeline if e.kind == "rebalance"]
+    assert reb and reb[-1].detail["epoch"] == rt.epoch
+
+
+def test_rebalance_txn_abort_leaves_state_byte_identical():
+    """Planning a rebalance and aborting it publishes NOTHING: table,
+    params and device membership stay byte-identical."""
+    cfg, rt = _runtime()
+    rt.expert_load = np.array([0.7, 0.1, 0.1, 0.1])
+    snap = _snapshot(rt)
+    txn = rt.begin("rebalance")
+    plan = txn.plan()
+    assert plan is not None and plan.tier2          # it WOULD move weights
+    txn.abort()
+    _assert_untouched(rt, snap)
+    assert txn.state == "aborted"
+    with pytest.raises(RuntimeError):
+        txn.commit()
+
+
+def test_rebalance_policy_abort_via_pump_records_telemetry():
+    """An abort raised inside the rebalance handler surfaces as a
+    transition_abort event and the control plane reports 'aborted'."""
+    from repro.core.transitions import TransitionAborted
+
+    class ExplodingPolicy(ElasticPolicy):
+        def on_rebalance(self, rt, ranks):
+            raise TransitionAborted("synthetic", reason="synthetic")
+
+    cfg, rt = _runtime()
+    snap = _snapshot(rt)
+    rt.set_policy(ExplodingPolicy())
+    handled, mode = rt.control.rebalance()
+    assert mode == "aborted"
+    _assert_untouched(rt, snap)
+    aborts = [e for e in rt.timeline if e.kind == "transition_abort"]
+    assert aborts and aborts[-1].detail["op"] == "rebalance"
+
+
+def test_fault_landing_mid_rebalance_composes():
+    """A rank dies inside the rebalance's coordinate window: the rebalance
+    commit lands first, the banked fault is detected at the next poll, and
+    the follow-up recovery is its own strictly-later commit — two
+    transitions, two epochs, coverage intact throughout."""
+    cfg, rt = _runtime()
+    rt.expert_load = np.array([0.4, 0.4, 0.1, 0.1])
+    epoch0 = rt.epoch
+    rt.injector.inject_at(rt.clock.now() + 0.3, [5])   # inside coordinate_s
+    handled, mode = rt.control.rebalance()
+    assert mode == "elastic"
+    assert rt.epoch == epoch0 + 1
+    rt.clock.advance(1.5)                              # heartbeat timeout
+    fails = rt.poll_failures()
+    assert fails == [5]
+    rt.handle_failure(fails)
+    assert rt.epoch == epoch0 + 2
+    assert _dev_version(rt) == rt.epoch
+    # coverage survived both transitions; hot experts still over-replicated
+    counts = rt.expert_replica_counts()
+    assert all(c >= 1 for c in counts.values())
+    assert counts[0] > counts[3]
+    epochs = [e.detail["epoch"] for e in rt.timeline
+              if e.kind == "membership_commit"]
+    assert epochs == sorted(set(epochs))
+
+
+def test_rebalance_keeps_single_compile_with_engine():
+    """Serving across a live rebalance never recompiles the serve step:
+    the placement change is a table patch, not a new graph shape."""
+    from repro.core.scenarios import get_scenario
+    from repro.serving.api import ServingFrontend
+    scn = get_scenario("static_hot_expert")
+    rt = build_scenario_runtime(scn)
+    eng = ServingEngine(rt, max_batch=4, max_len=32)
+    fe = ServingFrontend(eng)
+    rt.set_router_skew(np.array([0.4, 0.4, 0.1, 0.1]))
+    for _ in range(40):
+        while len(eng.sched.queue) < 4:
+            fe.submit([1, 2, 3], max_new=8)
+        fe.step()
+    resp = fe.admin.execute({"cmd": "rebalance"})
+    assert "error" not in resp, resp
+    for _ in range(40):
+        while len(eng.sched.queue) < 4:
+            fe.submit([1, 2, 3], max_new=8)
+        fe.step()
+    assert eng.compile_count() == 1
+    counts = rt.expert_replica_counts()
+    assert counts[0] > counts[2]                   # EMA drove the re-place
+    assert rt.load_imbalance() < 1.2
+
+
+def test_admin_rebalance_rejects_ranks():
+    from repro.core.scenarios import get_scenario
+    from repro.serving.api import ServingFrontend
+    rt = build_scenario_runtime(get_scenario("static_hot_expert"))
+    eng = ServingEngine(rt, max_batch=2, max_len=16)
+    fe = ServingFrontend(eng)
+    resp = fe.admin.execute({"cmd": "rebalance", "ranks": [1]})
+    assert "error" in resp and "no 'ranks'" in resp["error"]
+
+
+def test_rebalance_goes_through_the_transaction_path():
+    """Structural: the runtime's rebalance is a MembershipTransaction like
+    every other mutation — no side-channel placement writes."""
+    import inspect
+    import repro.runtime.elastic as elastic
+    src = inspect.getsource(elastic)
+    assert 'self.begin("rebalance"' in src
