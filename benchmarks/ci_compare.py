@@ -122,7 +122,47 @@ def _scenario_metrics(doc: dict) -> dict[str, Metric]:
     return out
 
 
-EXTRACTORS = {"dispatch": _dispatch_metrics, "scenarios": _scenario_metrics}
+def _load_metrics(doc: dict) -> dict[str, Metric]:
+    """Per offered-load cell (rate x policy) and per SLO cell (queue
+    policy): goodput gates higher, latency tails gate lower, and the
+    paper's claims gate hard-zero — stream-contract violations
+    everywhere, client-visible error events on the elastic rows (the
+    full-restart baseline is EXPECTED to show errors; that contrast is
+    the row's reason to exist). The FIFO/EDF pair additionally gates the
+    relation itself: EDF missing more deadlines than FIFO on the same
+    workload is a zero-tolerance failure, not a trend."""
+    out: dict[str, Metric] = {}
+    slo: dict[str, dict] = {}
+    for row in doc.get("load", []):
+        if row.get("cell") == "slo":
+            key = f"slo[{row['sched']}]"
+            slo[row["sched"]] = row
+            out[f"{key}/deadline_miss_rate"] = (
+                float(row["deadline_miss_rate"]), "lower")
+        else:
+            key = f"load/r{row['rate_rps']:g}[{row['policy']}]"
+            if row.get("policy") == "elastic":
+                out[f"{key}/error_events"] = (
+                    float(row["error_events"]), "zero")
+        out[f"{key}/goodput_tok_s"] = (float(row["goodput_tok_s"]), "higher")
+        for metric in ("ttft_p50_s", "ttft_p99_s",
+                       "stall_p50_s", "stall_p99_s"):
+            v = row.get(metric)
+            if v is not None and float(v) >= 0:
+                out[f"{key}/{metric}"] = (float(v), "lower")
+        out[f"{key}/stream_violations"] = (
+            float(row["stream_violations"]), "zero")
+        out[f"{key}/transport_errors"] = (
+            float(row["transport_errors"]), "zero")
+    if "fifo" in slo and "edf" in slo:
+        out["slo/edf_excess_miss_rate"] = (
+            max(0.0, float(slo["edf"]["deadline_miss_rate"])
+                - float(slo["fifo"]["deadline_miss_rate"])), "zero")
+    return out
+
+
+EXTRACTORS = {"dispatch": _dispatch_metrics, "scenarios": _scenario_metrics,
+              "load": _load_metrics}
 
 
 def compare(prev: dict[str, Metric], cur: dict[str, Metric],

@@ -1,0 +1,184 @@
+"""Client-storm load benchmark: goodput / TTFT / stall percentiles vs
+offered load, elastic vs full-restart, through a mid-storm rank fault —
+plus the SLO contrast (FIFO vs EDF deadline-miss rate under an
+overloaded multi-tenant mix).
+
+  PYTHONPATH=src python benchmarks/loadgen.py [--smoke] [--out PATH]
+  PYTHONPATH=src python -m benchmarks.loadgen --smoke
+
+Every cell is one seeded open-loop storm (``repro.serving.loadgen``)
+against a fresh frontend: Poisson arrivals at the cell's offered rate,
+heavy-tailed prompt/output lengths, a rank SIGKILL mid-storm. The
+elastic rows carry the paper's claim as hard gates — ZERO client-visible
+error events and ZERO stream-contract violations through the fault — and
+the full-restart rows sit next to them showing what fail-and-retry does
+to the same workload (error events, recomputed tokens, worse tail
+stalls). The SLO pair runs ONE overloaded two-tenant workload twice,
+changing nothing but the queue policy; EDF missing MORE deadlines than
+FIFO fails the build.
+
+Writes ``BENCH_load.json``; ``benchmarks/ci_compare.py --kind load``
+gates the trajectory (goodput up is good, tails down is good, elastic
+error events are hard-zero). Schema documented in docs/benchmarks.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                       # `python benchmarks/...`
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+#: offered-load sweep (sessions per sim second). The reduced-config engine
+#: decodes ~160 tok/s at full batch; with ~10-token outputs that is ~16
+#: sessions/s of capacity — the sweep crosses it: under, near, over.
+RATES_FULL = [4.0, 8.0, 16.0, 24.0]
+RATES_SMOKE = [4.0, 8.0, 16.0]
+
+
+def _build_frontend(arch: str, seed: int, *, fixed_membership: bool = False,
+                    queue_policy: str = "fifo", quotas=None,
+                    max_batch: int = 8, max_len: int = 96):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import make_initial_membership
+    from repro.core.reintegration import WarmupCostModel
+    from repro.models import init_params
+    from repro.runtime.elastic import ElasticEPRuntime
+    from repro.serving.api import ServingFrontend
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(arch).reduced()
+    table = make_initial_membership(8, cfg.moe.num_experts, 1)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    rt = ElasticEPRuntime(cfg, params, table,
+                          warmup_model=WarmupCostModel(1, 1, 2, 1))
+    eng = ServingEngine(rt, max_batch=max_batch, max_len=max_len,
+                        fixed_membership=fixed_membership,
+                        queue_policy=queue_policy)
+    fe = ServingFrontend(eng, tenant_quotas=quotas)
+    return rt, fe
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short arrival windows for the CI PR job")
+    ap.add_argument("--out", default="BENCH_load.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    args = ap.parse_args(argv)
+
+    from repro.serving.loadgen import (
+        TenantSpec,
+        WorkloadSpec,
+        build_sessions,
+        run_storm,
+        summarize,
+    )
+
+    t0 = time.time()
+    duration = 4.0 if args.smoke else 10.0
+    rates = RATES_SMOKE if args.smoke else RATES_FULL
+    fail_at = round(duration * 0.4, 3)
+    rows = []
+    bad: list[str] = []
+
+    # ---- offered-load sweep: elastic vs full-restart through a fault ----
+    print("cell,rate_rps,derived")
+    for policy_name, fixed in (("elastic", False), ("full_restart", True)):
+        for rate in rates:
+            spec = WorkloadSpec(rate_rps=rate, duration_s=duration,
+                                prompt_mean=10, prompt_max=32,
+                                out_mean=8, out_max=20)
+            sessions = build_sessions(spec, seed=args.seed)
+            rt, fe = _build_frontend(args.arch, args.seed,
+                                     fixed_membership=fixed)
+            rt.injector.inject_at(fail_at, [2], kind="sigkill")
+            card = summarize(run_storm(fe, sessions))
+            card.pop("violations", None)
+            row = {"cell": "load", "rate_rps": rate, "policy": policy_name,
+                   "fail_at_s": fail_at, "duration_s": duration, **card}
+            rows.append(row)
+            key = f"load/r{rate:g}[{policy_name}]"
+            print(f"{key},{rate:g},"
+                  f"sessions={card['sessions']}"
+                  f"_goodput={card['goodput_tok_s']}"
+                  f"_ttft_p50={card['ttft_p50_s']}"
+                  f"_stall_p99={card['stall_p99_s']}"
+                  f"_stall_max={card['stall_max_s']}"
+                  f"_errors={card['error_events']}"
+                  f"_violations={card['stream_violations']}")
+            # ordering contract is unconditional; zero client errors is
+            # the ELASTIC claim (the baseline is expected to show them)
+            if card["stream_violations"]:
+                bad.append(f"{key}: {card['stream_violations']} stream-"
+                           f"contract violations")
+            if not fixed and card["error_events"]:
+                bad.append(f"{key}: {card['error_events']} client-visible "
+                           f"error events through the fault (elastic must "
+                           f"show zero)")
+
+    # ---- SLO contrast: same overloaded mix, FIFO vs EDF -----------------
+    slo_spec = WorkloadSpec(
+        rate_rps=24.0, duration_s=duration,
+        prompt_mean=10, prompt_max=32, out_mean=8, out_max=20,
+        tenants=(TenantSpec("paid", 1.0, deadline_s=round(duration, 3)),
+                 TenantSpec("batch", 2.0, quota=24)))
+    slo_sessions = build_sessions(slo_spec, seed=args.seed)
+    miss_rates = {}
+    for sched in ("fifo", "edf"):
+        rt, fe = _build_frontend(args.arch, args.seed, queue_policy=sched,
+                                 quotas=slo_spec.quotas())
+        rt.injector.inject_at(fail_at, [2], kind="sigkill")
+        card = summarize(run_storm(fe, slo_sessions))
+        card.pop("violations", None)
+        rows.append({"cell": "slo", "sched": sched, "policy": "elastic",
+                     "fail_at_s": fail_at, "duration_s": duration, **card})
+        miss_rates[sched] = card["deadline_miss_rate"]
+        paid = card["tenants"].get("paid", {})
+        print(f"slo[{sched}],24,"
+              f"miss_rate={card['deadline_miss_rate']}"
+              f"_misses={card['deadline_misses']}"
+              f"_paid_finished={paid.get('finished', 0)}"
+              f"_goodput={card['goodput_tok_s']}"
+              f"_violations={card['stream_violations']}")
+        if card["stream_violations"]:
+            bad.append(f"slo[{sched}]: {card['stream_violations']} stream-"
+                       f"contract violations")
+    if miss_rates["edf"] > miss_rates["fifo"]:
+        bad.append(f"slo: EDF deadline-miss rate {miss_rates['edf']} worse "
+                   f"than FIFO {miss_rates['fifo']} on the same workload")
+
+    out = {
+        "meta": {
+            "smoke": args.smoke,
+            "arch": args.arch,
+            "seed": args.seed,
+            "rates_rps": rates,
+            "duration_s": duration,
+            "fail_at_s": fail_at,
+            "wall_s": round(time.time() - t0, 1),
+            "gate_failures": bad,
+        },
+        "load": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"load/sweep,0,cells={len(rows)}"
+          f"_wall={out['meta']['wall_s']}s_wrote={args.out}")
+    if bad:
+        print(f"load/sweep/FAILED,0,gate_failures={bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,6 +18,10 @@ serving frontend (``repro.serving.api``) — requests stream through
   # one-off admin command against a fresh instance (JSON in, JSON out)
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
       --requests 0 --admin '{"cmd": "status"}'
+
+  # off-box: HTTP/SSE on an ephemeral port + admin socket, until ^C
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b --smoke \
+      --requests 0 --http 0 --admin-socket /tmp/repro-admin.sock
 """
 from __future__ import annotations
 
@@ -85,8 +89,26 @@ def main(argv=None):
     ap.add_argument("--max-queue-depth", type=int, default=None,
                     help="admission control: reject submits past this queue "
                     "depth with a structured REJECTED event")
+    ap.add_argument("--sched", choices=["fifo", "edf"], default="fifo",
+                    help="queue ordering: FIFO or earliest-deadline-first "
+                    "(stalled continuations always resume first)")
+    ap.add_argument("--tenant-quota", action="append", default=None,
+                    metavar="NAME=N", help="per-tenant cap on live streams "
+                    "(repeatable), e.g. --tenant-quota free=8")
     ap.add_argument("--deadline", type=float, default=None,
                     help="per-request deadline (sim seconds from submit)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for params init and the request prompts — "
+                    "same seed, same flags => identical run")
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve POST /v1/generate as SSE wire frames on "
+                    "this port (0 = ephemeral) instead of running the "
+                    "inline request loop; runs until interrupted")
+    ap.add_argument("--admin-socket", default=None, metavar="PATH",
+                    help="serve the AdminGateway JSON protocol on this "
+                    "unix socket (with --http)")
+    ap.add_argument("--heartbeat-s", type=float, default=15.0,
+                    help="SSE keepalive interval (wall seconds, --http)")
     ap.add_argument("--admin", action="append", default=None,
                     help="JSON admin command(s) to execute up front, e.g. "
                     "'{\"cmd\": \"drain\", \"ranks\": [2], \"at\": 5.0}'")
@@ -118,7 +140,7 @@ def main(argv=None):
         hosts_per_switch=args.hosts_per_switch or cfg.hosts_per_switch)
     table = make_initial_membership(args.world, E, args.slots_per_rank,
                                     topology=topology)
-    params = init_params(cfg, jax.random.key(0), jnp.float32,
+    params = init_params(cfg, jax.random.key(args.seed), jnp.float32,
                          table.slot_to_expert, table.num_slots)
     rt = ElasticEPRuntime(cfg, params, table, dispatch=args.dispatch)
     if args.detect_timeout is not None:
@@ -126,10 +148,39 @@ def main(argv=None):
     eng = ServingEngine(rt, max_batch=args.max_batch,
                         max_len=args.prompt_len + args.max_new + 8,
                         fixed_membership=args.fixed_membership,
-                        kv_pool=args.kv_pool)
-    fe = ServingFrontend(eng, max_queue_depth=args.max_queue_depth)
+                        kv_pool=args.kv_pool, queue_policy=args.sched)
+    quotas = {}
+    for spec in (args.tenant_quota or []):
+        name, _, n = spec.partition("=")
+        quotas[name] = int(n)
+    fe = ServingFrontend(eng, max_queue_depth=args.max_queue_depth,
+                         tenant_quotas=quotas)
 
-    rng = np.random.RandomState(0)
+    if args.http is not None:
+        # off-box mode: everything below (inline submits, scheduled admin
+        # convenience flags) is the in-process driver's business — the
+        # wire serves clients and the admin socket serves operators
+        if args.fail_at is not None and args.fail_rank:
+            rt.injector.inject_at(args.fail_at, args.fail_rank)
+        import asyncio
+
+        from repro.serving.transport import ServingTransport
+        tr = ServingTransport(fe, port=args.http,
+                              admin_path=args.admin_socket,
+                              heartbeat_s=args.heartbeat_s)
+
+        def _ready(t):
+            print(f"serving http://127.0.0.1:{t.http.port} "
+                  f"(wire v1, admin socket: "
+                  f"{args.admin_socket or 'disabled'})", flush=True)
+
+        try:
+            asyncio.run(tr.serve_forever(_ready))
+        except KeyboardInterrupt:
+            pass
+        return
+
+    rng = np.random.RandomState(args.seed)
     for _ in range(args.requests):
         prompt = rng.randint(1, cfg.vocab_size,
                              size=(args.prompt_len,)).tolist()

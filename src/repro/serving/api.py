@@ -93,13 +93,15 @@ class StreamHandle:
 
     def __init__(self, frontend: "ServingFrontend", rid: int,
                  prompt: list[int], max_new: int,
-                 deadline: Optional[float], t_submit: float):
+                 deadline: Optional[float], t_submit: float,
+                 tenant: str = "default"):
         self._fe = frontend
         self.rid = rid
         self.prompt = prompt
         self.max_new = max_new
         self.deadline = deadline      # ABSOLUTE sim time (submit + offset)
         self.t_submit = t_submit
+        self.tenant = tenant
         self.events: list[StreamEvent] = []
         self.delivered = 0          # token indices emitted so far (== next)
         self.suppressed = 0         # recomputed duplicates never re-delivered
@@ -170,13 +172,19 @@ class ServingFrontend:
     scheduler transitions into per-request event streams, and exposes the
     admin control plane. One frontend drives one engine."""
 
-    def __init__(self, engine, *, max_queue_depth: Optional[int] = None):
+    def __init__(self, engine, *, max_queue_depth: Optional[int] = None,
+                 tenant_quotas: Optional[dict] = None):
         self.engine = engine
         self.rt = engine.rt
         self.max_queue_depth = max_queue_depth
+        # per-tenant cap on LIVE streams (queued + in-flight + stalled);
+        # None / missing tenant = uncapped. The noisy-neighbor guard: one
+        # tenant's storm cannot starve the rest of the queue-depth budget.
+        self.tenant_quotas = dict(tenant_quotas or {})
         self.streams: dict[int, StreamHandle] = {}
-        self.rejected_admission = 0     # refused on queue depth (frontend-
-                                        # level; overflow counts in scheduler)
+        self.rejected_admission = 0     # refused on queue depth / tenant
+                                        # quota (frontend-level; overflow
+                                        # counts in scheduler)
         self._next_rid = 0
         self._scheduled: list[dict] = []   # admin ops awaiting their time
         self._deadline_watch: list[StreamHandle] = []   # live handles that
@@ -186,17 +194,23 @@ class ServingFrontend:
 
     # -- data plane ---------------------------------------------------------
     def submit(self, prompt, *, max_new: int = 16,
-               deadline: Optional[float] = None) -> StreamHandle:
+               deadline: Optional[float] = None,
+               tenant: str = "default") -> StreamHandle:
         """Enter one request. ``deadline`` is sim-seconds FROM SUBMIT; a
         stream that has not terminated by then is cancelled. Always
         returns a handle; a request refused by admission control (queue
-        depth) or the KV overflow guard carries a terminal ``REJECTED``
-        event instead of raising."""
+        depth or tenant quota) or the KV overflow guard carries a terminal
+        ``REJECTED`` event instead of raising."""
         now = self.rt.clock.now()
         rid = self._next_rid
         self._next_rid += 1
         expires = None if deadline is None else now + deadline
-        handle = StreamHandle(self, rid, list(prompt), max_new, expires, now)
+        quota = self.tenant_quotas.get(tenant)
+        tenant_live = (sum(1 for h in self.streams.values()
+                           if h.tenant == tenant and not h.done)
+                       if quota is not None else 0)
+        handle = StreamHandle(self, rid, list(prompt), max_new, expires, now,
+                              tenant)
         self.streams[rid] = handle
         if expires is not None:
             self._deadline_watch.append(handle)
@@ -209,17 +223,40 @@ class ServingFrontend:
             handle._emit("REJECTED", now, reason="coverage_loss",
                          degraded=self.engine.degraded_reason)
             return handle
+        if quota is not None and tenant_live >= quota:
+            self.rejected_admission += 1
+            handle._emit("REJECTED", now, reason="tenant_quota",
+                         tenant=tenant, live=tenant_live, quota=quota)
+            return handle
         if (self.max_queue_depth is not None
-                and len(sched.queue) >= self.max_queue_depth):
+                and self._effective_depth() >= self.max_queue_depth):
             self.rejected_admission += 1
             handle._emit("REJECTED", now, reason="queue_full",
-                         queue_depth=len(sched.queue),
+                         queue_depth=self._effective_depth(),
                          max_queue_depth=self.max_queue_depth)
             return handle
         sched.submit(Request(rid=rid, prompt=list(prompt),
                              max_new_tokens=max_new, t_submit=now,
-                             deadline=expires))
+                             deadline=expires, tenant=tenant))
         return handle
+
+    def _effective_depth(self) -> int:
+        """Queue depth as admission control must see it: queued requests
+        PLUS in-flight work that is about to requeue. A fault or drain
+        sitting in the control queue (requested but not yet committed at a
+        step boundary) will push every in-flight request back onto the
+        queue front — admitting a burst up to ``max_queue_depth`` inside
+        that window would overshoot the cap the moment the transition
+        commits, which is exactly when the system can least afford the
+        extra load."""
+        sched = self.engine.sched
+        depth = len(sched.queue)
+        interrupt_pending = any(
+            ev.kind in ("failure_detected", "drain", "scale_down")
+            for ev in self.rt.control_queue)
+        if interrupt_pending:
+            depth += sched.inflight
+        return depth
 
     def cancel(self, rid: int, *, cause: str = "client") -> bool:
         return self.engine.sched.cancel(rid, now=self.rt.clock.now(),
@@ -334,12 +371,24 @@ class ServingFrontend:
         stall_events = 0
         error_events = 0
         t_first_submit = None
+        tenants: dict[str, dict] = {}
         for handle in self.streams.values():
             ts = [e.t for e in handle.events if e.kind == "TOKEN"]
             delivered += len(ts)
             if ts:
                 ttfts.append(ts[0] - handle.t_submit)
             gaps += [b - a for a, b in zip(ts, ts[1:])]
+            bucket = tenants.setdefault(handle.tenant, {
+                "submitted": 0, "admitted": 0, "rejected": 0,
+                "finished": 0, "cancelled": 0, "delivered_tokens": 0})
+            bucket["submitted"] += 1
+            # a rejection is immediate at submit, so admitted is exactly
+            # the complement; finished/cancelled refine the admitted set
+            bucket["rejected" if handle.outcome == "REJECTED"
+                   else "admitted"] += 1
+            bucket["finished"] += handle.outcome == "FINISHED"
+            bucket["cancelled"] += handle.outcome == "CANCELLED"
+            bucket["delivered_tokens"] += len(ts)
             # windows actually opened (STALL_BEGIN, PREEMPTED, or the
             # baseline's non-final FAILED — all three stall the client)
             stall_events += handle.stalls
@@ -368,7 +417,9 @@ class ServingFrontend:
             "migrations": stats.migrated,
             "stall_events": stall_events,
             "error_events": error_events,
+            "rejected_admission": self.rejected_admission,
             "events": dict(sorted(event_counts.items())),
+            "tenants": {k: tenants[k] for k in sorted(tenants)},
         }
 
     def stream_violations(self) -> list[str]:

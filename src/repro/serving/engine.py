@@ -61,7 +61,8 @@ class ServingEngine:
                  restart_model: Optional[FullRestartCostModel] = None,
                  max_retries: Optional[int] = None,
                  policy: Optional[TransitionPolicy] = None,
-                 kv_pool: Optional[str] = None):
+                 kv_pool: Optional[str] = None,
+                 queue_policy: str = "fifo"):
         self.rt = runtime
         cfg = runtime.cfg
         self.cfg = cfg
@@ -74,7 +75,8 @@ class ServingEngine:
         self.kv = make_pool(kv_pool or getattr(cfg, "kv_pool", "paged"),
                             max_batch, max_len,
                             block_size=getattr(cfg, "kv_block_size", 16))
-        self.sched = Scheduler(self.kv, max_retries=max_retries)
+        self.sched = Scheduler(self.kv, max_retries=max_retries,
+                               queue_policy=queue_policy)
         self.caches = init_caches(cfg, max_batch, max_len, dtype)
         self.base_step_time = base_step_time
         self.restart_model = restart_model or FullRestartCostModel()

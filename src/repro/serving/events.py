@@ -28,6 +28,12 @@ Event vocabulary (see docs/serving-api.md for full field schemas):
   STALL_END    the stall is over — the next fresh TOKEN follows
                immediately (``stall_s`` = event time minus the opening
                STALL_BEGIN / PREEMPTED / FAILED time)
+  HEARTBEAT    transport keepalive: a frame with no payload, injected by
+               the wire transport (never by the frontend) so an SSE
+               connection stays alive across a long stall window. May
+               appear ANYWHERE in a wire stream and is transparent to the
+               ordering contract — excluded from exactly-once token
+               accounting, seq numbering and stall-window rules
   FAILED       an error the client sees. ``final=False``: the baseline
                fail-and-retry path (paper §3.1 — the request restarts
                from scratch; recomputed duplicates are suppressed so the
@@ -56,7 +62,8 @@ from dataclasses import dataclass, field
 #: Canonical client-visible event kinds (documented in docs/serving-api.md
 #: — keep the two in sync; tools/check_docs.py enforces it).
 EVENT_KINDS = ("TOKEN", "STALL_BEGIN", "STALL_END", "PREEMPTED", "RESUMED",
-               "MIGRATED", "FAILED", "FINISHED", "REJECTED", "CANCELLED")
+               "MIGRATED", "HEARTBEAT", "FAILED", "FINISHED", "REJECTED",
+               "CANCELLED")
 
 #: Kinds that always end the stream. FAILED is terminal only when its
 #: ``final`` detail flag is set (a baseline retry emits a non-final FAILED
@@ -128,19 +135,37 @@ def validate_stream(events, eps: float = 1e-9) -> list[str]:
          zero replay) and RESUMED (prefix replays) never coexist inside
          the same window — migrated KV must not also report replayed
          positions.
+
+    ``HEARTBEAT`` frames are transparent: a wire transport injects them at
+    any point of an SSE stream (that is their whole job — keeping the
+    connection alive across a long stall window), so the validator only
+    holds them to time monotonicity and skips them everywhere else — they
+    carry no ``seq`` position, never count toward token accounting, and a
+    decoded wire stream with heartbeats interleaved validates identically
+    to the in-process stream it encodes.
     """
     bad: list[str] = []
     prev_t = -1.0
     next_index = 0
+    pos = 0                       # stream position, heartbeats excluded
     stalled_by: str | None = None
     resumed_in_window = False
     migrated_in_window = False
     terminal_seen = False
-    for i, ev in enumerate(events):
+    for ev in events:
         kind, t, seq = _get(ev, "kind"), _get(ev, "t"), _get(ev, "seq")
         if kind not in EVENT_KINDS:
-            bad.append(f"seq {i}: unknown event kind {kind!r}")
+            bad.append(f"seq {pos}: unknown event kind {kind!r}")
             continue
+        if kind == "HEARTBEAT":
+            # transport keepalive: transparent to every rule but time
+            if t < prev_t - eps:
+                bad.append(f"heartbeat: time moved backwards "
+                           f"({prev_t} -> {t})")
+            prev_t = max(prev_t, t)
+            continue
+        i = pos
+        pos += 1
         if seq != i:
             bad.append(f"seq {i}: event carries seq {seq}")
         if t < prev_t - eps:

@@ -1,0 +1,31 @@
+"""Client-storm load generation with SLO-aware scheduling hooks.
+
+``workload`` synthesizes the storm (open-loop Poisson arrivals,
+heavy-tailed lengths, multi-tenant mix — all from one seed); ``storm``
+drives it against either the in-process frontend or the HTTP/SSE wire
+and reduces the observed streams to one scorecard. The SLO half lives
+where it must: EDF queue ordering in ``repro.serving.scheduler``
+(``queue_policy="edf"``) and per-tenant admission quotas in
+``repro.serving.api`` (``tenant_quotas=``); this package generates the
+load that makes those policies measurable and checks the ordering
+contract under it.
+"""
+from repro.serving.loadgen.storm import (
+    SessionResult,
+    run_storm,
+    run_storm_http,
+    storm_http,
+    summarize,
+)
+from repro.serving.loadgen.workload import (
+    Session,
+    TenantSpec,
+    WorkloadSpec,
+    build_sessions,
+)
+
+__all__ = [
+    "Session", "SessionResult", "TenantSpec", "WorkloadSpec",
+    "build_sessions", "run_storm", "run_storm_http", "storm_http",
+    "summarize",
+]

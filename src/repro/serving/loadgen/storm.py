@@ -1,0 +1,259 @@
+"""Client-storm drivers: run one session list against the frontend.
+
+Two drivers, ONE workload format, ONE result shape:
+
+  * :func:`run_storm` — in-process. Submits each session at its arrival
+    time on the SimClock and steps the frontend until every stream
+    terminates (the engine advances sim time through idle gaps, so
+    arrival spacing is honored exactly).
+  * :func:`run_storm_http` — off-box. Thousands of concurrent asyncio
+    client sessions, each opening its own connection, POSTing
+    ``/v1/generate`` and decoding the SSE frames incrementally off the
+    socket. Stdlib-only on the client side (``transport.wire`` +
+    asyncio); the server may be in this process (background transport
+    thread) or another one entirely.
+
+Both return :class:`SessionResult` lists that :func:`summarize` reduces
+to the storm scorecard: goodput, TTFT and stall percentiles, deadline
+misses, per-tenant outcomes, client-visible errors, and ordering-contract
+violations (``validate_stream`` runs over EVERY stream — through a
+mid-storm fault the elastic claim is precisely that this stays empty).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.serving.events import validate_stream
+from repro.serving.loadgen.workload import Session
+from repro.serving.transport.wire import SSEDecoder
+
+__all__ = ["SessionResult", "run_storm", "run_storm_http", "summarize"]
+
+
+@dataclass
+class SessionResult:
+    """One session's observed stream, same shape for both drivers."""
+    session: Session
+    submit_t: float = -1.0        # server sim time at submit
+    events: list = field(default_factory=list)
+    error: Optional[str] = None   # transport-level failure (None = clean)
+    http_status: int = 0          # 0 for the in-process driver
+
+    @property
+    def outcome(self) -> Optional[str]:
+        return self.events[-1].kind if self.events else None
+
+    @property
+    def token_times(self) -> list[float]:
+        return [e.t for e in self.events if e.kind == "TOKEN"]
+
+    @property
+    def deadline_missed(self) -> bool:
+        return (self.outcome == "CANCELLED"
+                and self.events[-1].detail.get("cause") == "deadline")
+
+
+# ---------------------------------------------------------------------------
+# In-process driver
+# ---------------------------------------------------------------------------
+
+def run_storm(frontend, sessions: list[Session], *,
+              max_steps: int = 500_000) -> list[SessionResult]:
+    """Drive one session list through an in-process frontend on the
+    SimClock. Open-loop: submits happen when the clock crosses each
+    arrival time, never gated on completions."""
+    order = sorted(sessions, key=lambda s: (s.t_arrival, s.sid))
+    results: list[SessionResult] = []
+    live: list[tuple[SessionResult, object]] = []
+    i = 0
+    for _ in range(max_steps):
+        now = frontend.rt.clock.now()
+        while i < len(order) and order[i].t_arrival <= now:
+            s = order[i]
+            i += 1
+            h = frontend.submit(list(s.prompt), max_new=s.max_new,
+                                deadline=s.deadline_s, tenant=s.tenant)
+            # share the handle's live event list: it is final once done
+            res = SessionResult(s, submit_t=h.t_submit, events=h.events)
+            results.append(res)
+            live.append((res, h))
+        live = [(r, h) for r, h in live if not h.done]
+        if i >= len(order) and not live and frontend._idle_stop():
+            break
+        frontend.step()
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Wire driver
+# ---------------------------------------------------------------------------
+
+async def _http_session(host: str, port: int, s: Session,
+                        time_scale: float, read_timeout_s: float,
+                        gate: asyncio.Semaphore) -> SessionResult:
+    if time_scale > 0:
+        await asyncio.sleep(s.t_arrival * time_scale)
+    async with gate:
+        try:
+            reader, writer = await asyncio.open_connection(host, port)
+        except OSError as e:
+            return SessionResult(s, error=f"connect: {e}")
+        try:
+            body = json.dumps(s.request_body()).encode("utf-8")
+            writer.write((f"POST /v1/generate HTTP/1.1\r\n"
+                          f"Host: {host}\r\n"
+                          f"Content-Type: application/json\r\n"
+                          f"Content-Length: {len(body)}\r\n"
+                          f"Connection: close\r\n\r\n").encode("ascii")
+                         + body)
+            await writer.drain()
+            status_line = await asyncio.wait_for(reader.readline(),
+                                                 read_timeout_s)
+            parts = status_line.decode("latin-1").split()
+            status = int(parts[1]) if len(parts) > 1 else 0
+            headers: dict[str, str] = {}
+            while True:
+                line = await asyncio.wait_for(reader.readline(),
+                                              read_timeout_s)
+                if line in (b"\r\n", b"\n", b""):
+                    break
+                name, _, value = line.decode("latin-1").partition(":")
+                headers[name.strip().lower()] = value.strip()
+            if status != 200:
+                n = int(headers.get("content-length", 0) or 0)
+                detail = (await reader.readexactly(n)).decode() if n else ""
+                return SessionResult(s, error=f"http {status}: {detail}",
+                                     http_status=status)
+            submit_t = float(headers.get("x-submit-t", -1.0))
+            dec = SSEDecoder()
+            events = []
+            while True:
+                chunk = await asyncio.wait_for(reader.read(65536),
+                                               read_timeout_s)
+                if not chunk:
+                    break
+                events.extend(dec.feed(chunk))
+            dec.close()              # raises on a truncated frame
+            return SessionResult(s, submit_t=submit_t, events=events,
+                                 http_status=200)
+        except Exception as e:       # noqa: BLE001 - a storm records, never raises
+            return SessionResult(s, error=f"{type(e).__name__}: {e}")
+        finally:
+            try:
+                writer.close()
+            except Exception:        # noqa: BLE001
+                pass
+
+
+async def storm_http(host: str, port: int, sessions: list[Session], *,
+                     time_scale: float = 0.0, read_timeout_s: float = 120.0,
+                     max_open: int = 512) -> list[SessionResult]:
+    """Async storm: every session is its own task + connection. With
+    ``time_scale > 0`` arrivals are spaced in wall time (``t_arrival *
+    time_scale`` seconds); at 0 every session fires immediately (the
+    server's admission control and queue policy take it from there).
+    ``max_open`` bounds concurrently open sockets, not concurrency of
+    sessions — waiting sessions have not connected yet."""
+    gate = asyncio.Semaphore(max_open)
+    tasks = [_http_session(host, port, s, time_scale, read_timeout_s, gate)
+             for s in sorted(sessions, key=lambda x: (x.t_arrival, x.sid))]
+    return list(await asyncio.gather(*tasks))
+
+
+def run_storm_http(host: str, port: int, sessions: list[Session],
+                   **kw) -> list[SessionResult]:
+    """Blocking wrapper around :func:`storm_http` (runs its own loop)."""
+    return asyncio.run(storm_http(host, port, sessions, **kw))
+
+
+# ---------------------------------------------------------------------------
+# Scorecard
+# ---------------------------------------------------------------------------
+
+def _percentile(values: list[float], q: float) -> float:
+    """Nearest-rank percentile; -1.0 for an empty sample (matches the
+    frontend's metrics sentinel)."""
+    if not values:
+        return -1.0
+    ordered = sorted(values)
+    rank = min(len(ordered) - 1, max(0, int(round(q * (len(ordered) - 1)))))
+    return float(ordered[rank])
+
+
+def summarize(results: list[SessionResult]) -> dict:
+    """Reduce a storm to its scorecard (plain JSON)."""
+    ttfts: list[float] = []
+    gaps: list[float] = []
+    goodput_tokens = 0
+    delivered = 0
+    outcomes: dict[str, int] = {}
+    tenants: dict[str, dict] = {}
+    violations: list[str] = []
+    transport_errors = 0
+    error_events = 0
+    deadline_misses = 0
+    t0, t_end = None, 0.0
+    for res in results:
+        bucket = tenants.setdefault(res.session.tenant, {
+            "sessions": 0, "finished": 0, "rejected": 0, "cancelled": 0,
+            "deadline_misses": 0, "delivered_tokens": 0})
+        bucket["sessions"] += 1
+        if res.error is not None:
+            transport_errors += 1
+            outcomes["TRANSPORT_ERROR"] = (
+                outcomes.get("TRANSPORT_ERROR", 0) + 1)
+            continue
+        ts = res.token_times
+        delivered += len(ts)
+        bucket["delivered_tokens"] += len(ts)
+        if ts:
+            ttfts.append(ts[0] - res.submit_t)
+            gaps += [b - a for a, b in zip(ts, ts[1:])]
+        out = res.outcome or "OPEN"
+        outcomes[out] = outcomes.get(out, 0) + 1
+        if out == "FINISHED":
+            goodput_tokens += len(ts)
+            bucket["finished"] += 1
+        elif out == "REJECTED":
+            bucket["rejected"] += 1
+        elif out == "CANCELLED":
+            bucket["cancelled"] += 1
+        if res.deadline_missed:
+            deadline_misses += 1
+            bucket["deadline_misses"] += 1
+        error_events += sum(1 for e in res.events if e.is_error)
+        violations += [f"sid {res.session.sid}: {v}"
+                       for v in validate_stream(res.events)]
+        if res.submit_t >= 0 and (t0 is None or res.submit_t < t0):
+            t0 = res.submit_t
+        for e in res.events:
+            t_end = max(t_end, e.t)
+    elapsed = (t_end - t0) if t0 is not None and t_end > t0 else 0.0
+    n = len(results)
+    admitted = n - outcomes.get("REJECTED", 0) - transport_errors
+    return {
+        "sessions": n,
+        "admitted": admitted,
+        "elapsed_s": round(elapsed, 6),
+        "goodput_tok_s": round(goodput_tokens / elapsed, 3)
+                         if elapsed > 0 else 0.0,
+        "delivered_tokens": delivered,
+        "goodput_tokens": goodput_tokens,
+        "ttft_p50_s": round(_percentile(ttfts, 0.50), 6),
+        "ttft_p99_s": round(_percentile(ttfts, 0.99), 6),
+        "stall_p50_s": round(_percentile(gaps, 0.50), 6),
+        "stall_p99_s": round(_percentile(gaps, 0.99), 6),
+        "stall_max_s": round(max(gaps), 6) if gaps else -1.0,
+        "deadline_misses": deadline_misses,
+        "deadline_miss_rate": round(deadline_misses / admitted, 6)
+                              if admitted else 0.0,
+        "transport_errors": transport_errors,
+        "error_events": error_events,
+        "stream_violations": len(violations),
+        "violations": violations[:20],     # capped: the count is the gate
+        "outcomes": dict(sorted(outcomes.items())),
+        "tenants": {k: tenants[k] for k in sorted(tenants)},
+    }

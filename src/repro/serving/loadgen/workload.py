@@ -1,0 +1,117 @@
+"""Workload synthesis for the client storm: WHO arrives WHEN asking WHAT.
+
+One :class:`WorkloadSpec` describes an open-loop arrival process the way
+serving papers do:
+
+  * **open-loop Poisson arrivals** — exponential inter-arrival gaps at
+    ``rate_rps``; arrivals do NOT wait for completions, so queueing delay
+    compounds under overload instead of being hidden by a closed loop;
+  * **heavy-tailed lengths** — prompt and output lengths are lognormal
+    (median at ``*_mean``, tail weight from ``*_sigma``), clipped to the
+    KV-slot budget, because mean-length workloads hide exactly the
+    long-request stragglers that make drains and faults expensive;
+  * **multi-tenant mix** — each arrival is assigned a tenant by weighted
+    draw; a tenant can carry a per-request relative deadline (the SLO the
+    EDF queue policy schedules against) and a quota (enforced by the
+    frontend, recorded here so one spec fully describes an experiment).
+
+``build_sessions(spec, seed)`` expands the spec into a concrete session
+list. Everything is driven by one ``random.Random(seed)`` — same spec +
+same seed = byte-identical sessions, on any platform, with nothing
+installed beyond the standard library (the HTTP side of the storm runs
+without jax or numpy). The same session list drives either the
+in-process frontend or the wire transport (``loadgen.storm``), which is
+what makes the two directly comparable.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import asdict, dataclass
+from typing import Optional
+
+__all__ = ["Session", "TenantSpec", "WorkloadSpec", "build_sessions"]
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant in the arrival mix."""
+    name: str = "default"
+    weight: float = 1.0                  # share of arrivals (relative)
+    deadline_s: Optional[float] = None   # per-request SLO, seconds FROM
+                                         # submit (None = best-effort)
+    quota: Optional[int] = None          # max live streams (frontend-
+                                         # enforced; recorded in the spec)
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """An open-loop client-storm workload, fully seeded."""
+    rate_rps: float = 8.0          # Poisson arrival rate (sessions / sim s)
+    duration_s: float = 30.0       # arrival window (sim seconds)
+    n_max: int = 10_000            # hard cap on generated sessions
+    prompt_mean: int = 16          # lognormal MEDIAN prompt length
+    prompt_sigma: float = 0.6      # lognormal shape (tail weight)
+    prompt_max: int = 48           # clip: must fit the KV slot budget
+    out_mean: int = 12             # lognormal MEDIAN output length
+    out_sigma: float = 0.7
+    out_max: int = 32
+    vocab: int = 1000              # token ids drawn uniform from [1, vocab)
+    tenants: tuple = (TenantSpec(),)
+
+    def quotas(self) -> dict:
+        """The frontend ``tenant_quotas`` dict this spec implies."""
+        return {t.name: t.quota for t in self.tenants if t.quota is not None}
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+@dataclass(frozen=True)
+class Session:
+    """One concrete client session: arrival time + request payload."""
+    sid: int
+    t_arrival: float               # sim seconds from storm start
+    prompt: tuple = ()             # token ids
+    max_new: int = 16
+    tenant: str = "default"
+    deadline_s: Optional[float] = None   # relative (frontend adds submit t)
+
+    def request_body(self) -> dict:
+        """The ``POST /v1/generate`` JSON body for this session."""
+        return {"prompt": list(self.prompt), "max_new": self.max_new,
+                "deadline": self.deadline_s, "tenant": self.tenant}
+
+
+def _lognormal_len(rng: random.Random, median: int, sigma: float,
+                   lo: int, hi: int) -> int:
+    """Heavy-tailed length draw: lognormal with the given MEDIAN (mu =
+    ln(median)), clipped to [lo, hi]."""
+    n = int(round(rng.lognormvariate(math.log(max(median, 1)), sigma)))
+    return max(lo, min(hi, n))
+
+
+def build_sessions(spec: WorkloadSpec, seed: int) -> list[Session]:
+    """Expand a workload spec into a deterministic session list, sorted by
+    arrival time. One ``random.Random(seed)`` drives every draw."""
+    rng = random.Random(seed)
+    names = [t.name for t in spec.tenants]
+    weights = [max(t.weight, 0.0) for t in spec.tenants]
+    deadlines = {t.name: t.deadline_s for t in spec.tenants}
+    sessions: list[Session] = []
+    t = 0.0
+    while len(sessions) < spec.n_max:
+        t += rng.expovariate(spec.rate_rps)
+        if t > spec.duration_s:
+            break
+        tenant = rng.choices(names, weights=weights, k=1)[0]
+        plen = _lognormal_len(rng, spec.prompt_mean, spec.prompt_sigma,
+                              1, spec.prompt_max)
+        max_new = _lognormal_len(rng, spec.out_mean, spec.out_sigma,
+                                 1, spec.out_max)
+        prompt = tuple(rng.randrange(1, spec.vocab) for _ in range(plen))
+        sessions.append(Session(sid=len(sessions), t_arrival=round(t, 6),
+                                prompt=prompt, max_new=max_new,
+                                tenant=tenant,
+                                deadline_s=deadlines[tenant]))
+    return sessions

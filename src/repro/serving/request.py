@@ -30,7 +30,8 @@ class Request:
     t_first_token: float = -1.0
     t_finish: float = -1.0
     retries: int = 0
-    deadline: Optional[float] = None   # sim-seconds; missed => cancelled
+    deadline: Optional[float] = None   # ABSOLUTE sim time; missed => cancelled
+    tenant: str = "default"    # admission-quota / accounting bucket
     # continuation snapshot: the membership epoch at which this request was
     # suspended (-1 = not a resume). Validated against the device-published
     # MembershipState.version when the request is re-admitted.

@@ -44,8 +44,13 @@ class SchedulerStats:
 class Scheduler:
     def __init__(self, kv: KVPool, retry_failed: bool = True,
                  max_retries: Optional[int] = None,
-                 sink: Optional[Callable] = None):
+                 sink: Optional[Callable] = None,
+                 queue_policy: str = "fifo"):
+        if queue_policy not in ("fifo", "edf"):
+            raise ValueError(f"queue_policy must be 'fifo' or 'edf', "
+                             f"got {queue_policy!r}")
         self.kv = kv
+        self.queue_policy = queue_policy
         self.queue: deque[Request] = deque()
         self.running: dict[int, Request] = {}
         self.stats = SchedulerStats()
@@ -86,10 +91,17 @@ class Scheduler:
         preemption (``kv_snapshot``, migration-capable pool) instead
         redeems the snapshot: it re-enters the decode batch with its pages
         intact, replays NOTHING, and the client sees MIGRATED rather than
-        a RESUMED-with-recompute — the same epoch gate applies."""
+        a RESUMED-with-recompute — the same epoch gate applies.
+
+        Admission ORDER is the queue policy's call: ``fifo`` takes the
+        head (with interrupted work requeued at the front), ``edf`` takes
+        stalled work first — resume-before-fresh is load-bearing for the
+        bounded-stall claim — then the earliest absolute deadline, then
+        submit order. Either way admission stops at the first candidate
+        that cannot get a KV slot."""
         admitted = []
         while self.queue:
-            req = self.queue[0]
+            req = self._next_admit()
             snap = req.kv_snapshot
             slot = self.kv.restore(snap) if snap is not None else None
             migrated_in = slot is not None
@@ -101,7 +113,7 @@ class Scheduler:
                                         reserve=reserve)
                 if slot is None:
                     break
-            self.queue.popleft()
+            self.queue.remove(req)
             req.slot = slot
             req.replay_len = req.context_len
             if req.snapshot_epoch >= 0 and 0 <= epoch < req.snapshot_epoch:
@@ -131,6 +143,21 @@ class Scheduler:
             self.stats.admitted += 1
             admitted.append(req)
         return admitted
+
+    def _next_admit(self) -> Request:
+        """The queue policy's pick for the next admission candidate."""
+        if self.queue_policy == "fifo" or len(self.queue) == 1:
+            return self.queue[0]
+
+        def _edf_key(r: Request):
+            # stalled continuations first (their front-requeue ordering is
+            # part of the bounded-stall contract), then earliest deadline;
+            # deadline-less requests sort behind every deadline
+            return (r.state is not RequestState.STALLED,
+                    r.deadline if r.deadline is not None else float("inf"),
+                    r.t_submit, r.rid)
+
+        return min(self.queue, key=_edf_key)
 
     def step_complete(self, new_tokens: dict[int, int], now: float,
                       eos_id: Optional[int] = None) -> list[Request]:

@@ -1,0 +1,38 @@
+"""Off-box serving transport: the wire between a client and the frontend.
+
+Three pieces, layered the same way the in-process API is:
+
+  * ``repro.serving.transport.wire`` — the versioned SSE wire codec for
+    the ``repro.serving.events`` vocabulary (stdlib-only, like the event
+    module it encodes: the docs drift gate and the load generator import
+    it without jax);
+  * ``repro.serving.transport.http`` — an asyncio HTTP/1.1 server
+    exposing ``POST /v1/generate`` as an SSE stream of wire frames, plus
+    read-only ``GET /v1/metrics`` and ``GET /healthz``;
+  * ``repro.serving.transport.admin`` — the ``AdminGateway`` JSON
+    command protocol served over a local unix socket (newline-delimited
+    JSON), so drain/scale/rebalance/status can be driven from outside
+    the process.
+
+:class:`ServingTransport` bundles all of it onto one background event
+loop so a driver (``python -m repro.launch.serve --http``, the storm CLI,
+the transport tests) can put a real wire on an in-process frontend with
+two calls.
+"""
+from repro.serving.transport.admin import AdminSocketServer, admin_request
+from repro.serving.transport.http import HttpServingServer, ServingTransport
+from repro.serving.transport.wire import (
+    WIRE_VERSION,
+    SSEDecoder,
+    WireProtocolError,
+    decode_stream,
+    encode_event,
+    encode_heartbeat,
+    encode_stream,
+)
+
+__all__ = [
+    "AdminSocketServer", "HttpServingServer", "SSEDecoder",
+    "ServingTransport", "WIRE_VERSION", "WireProtocolError", "admin_request",
+    "decode_stream", "encode_event", "encode_heartbeat", "encode_stream",
+]

@@ -1,0 +1,100 @@
+"""AdminGateway over a local socket: newline-delimited JSON.
+
+The gateway (``repro.serving.api.AdminGateway``) already speaks a
+string-in/string-out JSON protocol (``execute_json``); this module puts it
+on a unix domain socket so drain/scale/rebalance/status can be driven
+from OUTSIDE the serving process — an operator shell, the storm CLI, or a
+future fleet controller. One command per line, one response per line::
+
+    $ printf '{"cmd": "status"}\n' | nc -U /tmp/repro-admin.sock
+    {"cmd": "status", "epoch": 0, "ok": true, "result": {...}}
+
+Errors never close the connection and never raise server-side: a
+malformed line comes back as ``{"ok": false, ...}`` exactly like the
+in-process gateway (it IS the in-process gateway — the socket adds
+nothing but framing). The server runs on the same event loop as the HTTP
+transport, so command execution is serialized with engine pumping and
+never races a step.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import os
+import socket
+
+__all__ = ["AdminSocketServer", "admin_request"]
+
+
+class AdminSocketServer:
+    """Serve one ``AdminGateway`` over a unix socket, line-per-command."""
+
+    def __init__(self, gateway, path: str):
+        self.gateway = gateway
+        self.path = path
+        self._server: asyncio.AbstractServer | None = None
+        self._conns: set[asyncio.Task] = set()
+
+    async def start(self) -> None:
+        if os.path.exists(self.path):     # stale socket from a dead server
+            os.unlink(self.path)
+        self._server = await asyncio.start_unix_server(self._handle,
+                                                       path=self.path)
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self._conns.add(asyncio.current_task())
+        try:
+            while True:
+                line = await reader.readline()
+                if not line:
+                    break
+                line = line.strip()
+                if not line:
+                    continue
+                resp = self.gateway.execute_json(line.decode("utf-8"))
+                writer.write(resp.encode("utf-8") + b"\n")
+                await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+        finally:
+            self._conns.discard(asyncio.current_task())
+            writer.close()
+            try:
+                await writer.wait_closed()
+            except (ConnectionResetError, BrokenPipeError):
+                pass
+
+    async def close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        for task in list(self._conns):     # idle keep-alive connections
+            task.cancel()
+        if self._conns:
+            await asyncio.gather(*self._conns, return_exceptions=True)
+        self._conns.clear()
+        if os.path.exists(self.path):
+            os.unlink(self.path)
+
+
+def admin_request(path: str, command, timeout: float = 10.0) -> dict:
+    """Blocking client helper: send ONE command (dict or JSON string) to
+    an admin socket, return the parsed response dict. Safe to call from
+    any thread — it opens its own connection per call."""
+    if isinstance(command, (dict, list)):
+        command = json.dumps(command)
+    with socket.socket(socket.AF_UNIX, socket.SOCK_STREAM) as sock:
+        sock.settimeout(timeout)
+        sock.connect(path)
+        sock.sendall(command.encode("utf-8") + b"\n")
+        buf = b""
+        while not buf.endswith(b"\n"):
+            chunk = sock.recv(65536)
+            if not chunk:
+                break
+            buf += chunk
+    if not buf:
+        raise ConnectionError(f"admin socket {path}: empty response")
+    return json.loads(buf.decode("utf-8"))

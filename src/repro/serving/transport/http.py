@@ -1,0 +1,307 @@
+"""Asyncio HTTP/SSE front door over a :class:`ServingFrontend`.
+
+One endpoint does the serving::
+
+    POST /v1/generate
+    {"prompt": [3, 1, 4], "max_new": 16, "deadline": 5.0, "tenant": "free"}
+
+The response is an ``text/event-stream`` body: the request's ordered
+event stream encoded frame-by-frame by the versioned wire codec
+(``repro.serving.transport.wire``), closed after the terminal event.
+``HEARTBEAT`` keepalive frames are injected whenever ``heartbeat_s`` wall
+seconds pass without a real frame — that is what keeps a connection alive
+across a multi-second stall window (fault recovery, drain) without
+weakening the ordering contract (heartbeats are transparent to
+``validate_stream``). Response headers carry ``X-Wire-Version``,
+``X-Request-Id`` and ``X-Submit-T`` (the sim-clock submit time, so a
+client can compute TTFT from event timestamps alone).
+
+Read-only helpers: ``GET /v1/metrics`` (the frontend's client-perceived
+metrics as JSON) and ``GET /healthz``. Admin commands do NOT ride HTTP —
+they go over the local admin socket (``transport.admin``), matching the
+privilege split of a production stack.
+
+The server owns an **engine pump**: a task that steps the frontend
+whenever there is work (queued/in-flight requests, pending or scheduled
+admin ops, an open recovery) and idles otherwise. Handlers, the pump and
+the admin socket all share one event loop, so nothing races an engine
+step; :class:`ServingTransport` runs that loop on a background thread for
+drivers that need the calling thread back (the CLI, the tests).
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from typing import Optional
+
+from repro.serving.transport import wire
+from repro.serving.transport.admin import AdminSocketServer
+
+__all__ = ["HttpServingServer", "ServingTransport"]
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            405: "Method Not Allowed", 500: "Internal Server Error"}
+
+
+def _json_bytes(code: int, obj) -> bytes:
+    body = json.dumps(obj, sort_keys=True).encode("utf-8")
+    return (f"HTTP/1.1 {code} {_REASONS.get(code, 'OK')}\r\n"
+            f"Content-Type: application/json\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n").encode("ascii") + body
+
+
+class HttpServingServer:
+    """Minimal HTTP/1.1 + SSE server over one frontend (stdlib asyncio)."""
+
+    def __init__(self, frontend, host: str = "127.0.0.1", port: int = 0,
+                 *, heartbeat_s: float = 15.0, poll_s: float = 0.001):
+        self.fe = frontend
+        self.host = host
+        self.port = port                   # 0 = ephemeral; fixed at start()
+        self.heartbeat_s = heartbeat_s
+        self.poll_s = poll_s
+        self.heartbeats_sent = 0
+        self.requests_served = 0
+        self._server: asyncio.AbstractServer | None = None
+        self._conns: set[asyncio.Task] = set()
+
+    async def start(self) -> None:
+        self._server = await asyncio.start_server(self._handle, self.host,
+                                                  self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+
+    async def close(self) -> None:
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+            self._server = None
+        for task in list(self._conns):     # connections still streaming
+            task.cancel()
+        if self._conns:
+            await asyncio.gather(*self._conns, return_exceptions=True)
+        self._conns.clear()
+
+    # -- request plumbing ---------------------------------------------------
+    @staticmethod
+    async def _read_request(reader: asyncio.StreamReader):
+        line = await reader.readline()
+        parts = line.decode("latin-1").split()
+        if len(parts) < 2:
+            raise ValueError(f"bad request line {line!r}")
+        method, path = parts[0].upper(), parts[1]
+        headers: dict[str, str] = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            name, _, value = line.decode("latin-1").partition(":")
+            headers[name.strip().lower()] = value.strip()
+        body = b""
+        n = int(headers.get("content-length", 0) or 0)
+        if n:
+            body = await reader.readexactly(n)
+        return method, path, headers, body
+
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        self._conns.add(asyncio.current_task())
+        try:
+            try:
+                method, path, _headers, body = await self._read_request(reader)
+            except (ValueError, asyncio.IncompleteReadError) as e:
+                writer.write(_json_bytes(400, {"error": str(e)}))
+                return
+            if path == "/healthz":
+                writer.write(_json_bytes(200, {
+                    "ok": True, "clock_s": self.fe.rt.clock.now(),
+                    "epoch": self.fe.rt.epoch}))
+            elif path == "/v1/metrics":
+                if method != "GET":
+                    writer.write(_json_bytes(405, {"error": "GET only"}))
+                else:
+                    writer.write(_json_bytes(200, self.fe.metrics()))
+            elif path == "/v1/generate":
+                if method != "POST":
+                    writer.write(_json_bytes(405, {"error": "POST only"}))
+                else:
+                    await self._generate(writer, body)
+            else:
+                writer.write(_json_bytes(404, {"error": f"no route {path}"}))
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            pass                    # client went away mid-stream
+        finally:
+            self._conns.discard(asyncio.current_task())
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (RuntimeError, ConnectionResetError, BrokenPipeError):
+                pass
+
+    # -- the serving endpoint ----------------------------------------------
+    async def _generate(self, writer: asyncio.StreamWriter,
+                        body: bytes) -> None:
+        try:
+            req = json.loads(body.decode("utf-8")) if body else {}
+            prompt = req.get("prompt")
+            if (not isinstance(prompt, list) or not prompt
+                    or not all(isinstance(x, int) for x in prompt)):
+                raise ValueError("'prompt' must be a non-empty list of ints")
+            max_new = int(req.get("max_new", 16))
+            deadline = req.get("deadline")
+            deadline = None if deadline is None else float(deadline)
+            tenant = str(req.get("tenant", "default"))
+        except (ValueError, json.JSONDecodeError, TypeError) as e:
+            writer.write(_json_bytes(400, {"error": str(e)}))
+            return
+        handle = self.fe.submit(prompt, max_new=max_new, deadline=deadline,
+                                tenant=tenant)
+        self.requests_served += 1
+        writer.write((
+            "HTTP/1.1 200 OK\r\n"
+            "Content-Type: text/event-stream\r\n"
+            "Cache-Control: no-cache\r\n"
+            "Connection: close\r\n"
+            f"X-Wire-Version: {wire.WIRE_VERSION}\r\n"
+            f"X-Request-Id: {handle.rid}\r\n"
+            f"X-Submit-T: {handle.t_submit:.6f}\r\n\r\n").encode("ascii"))
+        loop = asyncio.get_running_loop()
+        sent = 0
+        last_frame = loop.time()
+        while True:
+            fresh = sent < len(handle.events)
+            while sent < len(handle.events):
+                writer.write(wire.encode_event(handle.events[sent]))
+                sent += 1
+            if fresh:
+                last_frame = loop.time()
+                await writer.drain()
+            if handle.done:
+                break
+            if loop.time() - last_frame >= self.heartbeat_s:
+                # keepalive across a stall window: no real frame for
+                # heartbeat_s wall seconds -> inject a HEARTBEAT frame
+                writer.write(wire.encode_heartbeat(self.fe.rt.clock.now()))
+                self.heartbeats_sent += 1
+                last_frame = loop.time()
+                await writer.drain()
+            await asyncio.sleep(self.poll_s)
+        await writer.drain()
+
+
+class ServingTransport:
+    """HTTP server + admin socket + engine pump on one event loop.
+
+    ``start_background()`` runs that loop on a daemon thread and returns
+    once both sockets are bound (the HTTP port is then in ``http.port``);
+    ``stop()`` shuts everything down. The frontend must only be touched
+    through the wire once the transport is live — handlers and the pump
+    own it (single-threaded on the loop), which is exactly the layering
+    the in-process API already demands of drivers.
+    """
+
+    def __init__(self, frontend, *, host: str = "127.0.0.1", port: int = 0,
+                 admin_path: Optional[str] = None,
+                 heartbeat_s: float = 15.0, poll_s: float = 0.001,
+                 idle_sleep_s: float = 0.002):
+        self.fe = frontend
+        self.http = HttpServingServer(frontend, host, port,
+                                      heartbeat_s=heartbeat_s, poll_s=poll_s)
+        self.admin = (AdminSocketServer(frontend.admin, admin_path)
+                      if admin_path else None)
+        self.idle_sleep_s = idle_sleep_s
+        self.steps = 0
+        self._pump_task: asyncio.Task | None = None
+        self._stopped: asyncio.Event | None = None
+        self._loop: asyncio.AbstractEventLoop | None = None
+        self._thread: threading.Thread | None = None
+        self._startup_error: BaseException | None = None
+
+    # -- engine pump --------------------------------------------------------
+    def _has_work(self) -> bool:
+        fe, sched, rt = self.fe, self.fe.engine.sched, self.fe.rt
+        return bool(sched.inflight or sched.queue or fe._scheduled
+                    or rt.control_queue or rt.controller.recovering)
+
+    async def _pump(self) -> None:
+        while True:
+            if self._has_work():
+                # one synchronous engine step; handlers interleave at the
+                # yield below and stream out whatever events it produced
+                self.fe.step()
+                self.steps += 1
+                await asyncio.sleep(0)
+            else:
+                # idle: do NOT step (the sim clock should not race ahead
+                # of real arrivals while nothing is queued)
+                await asyncio.sleep(self.idle_sleep_s)
+
+    # -- lifecycle (in-loop) ------------------------------------------------
+    async def start(self) -> None:
+        await self.http.start()
+        if self.admin is not None:
+            await self.admin.start()
+        self._stopped = asyncio.Event()
+        self._pump_task = asyncio.create_task(self._pump())
+
+    async def aclose(self) -> None:
+        if self._pump_task is not None:
+            self._pump_task.cancel()
+            try:
+                await self._pump_task
+            except asyncio.CancelledError:
+                pass
+            self._pump_task = None
+        await self.http.close()
+        if self.admin is not None:
+            await self.admin.close()
+
+    async def serve_forever(self, ready_cb=None) -> None:
+        await self.start()
+        if ready_cb is not None:
+            ready_cb(self)      # the bound port is now in http.port
+        try:
+            await self._stopped.wait()
+        finally:
+            await self.aclose()
+
+    # -- lifecycle (background thread) --------------------------------------
+    def start_background(self, timeout: float = 30.0) -> "ServingTransport":
+        started = threading.Event()
+        self._thread = threading.Thread(target=self._thread_main,
+                                        args=(started,), daemon=True,
+                                        name="repro-serving-transport")
+        self._thread.start()
+        if not started.wait(timeout):
+            raise RuntimeError("serving transport failed to start in time")
+        if self._startup_error is not None:
+            raise RuntimeError("serving transport failed to start") \
+                from self._startup_error
+        return self
+
+    def _thread_main(self, started: threading.Event) -> None:
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+        try:
+            loop.run_until_complete(self.start())
+        except BaseException as e:           # report into the caller thread
+            self._startup_error = e
+            started.set()
+            loop.close()
+            return
+        started.set()
+        try:
+            loop.run_until_complete(self._stopped.wait())
+            loop.run_until_complete(self.aclose())
+        finally:
+            loop.close()
+
+    def stop(self, timeout: float = 30.0) -> None:
+        if self._loop is not None and self._stopped is not None:
+            self._loop.call_soon_threadsafe(self._stopped.set)
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None

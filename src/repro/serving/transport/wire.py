@@ -1,0 +1,157 @@
+"""Versioned SSE wire codec for the serving-event vocabulary.
+
+The per-request event stream a :class:`~repro.serving.api.StreamHandle`
+yields is already serializable (``StreamEvent.to_dict``); this module pins
+down the BYTES a transport puts on the wire so that a client in another
+process — or another implementation — observes exactly the stream the
+frontend produced. One event becomes one Server-Sent-Events frame::
+
+    event: TOKEN
+    id: 7
+    data: {"detail": {}, "index": 7, "kind": "TOKEN", "seq": 7,
+           "t": 1.25, "token": 42, "v": 1}
+
+* ``event:`` carries the canonical kind (``repro.serving.events``);
+* ``id:`` carries the stream ``seq`` (heartbeats, which have no stream
+  position, carry ``-1``);
+* ``data:`` is one sorted-key JSON object — the event's ``to_dict()``
+  plus the wire version field ``v``.
+
+``v`` is the WIRE version, not the event vocabulary's: a decoder must
+reject a frame whose ``v`` it does not speak (:class:`WireProtocolError`)
+instead of guessing at field semantics. Round-trip is exact by
+construction — ``decode(encode(stream))`` compares equal to the original
+under ``to_dict()`` — and is property-tested over every event kind.
+
+``HEARTBEAT`` frames are transport keepalives injected between real
+events so an SSE connection survives a long stall window; they are
+transparent to ``validate_stream`` (see ``repro.serving.events``).
+
+Stdlib-only on purpose, like ``events.py``: the docs drift gate and the
+client side of the load generator import this with nothing installed
+beyond the standard library.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.serving.events import EVENT_KINDS, StreamEvent
+
+__all__ = ["WIRE_VERSION", "SSEDecoder", "WireProtocolError",
+           "decode_stream", "encode_event", "encode_heartbeat",
+           "encode_stream"]
+
+#: Wire-protocol version stamped into every frame's ``data`` payload as
+#: ``"v"``. Bump on any incompatible framing/field change; decoders MUST
+#: reject versions they do not speak. Documented in docs/serving-api.md
+#: ("Wire transport") — tools/check_docs.py fails CI if the two drift.
+WIRE_VERSION = 1
+
+_FRAME_SEP = b"\n\n"
+
+
+class WireProtocolError(ValueError):
+    """A frame the decoder refuses: unknown version, unknown event kind,
+    or malformed SSE framing/JSON."""
+
+
+def _plain(x):
+    """JSON coercion for detail payloads: numpy scalars (which the
+    scheduler occasionally threads through event details) expose
+    ``item()``; everything else must already be plain JSON."""
+    if hasattr(x, "item"):
+        return x.item()
+    raise TypeError(f"not JSON-serializable on the wire: {x!r}")
+
+
+def encode_event(ev, version: int = WIRE_VERSION) -> bytes:
+    """One event -> one SSE frame (bytes, trailing blank line included)."""
+    payload = ev.to_dict() if hasattr(ev, "to_dict") else dict(ev)
+    kind = payload.get("kind")
+    if kind not in EVENT_KINDS:
+        raise WireProtocolError(f"unknown event kind {kind!r}")
+    payload["v"] = version
+    data = json.dumps(payload, sort_keys=True, default=_plain)
+    return (f"event: {kind}\nid: {payload.get('seq', -1)}\n"
+            f"data: {data}\n\n").encode("utf-8")
+
+
+def encode_heartbeat(t: float, version: int = WIRE_VERSION) -> bytes:
+    """A keepalive frame: a HEARTBEAT event with no stream position."""
+    return encode_event(StreamEvent(kind="HEARTBEAT", t=float(t), seq=-1),
+                        version)
+
+
+def encode_stream(events, version: int = WIRE_VERSION) -> bytes:
+    """Encode a whole event stream (no terminator frame: the transport
+    closes the connection after the terminal event)."""
+    return b"".join(encode_event(ev, version) for ev in events)
+
+
+def _decode_frame(frame: str) -> StreamEvent:
+    fields: dict[str, str] = {}
+    for line in frame.split("\n"):
+        if not line or line.startswith(":"):      # SSE comment line
+            continue
+        name, _, value = line.partition(":")
+        fields[name.strip()] = value.lstrip(" ")
+    if "data" not in fields:
+        raise WireProtocolError(f"frame without data line: {frame!r}")
+    try:
+        payload = json.loads(fields["data"])
+    except json.JSONDecodeError as e:
+        raise WireProtocolError(f"bad frame JSON: {e}") from e
+    v = payload.get("v")
+    if v != WIRE_VERSION:
+        raise WireProtocolError(
+            f"wire version {v!r} (this decoder speaks {WIRE_VERSION})")
+    kind = payload.get("kind")
+    if kind not in EVENT_KINDS:
+        raise WireProtocolError(f"unknown event kind {kind!r}")
+    if "event" in fields and fields["event"] != kind:
+        raise WireProtocolError(
+            f"frame event field {fields['event']!r} != payload kind {kind!r}")
+    return StreamEvent(kind=kind, t=float(payload.get("t", 0.0)),
+                       seq=int(payload.get("seq", -1)),
+                       index=int(payload.get("index", -1)),
+                       token=int(payload.get("token", -1)),
+                       detail=dict(payload.get("detail") or {}))
+
+
+class SSEDecoder:
+    """Incremental decoder: feed arbitrarily-chunked bytes off a socket,
+    get back every completed frame as a :class:`StreamEvent`. Split points
+    may land anywhere, including mid-rune of a UTF-8 sequence — the
+    decoder buffers bytes, not text."""
+
+    def __init__(self):
+        self._buf = b""
+
+    def feed(self, data: bytes) -> list[StreamEvent]:
+        self._buf += data
+        out: list[StreamEvent] = []
+        while True:
+            frame, sep, rest = self._buf.partition(_FRAME_SEP)
+            if not sep:
+                break
+            self._buf = rest
+            frame = frame.strip(b"\r\n")
+            if frame:                             # blank keepalive chunks ok
+                out.append(_decode_frame(frame.decode("utf-8")))
+        return out
+
+    def close(self) -> list[StreamEvent]:
+        """Flush at EOF. A non-empty remainder is a truncated frame."""
+        tail = self._buf.strip(b"\r\n")
+        if tail:
+            raise WireProtocolError(f"truncated frame at EOF: {tail[:80]!r}")
+        self._buf = b""
+        return []
+
+
+def decode_stream(data: bytes) -> list[StreamEvent]:
+    """Decode a complete wire stream in one call."""
+    dec = SSEDecoder()
+    out = dec.feed(data)
+    dec.close()
+    return out

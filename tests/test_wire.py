@@ -1,0 +1,243 @@
+"""Versioned SSE wire codec (repro.serving.transport.wire):
+
+  * exact round-trip — decode(encode(stream)) reproduces every event
+    field-for-field, for every kind in the vocabulary (enumerated and,
+    when hypothesis is installed, property-sampled), and re-encoding the
+    decoded stream reproduces the original BYTES;
+  * incremental decoding — frames split at every byte boundary (including
+    mid-UTF-8) decode identically to one-shot decoding; a truncated frame
+    at EOF is an error, not a silent drop;
+  * refusal — unknown wire versions, unknown kinds and malformed frames
+    raise WireProtocolError instead of guessing;
+  * transparency — HEARTBEAT frames injected anywhere leave the decoded
+    stream's validate_stream verdict unchanged;
+  * fidelity through the real stack — a scenario's in-process streams,
+    encoded and decoded, compare equal under to_dict() and byte-for-byte
+    under re-encoding (the "another process observes exactly the stream
+    the frontend produced" contract).
+"""
+import json
+
+import pytest
+
+from repro.serving.events import EVENT_KINDS, StreamEvent, validate_stream
+from repro.serving.transport import wire
+from repro.serving.transport.wire import (
+    SSEDecoder,
+    WireProtocolError,
+    decode_stream,
+    encode_event,
+    encode_heartbeat,
+    encode_stream,
+)
+
+
+def _sample_event(kind: str, seq: int, t: float = 1.5) -> StreamEvent:
+    detail = {"cause": "fault", "final": False} if kind == "FAILED" else \
+             {"stall_s": 0.25} if kind == "STALL_END" else \
+             {"reason": "queue_full"} if kind == "REJECTED" else {}
+    return StreamEvent(kind=kind, t=t, seq=seq,
+                       index=seq if kind == "TOKEN" else -1,
+                       token=42 if kind == "TOKEN" else -1, detail=detail)
+
+
+def _assert_same(a: list, b: list) -> None:
+    assert [e.to_dict() for e in a] == [e.to_dict() for e in b]
+
+
+# ---------------------------------------------------------------------------
+# Round-trip
+# ---------------------------------------------------------------------------
+
+def test_round_trip_every_kind():
+    events = [_sample_event(k, i, t=0.1 * i)
+              for i, k in enumerate(EVENT_KINDS)]
+    _assert_same(decode_stream(encode_stream(events)), events)
+
+
+def test_reencode_is_byte_identical():
+    events = [_sample_event(k, i) for i, k in enumerate(EVENT_KINDS)]
+    data = encode_stream(events)
+    assert encode_stream(decode_stream(data)) == data
+
+
+def test_frame_shape():
+    ev = _sample_event("TOKEN", 7)
+    frame = encode_event(ev).decode()
+    lines = frame.split("\n")
+    assert lines[0] == "event: TOKEN"
+    assert lines[1] == "id: 7"
+    assert lines[2].startswith("data: ")
+    assert frame.endswith("\n\n")
+    payload = json.loads(lines[2][len("data: "):])
+    assert payload["v"] == wire.WIRE_VERSION
+    assert payload["kind"] == "TOKEN"
+    assert payload["token"] == 42
+
+
+def test_round_trip_detail_payloads():
+    ev = StreamEvent(kind="FINISHED", t=3.25, seq=9,
+                     detail={"tokens": 9, "ttft_s": 0.35})
+    (back,) = decode_stream(encode_event(ev))
+    assert back.detail == {"tokens": 9, "ttft_s": 0.35}
+    assert back.terminal
+
+
+def test_property_round_trip_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    details = st.dictionaries(
+        st.sampled_from(["cause", "reason", "stall_s", "epoch", "final"]),
+        st.one_of(st.booleans(), st.integers(-10, 10_000),
+                  st.floats(0, 1e6, allow_nan=False), st.text(max_size=20)),
+        max_size=4)
+    events = st.builds(
+        StreamEvent,
+        kind=st.sampled_from(EVENT_KINDS),
+        t=st.floats(0, 1e6, allow_nan=False).map(lambda x: round(x, 6)),
+        seq=st.integers(-1, 10_000),
+        index=st.integers(-1, 10_000),
+        token=st.integers(-1, 100_000),
+        detail=details)
+
+    @hyp.given(st.lists(events, max_size=20))
+    @hyp.settings(max_examples=200, deadline=None)
+    def check(evs):
+        data = encode_stream(evs)
+        _assert_same(decode_stream(data), evs)
+        assert encode_stream(decode_stream(data)) == data
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Incremental decoding
+# ---------------------------------------------------------------------------
+
+def test_decoder_split_at_every_byte():
+    events = [_sample_event("TOKEN", 0), _sample_event("STALL_BEGIN", 1),
+              _sample_event("FINISHED", 2)]
+    data = encode_stream(events)
+    for cut in range(1, len(data)):
+        dec = SSEDecoder()
+        out = dec.feed(data[:cut]) + dec.feed(data[cut:])
+        dec.close()
+        _assert_same(out, events)
+
+
+def test_decoder_byte_by_byte():
+    events = [_sample_event("TOKEN", 0), _sample_event("FINISHED", 1)]
+    data = encode_stream(events)
+    dec = SSEDecoder()
+    out = []
+    for i in range(len(data)):
+        out += dec.feed(data[i:i + 1])
+    dec.close()
+    _assert_same(out, events)
+
+
+def test_truncated_frame_is_an_error():
+    data = encode_event(_sample_event("TOKEN", 0))
+    dec = SSEDecoder()
+    dec.feed(data[:-3])       # missing the frame separator
+    with pytest.raises(WireProtocolError, match="truncated"):
+        dec.close()
+
+
+# ---------------------------------------------------------------------------
+# Refusal
+# ---------------------------------------------------------------------------
+
+def test_unknown_version_refused():
+    data = encode_event(_sample_event("TOKEN", 0),
+                        version=wire.WIRE_VERSION + 1)
+    with pytest.raises(WireProtocolError, match="wire version"):
+        decode_stream(data)
+
+
+def test_unknown_kind_refused_on_encode_and_decode():
+    with pytest.raises(WireProtocolError, match="unknown event kind"):
+        encode_event({"kind": "NOPE", "seq": 0, "t": 0.0})
+    forged = (b"event: NOPE\nid: 0\n"
+              b'data: {"kind": "NOPE", "seq": 0, "t": 0.0, "v": 1}\n\n')
+    with pytest.raises(WireProtocolError, match="unknown event kind"):
+        decode_stream(forged)
+
+
+def test_event_field_must_match_payload_kind():
+    forged = (b"event: TOKEN\nid: 0\n"
+              b'data: {"kind": "FINISHED", "seq": 0, "t": 0.0, "v": 1}\n\n')
+    with pytest.raises(WireProtocolError, match="!="):
+        decode_stream(forged)
+
+
+def test_malformed_json_refused():
+    with pytest.raises(WireProtocolError, match="bad frame JSON"):
+        decode_stream(b"event: TOKEN\ndata: {nope\n\n")
+    with pytest.raises(WireProtocolError, match="without data"):
+        decode_stream(b"event: TOKEN\nid: 3\n\n")
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat transparency
+# ---------------------------------------------------------------------------
+
+def test_heartbeats_anywhere_keep_stream_valid():
+    real = [StreamEvent("TOKEN", 0.1 * (i + 1), i, index=i, token=i)
+            for i in range(4)]
+    real.append(StreamEvent("FINISHED", 0.6, 4, detail={"tokens": 4}))
+    assert validate_stream(real) == []
+    for slot in range(len(real) + 1):
+        data = b"".join(encode_event(e) for e in real[:slot])
+        data += encode_heartbeat(t=real[slot - 1].t if slot else 0.0)
+        data += b"".join(encode_event(e) for e in real[slot:])
+        decoded = decode_stream(data)
+        assert validate_stream(decoded) == []
+        tokens = [e for e in decoded if e.kind == "TOKEN"]
+        assert [e.index for e in tokens] == [0, 1, 2, 3]
+
+
+def test_heartbeat_time_regression_is_flagged():
+    evs = [StreamEvent("TOKEN", 1.0, 0, index=0, token=1),
+           StreamEvent("HEARTBEAT", 0.2, -1),
+           StreamEvent("FINISHED", 1.1, 1, detail={"tokens": 1})]
+    assert any("heartbeat" in v for v in validate_stream(evs))
+
+
+# ---------------------------------------------------------------------------
+# Fidelity through the real stack
+# ---------------------------------------------------------------------------
+
+def test_scenario_streams_survive_the_wire():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import make_initial_membership
+    from repro.core.reintegration import WarmupCostModel
+    from repro.models import init_params
+    from repro.runtime.elastic import ElasticEPRuntime
+    from repro.serving.api import ServingFrontend
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("mixtral-8x22b").reduced()
+    table = make_initial_membership(8, cfg.moe.num_experts, 1)
+    params = init_params(cfg, jax.random.key(0), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    rt = ElasticEPRuntime(cfg, params, table,
+                          warmup_model=WarmupCostModel(1, 1, 2, 1))
+    eng = ServingEngine(rt, max_batch=4, max_len=64)
+    fe = ServingFrontend(eng)
+    handles = [fe.submit([3, 1, 4, 1, 5], max_new=8) for _ in range(6)]
+    rt.injector.inject_at(0.4, [2], kind="sigkill")
+    fe.run(max_steps=5_000)
+
+    assert fe.stream_violations() == []
+    for h in handles:
+        assert h.done
+        data = encode_stream(h.events)
+        decoded = decode_stream(data)
+        _assert_same(decoded, h.events)          # field-for-field equal
+        assert encode_stream(decoded) == data    # byte-for-byte equal
+        assert validate_stream(decoded) == []

@@ -97,14 +97,45 @@ def check_event_vocabulary() -> list[str]:
     return bad
 
 
+def check_wire_version() -> list[str]:
+    """The SSE wire-codec version lives in BOTH
+    repro.serving.transport.wire.WIRE_VERSION and docs/serving-api.md
+    ("wire v<N>"); flag any drift. Loaded from its file like the events
+    module — the wire codec is deliberately stdlib-only."""
+    ev_path = os.path.join(ROOT, "src", "repro", "serving", "events.py")
+    spec = importlib.util.spec_from_file_location("_serving_events", ev_path)
+    ev_mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = ev_mod
+    spec.loader.exec_module(ev_mod)
+    path = os.path.join(ROOT, "src", "repro", "serving", "transport",
+                        "wire.py")
+    spec = importlib.util.spec_from_file_location("_serving_wire", path)
+    mod = importlib.util.module_from_spec(spec)
+    # wire.py imports `repro.serving.events`; satisfy it with the
+    # already-loaded standalone module so no package import happens
+    sys.modules.setdefault("repro.serving.events", ev_mod)
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    doc = os.path.join(ROOT, "docs", "serving-api.md")
+    with open(doc) as f:
+        text = f.read()
+    want = f"wire v{mod.WIRE_VERSION}"
+    if want not in text:
+        return [f"docs/serving-api.md: does not mention `{want}` — the "
+                f"documented wire version drifted from "
+                f"transport.wire.WIRE_VERSION ({mod.WIRE_VERSION})"]
+    return []
+
+
 def main() -> int:
-    bad = check_links() + check_phase_vocabulary() + check_event_vocabulary()
+    bad = (check_links() + check_phase_vocabulary()
+           + check_event_vocabulary() + check_wire_version())
     if bad:
         for line in bad:
             print(f"DOCS CHECK FAILED: {line}", file=sys.stderr)
         return 1
     print(f"docs check ok: {len(_md_files())} files, links + phase "
-          f"vocabulary + event vocabulary consistent")
+          f"vocabulary + event vocabulary + wire version consistent")
     return 0
 
 
