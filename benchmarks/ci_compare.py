@@ -139,6 +139,20 @@ def _load_metrics(doc: dict) -> dict[str, Metric]:
             slo[row["sched"]] = row
             out[f"{key}/deadline_miss_rate"] = (
                 float(row["deadline_miss_rate"]), "lower")
+        elif row.get("cell") == "prefix":
+            # the on/off contrast pair: the cached run must keep skipping
+            # prefill work, and stream identity vs the uncached run is
+            # hard-zero (the loadgen script also self-gates both)
+            key = f"prefix[{row['prefix_cache']}]"
+            out[f"{key}/identity_mismatches"] = (
+                float(row["identity_mismatches"]), "zero")
+            out[f"{key}/error_events"] = (
+                float(row["error_events"]), "zero")
+            if row["prefix_cache"] == "on":
+                out[f"{key}/prefix_hit_rate"] = (
+                    float(row["prefix_hit_rate"]), "higher")
+                out[f"{key}/tokens_prefill_skipped"] = (
+                    float(row["tokens_prefill_skipped"]), "higher")
         else:
             key = f"load/r{row['rate_rps']:g}[{row['policy']}]"
             if row.get("policy") == "elastic":

@@ -42,7 +42,10 @@ RATES_SMOKE = [4.0, 8.0, 16.0]
 
 def _build_frontend(arch: str, seed: int, *, fixed_membership: bool = False,
                     queue_policy: str = "fifo", quotas=None,
-                    max_batch: int = 8, max_len: int = 96):
+                    max_batch: int = 8, max_len: int = 96,
+                    prefix_cache=None):
+    import dataclasses
+
     import jax
     import jax.numpy as jnp
 
@@ -55,6 +58,8 @@ def _build_frontend(arch: str, seed: int, *, fixed_membership: bool = False,
     from repro.serving.engine import ServingEngine
 
     cfg = get_config(arch).reduced()
+    if prefix_cache is not None:
+        cfg = dataclasses.replace(cfg, prefix_cache=prefix_cache)
     table = make_initial_membership(8, cfg.moe.num_experts, 1)
     params = init_params(cfg, jax.random.key(seed), jnp.float32,
                          table.slot_to_expert, table.num_slots)
@@ -156,6 +161,61 @@ def main(argv=None) -> int:
     if miss_rates["edf"] > miss_rates["fifo"]:
         bad.append(f"slo: EDF deadline-miss rate {miss_rates['edf']} worse "
                    f"than FIFO {miss_rates['fifo']} on the same workload")
+
+    # ---- prefix contrast: same prefix-heavy storm, cache on vs off ------
+    # max_len=32 keeps the cache gate ON for the reduced config (SWA
+    # window == 32, so a slot never wraps); sized so prefix(16) +
+    # suffix(<=6) + out(<=6) always fits. The on/off pair carries TWO
+    # hard gates: the cached run must actually skip prefill work, and
+    # every client stream must be BYTE-IDENTICAL to the uncached run —
+    # the cache is a pure optimization, never a behavior change.
+    prefix_spec = WorkloadSpec(
+        rate_rps=12.0, duration_s=duration,
+        prompt_mean=4, prompt_max=6, out_mean=4, out_max=6,
+        prefix_groups=2, prefix_len=16)
+    prefix_sessions = build_sessions(prefix_spec, seed=args.seed)
+    streams = {}
+    for mode, enabled in (("on", True), ("off", False)):
+        rt, fe = _build_frontend(args.arch, args.seed, max_batch=4,
+                                 max_len=32, prefix_cache=enabled)
+        results = run_storm(fe, prefix_sessions)
+        streams[mode] = {
+            r.session.sid: tuple(e.token for e in r.events
+                                 if e.kind == "TOKEN")
+            for r in results}
+        card = summarize(results)
+        card.pop("violations", None)
+        m = fe.metrics()
+        row = {"cell": "prefix", "prefix_cache": mode, "policy": "elastic",
+               "duration_s": duration,
+               "prefix_hits": m["prefix_hits"],
+               "prefix_hit_rate": m["prefix_hit_rate"],
+               "tokens_prefill_skipped": m["tokens_prefill_skipped"],
+               "identity_mismatches": 0, **card}
+        rows.append(row)
+        print(f"prefix[{mode}],12,"
+              f"sessions={card['sessions']}"
+              f"_hits={m['prefix_hits']}"
+              f"_hit_rate={m['prefix_hit_rate']}"
+              f"_skipped={m['tokens_prefill_skipped']}"
+              f"_errors={card['error_events']}"
+              f"_violations={card['stream_violations']}")
+        if card["stream_violations"] or card["error_events"]:
+            bad.append(f"prefix[{mode}]: {card['error_events']} errors / "
+                       f"{card['stream_violations']} stream violations")
+    mismatches = sum(1 for sid in streams["off"]
+                     if streams["on"].get(sid) != streams["off"][sid])
+    for row in rows:
+        if row["cell"] == "prefix":
+            row["identity_mismatches"] = mismatches
+    if mismatches:
+        bad.append(f"prefix: {mismatches} sessions decoded DIFFERENT "
+                   f"streams with the cache on vs off")
+    on_row = next(r for r in rows if r["cell"] == "prefix"
+                  and r["prefix_cache"] == "on")
+    if not on_row["tokens_prefill_skipped"]:
+        bad.append("prefix: cache-on run skipped zero prefill tokens on a "
+                   "prefix-heavy workload (cache never engaged)")
 
     out = {
         "meta": {

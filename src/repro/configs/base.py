@@ -132,6 +132,10 @@ class ArchConfig:
     kv_pool: str = "paged"             # "paged" (block tables, drain-time KV
                                        # migration) | "slot" (contiguous A/B)
     kv_block_size: int = 16            # tokens per KV page (paged pool)
+    prefix_cache: bool = True          # cross-session prompt-prefix sharing
+                                       # (paged pool only; the engine gates
+                                       # it off for cache layouts that are
+                                       # not position-indexed/non-wrapping)
     # ---- beyond-paper perf knobs (EXPERIMENTS SSPerf) ----
     attn_head_pad: int = 0             # zero-pad Q heads to divide the TP axis
     expert_serving_dtype: str = ""     # e.g. "float8_e4m3fn" weight storage

@@ -139,11 +139,16 @@ class KVPageManifest:
     by the time the table patch lands every surviving rank already holds
     the KV it needs and re-admission replays nothing.
     """
-    pages_total: int      # pages held by all in-flight requests
+    pages_total: int      # PHYSICAL pages held by all in-flight requests
     pages_moved: int      # the departing ranks' share (what actually ships)
     bytes_moved: int      # pages_moved * page_bytes (Tier-2 transfer timing)
     requests: int         # live requests whose KV the manifest covers
     page_bytes: int       # modeled bytes per page (block_size x token KV)
+    # prefix-sharing dedup: block-table references vs physical pages. A
+    # page shared by N requests appears N times in the logical count but
+    # ships once — pages_deduped is the transfer the prefix cache saved.
+    pages_logical: int = 0
+    pages_deduped: int = 0
 
 
 class MembershipTransaction:

@@ -86,6 +86,9 @@ def main(argv=None):
                     "(default: the arch config's kv_pool, normally paged)")
     ap.add_argument("--kv-block-size", type=int, default=None,
                     help="tokens per KV page (paged pool only)")
+    ap.add_argument("--prefix-cache", choices=["on", "off"], default=None,
+                    help="override ArchConfig.prefix_cache (cross-session "
+                    "prompt-prefix sharing over the paged pool)")
     ap.add_argument("--max-queue-depth", type=int, default=None,
                     help="admission control: reject submits past this queue "
                     "depth with a structured REJECTED event")
@@ -127,9 +130,14 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
-    if args.kv_block_size is not None:
+    if args.kv_block_size is not None or args.prefix_cache is not None:
         import dataclasses
-        cfg = dataclasses.replace(cfg, kv_block_size=args.kv_block_size)
+        repl = {}
+        if args.kv_block_size is not None:
+            repl["kv_block_size"] = args.kv_block_size
+        if args.prefix_cache is not None:
+            repl["prefix_cache"] = args.prefix_cache == "on"
+        cfg = dataclasses.replace(cfg, **repl)
     E = cfg.moe.num_experts if cfg.is_moe else 1
     from repro.core.topology import FaultDomainTree
     rph = args.ranks_per_host or cfg.ranks_per_host
@@ -228,6 +236,13 @@ def main(argv=None):
           f"error_events={m['error_events']}")
     bad = fe.stream_violations()
     print(f"stream contract: {'OK (exactly-once, in-order)' if not bad else bad[:3]}")
+    kvp = eng.kv.stats().get("prefix", {})
+    print(f"prefix cache: enabled={eng.prefix_enabled} "
+          f"hits={m['prefix_hits']} hit_rate={m['prefix_hit_rate']} "
+          f"prefill_skipped={m['tokens_prefill_skipped']} "
+          f"nodes={kvp.get('nodes', 0)} "
+          f"shared_blocks={kvp.get('shared_blocks', 0)} "
+          f"evictions={kvp.get('evictions', 0)}")
     print(f"serve-step compilations: {eng.compile_count()} (no recompile "
           f"across membership changes; dispatch={eng.dispatch})")
     print(f"membership epoch: {rt.epoch} (every transition committed "

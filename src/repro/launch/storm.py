@@ -17,6 +17,17 @@ against a transport this command boots itself.
   PYTHONPATH=src python -m repro.launch.storm --arch mixtral-8x22b --smoke \
       --tenant paid:2.0:30.0 --tenant free:1.0::8 --sched edf
 
+  # prefix-heavy storm: every arrival shares one of 2 per-tenant system
+  # prompts (16 tokens = one KV block), exercising the cross-session
+  # prefix cache; the scorecard carries hit-rate + skipped-prefill counts
+  PYTHONPATH=src python -m repro.launch.storm --arch mixtral-8x22b --smoke \
+      --max-len 32 --prefix-groups 2 --prefix-len 16
+
+  # drive an ALREADY RUNNING server (e.g. a `serve --http` child process)
+  # over the wire — no engine is built in this process
+  PYTHONPATH=src python -m repro.launch.storm --arch mixtral-8x22b --smoke \
+      --connect 127.0.0.1:8080 --admin-socket /tmp/admin.sock --check
+
 The scorecard (``loadgen.storm.summarize``) prints as JSON: goodput,
 TTFT/stall percentiles, deadline misses, per-tenant outcomes, transport
 errors and stream-contract violations. ``--seed`` fixes the entire
@@ -67,12 +78,22 @@ def main(argv=None):
                     metavar="NAME[:W[:DL[:Q]]]",
                     help="tenant mix entry: name:weight:deadline_s:quota "
                     "(repeatable; empty fields allowed)")
+    ap.add_argument("--prefix-groups", type=int, default=0,
+                    help="shared system prompts per tenant (0 = off): "
+                    "every arrival prepends one, producing the prompt "
+                    "reuse the prefix cache feeds on")
+    ap.add_argument("--prefix-len", type=int, default=16,
+                    help="tokens per shared system prompt (block-align to "
+                    "kv_block_size for full cache effect)")
     # serving knobs
     ap.add_argument("--sched", choices=["fifo", "edf"], default="fifo")
     ap.add_argument("--max-queue-depth", type=int, default=None)
     ap.add_argument("--fixed-membership", action="store_true",
                     help="full-restart baseline instead of elastic EP")
     ap.add_argument("--kv-pool", choices=["slot", "paged"], default=None)
+    ap.add_argument("--prefix-cache", choices=["on", "off"], default=None,
+                    help="override ArchConfig.prefix_cache (cross-session "
+                    "prompt-prefix sharing over the paged pool)")
     # mid-storm fault / drain
     ap.add_argument("--fail-rank", type=int, action="append", default=None)
     ap.add_argument("--fail-at", type=float, default=None)
@@ -83,6 +104,13 @@ def main(argv=None):
                     help="boot the HTTP/SSE transport + admin socket and "
                     "drive the storm over real sockets instead of the "
                     "in-process frontend")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="drive an ALREADY RUNNING server over the wire "
+                    "(e.g. a `serve --http` child process) instead of "
+                    "booting one here — no engine is built in this "
+                    "process, so jax never loads; pair with "
+                    "--admin-socket to health-check + pull kv.prefix "
+                    "stats from the server")
     ap.add_argument("--time-scale", type=float, default=0.02,
                     help="wire mode: wall seconds per sim-second of "
                     "arrival spacing (0 = all sessions fire at once)")
@@ -98,15 +126,7 @@ def main(argv=None):
                     "(the CI smoke gate)")
     args = ap.parse_args(argv)
 
-    import jax
-    import jax.numpy as jnp
-
     from repro.configs import get_config
-    from repro.core import make_initial_membership
-    from repro.models import init_params
-    from repro.runtime.elastic import ElasticEPRuntime
-    from repro.serving.api import ServingFrontend
-    from repro.serving.engine import ServingEngine
     from repro.serving.loadgen import (
         WorkloadSpec,
         build_sessions,
@@ -118,14 +138,10 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
-    E = cfg.moe.num_experts if cfg.is_moe else 1
-    table = make_initial_membership(args.world, E, args.slots_per_rank)
-    params = init_params(cfg, jax.random.key(args.seed), jnp.float32,
-                         table.slot_to_expert, table.num_slots)
-    rt = ElasticEPRuntime(cfg, params, table)
-    eng = ServingEngine(rt, max_batch=args.max_batch, max_len=args.max_len,
-                        fixed_membership=args.fixed_membership,
-                        kv_pool=args.kv_pool, queue_policy=args.sched)
+    if args.prefix_cache is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg,
+                                  prefix_cache=args.prefix_cache == "on")
 
     tenants = tuple(_parse_tenant(s) for s in (args.tenant or []))
     spec = WorkloadSpec(rate_rps=args.rate, duration_s=args.duration,
@@ -135,45 +151,92 @@ def main(argv=None):
                         out_mean=args.out_mean,
                         out_max=min(args.out_max, args.max_len // 2),
                         vocab=cfg.vocab_size,
+                        prefix_groups=args.prefix_groups,
+                        prefix_len=(args.prefix_len
+                                    if args.prefix_groups else 0),
                         **({"tenants": tenants} if tenants else {}))
     sessions = build_sessions(spec, seed=args.seed)
-    fe = ServingFrontend(eng, max_queue_depth=args.max_queue_depth,
-                         tenant_quotas=spec.quotas())
-
-    # mid-storm events are scheduled BEFORE anything serves: the injector
-    # fires when the sim clock crosses, whichever driver is stepping
-    if args.fail_at is not None and args.fail_rank:
-        rt.injector.inject_at(args.fail_at, args.fail_rank)
-    if args.drain_at is not None and args.drain_rank:
-        fe.admin.execute({"cmd": "drain", "ranks": args.drain_rank,
-                          "at": args.drain_at})
 
     admin_status = None
-    if args.wire:
-        import tempfile
-
-        from repro.serving.transport import ServingTransport, admin_request
-        admin_path = args.admin_socket or (
-            tempfile.mkdtemp(prefix="repro-storm-") + "/admin.sock")
-        tr = ServingTransport(fe, admin_path=admin_path)
-        tr.start_background()
-        try:
-            admin_status = admin_request(admin_path, {"cmd": "status"})
-            results = run_storm_http("127.0.0.1", tr.http.port, sessions,
-                                     time_scale=args.time_scale)
-        finally:
-            tr.stop()
+    if args.connect:
+        # external-server mode: this process is a pure wire client — the
+        # session list is the only thing built locally (stdlib only; the
+        # subprocess e2e relies on jax never loading here)
+        from repro.serving.transport import admin_request
+        host, _, port = args.connect.rpartition(":")
+        if args.admin_socket:
+            admin_status = admin_request(args.admin_socket, {"cmd": "status"})
+        results = run_storm_http(host or "127.0.0.1", int(port), sessions,
+                                 time_scale=args.time_scale)
+        card = summarize(results)
+        card["mode"] = "connect"
+        card["sched"] = args.sched
+        card["seed"] = args.seed
     else:
-        results = run_storm(fe, sessions)
+        import jax
+        import jax.numpy as jnp
 
-    card = summarize(results)
-    card["mode"] = "wire" if args.wire else "in_process"
-    card["sched"] = args.sched
-    card["policy"] = rt.policy.name
-    card["seed"] = args.seed
+        from repro.core import make_initial_membership
+        from repro.models import init_params
+        from repro.runtime.elastic import ElasticEPRuntime
+        from repro.serving.api import ServingFrontend
+        from repro.serving.engine import ServingEngine
+
+        E = cfg.moe.num_experts if cfg.is_moe else 1
+        table = make_initial_membership(args.world, E, args.slots_per_rank)
+        params = init_params(cfg, jax.random.key(args.seed), jnp.float32,
+                             table.slot_to_expert, table.num_slots)
+        rt = ElasticEPRuntime(cfg, params, table)
+        eng = ServingEngine(rt, max_batch=args.max_batch,
+                            max_len=args.max_len,
+                            fixed_membership=args.fixed_membership,
+                            kv_pool=args.kv_pool, queue_policy=args.sched)
+        fe = ServingFrontend(eng, max_queue_depth=args.max_queue_depth,
+                             tenant_quotas=spec.quotas())
+
+        # mid-storm events are scheduled BEFORE anything serves: the
+        # injector fires when the sim clock crosses, whichever driver is
+        # stepping
+        if args.fail_at is not None and args.fail_rank:
+            rt.injector.inject_at(args.fail_at, args.fail_rank)
+        if args.drain_at is not None and args.drain_rank:
+            fe.admin.execute({"cmd": "drain", "ranks": args.drain_rank,
+                              "at": args.drain_at})
+
+        if args.wire:
+            import tempfile
+
+            from repro.serving.transport import ServingTransport, \
+                admin_request
+            admin_path = args.admin_socket or (
+                tempfile.mkdtemp(prefix="repro-storm-") + "/admin.sock")
+            tr = ServingTransport(fe, admin_path=admin_path)
+            tr.start_background()
+            try:
+                admin_status = admin_request(admin_path, {"cmd": "status"})
+                results = run_storm_http("127.0.0.1", tr.http.port, sessions,
+                                         time_scale=args.time_scale)
+            finally:
+                tr.stop()
+        else:
+            results = run_storm(fe, sessions)
+
+        card = summarize(results)
+        card["mode"] = "wire" if args.wire else "in_process"
+        card["sched"] = args.sched
+        card["policy"] = rt.policy.name
+        card["seed"] = args.seed
+        m = fe.metrics()
+        card["prefix_cache"] = eng.prefix_enabled
+        card["prefix_hits"] = m["prefix_hits"]
+        card["prefix_hit_rate"] = m["prefix_hit_rate"]
+        card["tokens_prefill_skipped"] = m["tokens_prefill_skipped"]
     if admin_status is not None:
         card["admin_ok"] = bool(admin_status.get("ok"))
         card["epoch"] = admin_status.get("epoch")
+        kv = (admin_status.get("result") or {}).get("kv") or {}
+        if kv.get("prefix", {}).get("enabled"):
+            card["kv_prefix"] = kv["prefix"]
     print(json.dumps(card, indent=2, sort_keys=True))
     if args.out:
         with open(args.out, "w") as f:

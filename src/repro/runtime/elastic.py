@@ -773,7 +773,9 @@ class ElasticEPRuntime:
                     kv_pages_moved=(txn.kv_manifest.pages_moved
                                     if txn.kv_manifest else 0),
                     kv_bytes_moved=(txn.kv_manifest.bytes_moved
-                                    if txn.kv_manifest else 0))
+                                    if txn.kv_manifest else 0),
+                    kv_pages_deduped=(txn.kv_manifest.pages_deduped
+                                      if txn.kv_manifest else 0))
         return {"pause_s": pause, "epoch": self.epoch}
 
     def rebalance_placement(self) -> dict:

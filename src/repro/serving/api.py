@@ -415,6 +415,13 @@ class ServingFrontend:
                                        for h in self.streams.values()),
             "tokens_migrated": stats.tokens_migrated,
             "migrations": stats.migrated,
+            # prefix-cache economics: admissions that borrowed cached
+            # pages, and the prompt positions prefill never replayed
+            "prefix_hits": stats.prefix_hits,
+            "prefix_hit_rate": round(
+                stats.prefix_hits / stats.admitted, 6)
+                if stats.admitted else 0.0,
+            "tokens_prefill_skipped": stats.tokens_prefill_skipped,
             "stall_events": stall_events,
             "error_events": error_events,
             "rejected_admission": self.rejected_admission,

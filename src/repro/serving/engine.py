@@ -71,10 +71,17 @@ class ServingEngine:
         # contents only, so the mode survives the whole fail/rejoin lifetime
         self.dispatch = getattr(runtime.dpl.moe, "dispatch", "dense")
         # KV pool flavor ("slot" | "paged"): the paged pool pins pages at
-        # preemption so planned drains MIGRATE KV instead of replaying it
-        self.kv = make_pool(kv_pool or getattr(cfg, "kv_pool", "paged"),
-                            max_batch, max_len,
-                            block_size=getattr(cfg, "kv_block_size", 16))
+        # preemption so planned drains MIGRATE KV instead of replaying it.
+        # Cross-session prefix sharing rides the paged pool when the arch's
+        # cache layout actually supports it (position-indexed, no ring
+        # wrap, no recurrent state) — otherwise the toggle is inert.
+        kind = kv_pool or getattr(cfg, "kv_pool", "paged")
+        self.prefix_enabled = (kind == "paged"
+                               and getattr(cfg, "prefix_cache", False)
+                               and self.prefix_cache_supported(cfg, max_len))
+        self.kv = make_pool(kind, max_batch, max_len,
+                            block_size=getattr(cfg, "kv_block_size", 16),
+                            prefix_cache=self.prefix_enabled)
         self.sched = Scheduler(self.kv, max_retries=max_retries,
                                queue_policy=queue_policy)
         self.caches = init_caches(cfg, max_batch, max_len, dtype)
@@ -150,6 +157,28 @@ class ServingEngine:
         self._last_input = np.zeros((max_batch, 1), np.int32)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def prefix_cache_supported(cfg: ArchConfig, max_len: int) -> bool:
+        """Whether the arch's cache layout admits cross-session prefix
+        sharing. A donor row is reusable only when every cache leaf is
+        position-indexed and never rewritten below the current length:
+        recurrent state (mamba/xlstm mixers) folds the whole context into
+        one vector a prefix cannot be cut out of; encoder cross-attention
+        and modality frontends key on per-request inputs outside the
+        prompt tokens; and a sliding-window ring buffer wraps once the
+        context exceeds the window, overwriting cached prefix positions
+        in place."""
+        if cfg.family not in ("dense", "moe"):
+            return False
+        if cfg.attention == "none":
+            return False
+        if cfg.encoder is not None or getattr(cfg, "frontend", None):
+            return False
+        if cfg.attention == "swa" and 0 < cfg.window < max_len:
+            return False
+        return True
+
+    # ------------------------------------------------------------------
     def compile_count(self) -> int:
         """Number of serve-step compilations so far (must be 1 for the whole
         fail/recover/rejoin lifetime — asserted by tests)."""
@@ -170,7 +199,12 @@ class ServingEngine:
         publishes the shrunk membership. Called by the runtime inside the
         drain window (its kv-migrate phase)."""
         pool = self.kv
+        # PHYSICAL pages: a prefix-shared page referenced by many block
+        # tables ships exactly once. The logical count (per-table
+        # references) rides along so the dedup win is observable.
         pages_total = pool.inflight_pages()
+        pages_logical = getattr(pool, "inflight_pages_logical",
+                                pool.inflight_pages)()
         mask = np.asarray(self.rt.table.active_mask, bool)
         # pre-drain active count, whether or not the transaction already
         # deactivated the departing ranks on the live table
@@ -183,11 +217,23 @@ class ServingEngine:
             pages_moved=pages_moved,
             bytes_moved=pages_moved * page_bytes,
             requests=len(pool.active_slots()) + pool.stats()["pinned"],
-            page_bytes=page_bytes)
+            page_bytes=page_bytes,
+            pages_logical=pages_logical,
+            pages_deduped=pages_logical - pages_total)
 
     # ------------------------------------------------------------------
     def _build_inputs(self):
         tokens = np.zeros((self.kv.num_slots, 1), np.int32)
+        # The compiled step writes k/v at ring position ``length % W`` for
+        # EVERY batch row, occupied or not. Idle rows (free slots, parked
+        # cache-resident donors, pinned snapshots) feed length -1 so that
+        # stray write lands on the LAST ring position with cpos=-1: always
+        # masked, re-written by a real occupant before it could ever be
+        # attended, and never inside a shareable prefix block (a full
+        # final block needs a max_len-token prompt, which never fits).
+        # Length 0 instead would clobber position 0 of a parked donor row
+        # with garbage every step — and borrowers copy that row.
+        lengths = np.full(self.kv.num_slots, -1, np.int32)
         for slot in self.kv.active_slots():
             req = self.sched.running[self.kv.owner_of(slot)]
             pos = self._prompt_pos[slot]
@@ -200,7 +246,7 @@ class ServingEngine:
                 tokens[slot, 0] = req.replay_token(pos)
             else:
                 tokens[slot, 0] = req.generated[-1] if req.generated else 0
-        lengths = self.kv.step_lengths()
+            lengths[slot] = self.kv.length_of(slot)
         return tokens, lengths
 
     def step(self) -> int:
@@ -305,8 +351,16 @@ class ServingEngine:
                     self._prompt_pos[req.slot] = self.kv.length_of(req.slot)
                 else:
                     mask[req.slot] = True
-                    self._prompt_pos[req.slot] = 0
                     fresh = True
+                    skip = req.prefix_skip
+                    if skip > 0:
+                        # prefix hit: positions [0, skip) arrive via the
+                        # queued donor-row gather below (applied AFTER the
+                        # reset, so the copy lands clean); replay starts
+                        # at the skip position with the resident length
+                        # rewound to match
+                        self.kv.set_length(req.slot, skip)
+                    self._prompt_pos[req.slot] = skip
             if fresh:
                 self.caches = self._reset_slots(self.caches,
                                                 jnp.asarray(mask))
@@ -361,6 +415,13 @@ class ServingEngine:
             else:
                 if pos + 1 == req.replay_len:
                     self._prompt_pos[slot] += 1
+                    # prefill just completed: every prompt position is
+                    # resident in this slot's pages and will never be
+                    # rewritten (decode appends past them) — register the
+                    # full blocks for cross-session reuse NOW, so
+                    # concurrent sessions sharing the prefix hit while
+                    # this one still decodes
+                    self.kv.cache_prompt(slot, req.prompt)
                 produced[slot] = int(next_tok[slot, 0]) % self.cfg.vocab_size
         now = rt.clock.now()
         self.sched.step_complete(produced, now)

@@ -22,6 +22,19 @@ Two implementations sit behind one explicit protocol:
     KV pages to the surviving ranks instead of recomputing them —
     ``restore()`` re-admits with zero replay.
 
+With ``prefix_cache=True`` the paged pool additionally shares pages
+*across sessions*: finished prompts register their full blocks in a
+radix index (``prefix_cache.PrefixCache``), and a later request whose
+prompt starts with the same token blocks borrows those pages instead of
+re-prefilling them. Physical blocks then fall into three disjoint
+populations — **free** (claimable), **held** (private to one block table
+or pinned snapshot), and **shared** (registered in the trie, refcounted
+by the tables/snapshots that reference them; refcount 0 means
+cache-only, reclaimable by LRU leaf eviction when the free pool runs
+dry). Divergence is copy-on-write by construction: matching is
+block-aligned, so every position a request can write lands in its own
+identity blocks — shared pages are never written.
+
 ``KVPool`` (the protocol) is the ONLY surface the scheduler / engine /
 frontend touch — no ``lengths`` / ``owner`` / free-list indexing outside
 this module (enforced by a source-guard test, same discipline as the
@@ -30,10 +43,12 @@ no-direct-membership-mutation check in core/transitions).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Protocol, runtime_checkable
+from typing import Optional, Protocol, Sequence, runtime_checkable
 
 
 import numpy as np
+
+from .prefix_cache import PrefixCache, PrefixNode
 
 
 @dataclass
@@ -71,8 +86,13 @@ class KVPool(Protocol):
 
     # -- admission -----------------------------------------------------
     def fits(self, context_len: int, max_new: int = 0) -> bool: ...
-    def allocate(self, rid: int, context_len: int,
-                 reserve: int = 0) -> Optional[int]: ...
+    def allocate(self, rid: int, context_len: int, reserve: int = 0,
+                 prompt: Optional[Sequence[int]] = None) -> Optional[int]: ...
+
+    # -- prefix sharing (no-ops outside the prefix-enabled paged pool) --
+    def match_prefix(self, prompt: Sequence[int]) -> int: ...
+    def prefix_matched(self, slot: int) -> int: ...
+    def cache_prompt(self, slot: int, prompt: Sequence[int]) -> int: ...
 
     # -- decode bookkeeping -------------------------------------------
     def append(self, slot: int) -> None: ...
@@ -120,12 +140,13 @@ class SlotKVPool:
         length bookkeeping past ``max_len``."""
         return context_len + max_new <= self.max_len
 
-    def allocate(self, rid: int, context_len: int,
-                 reserve: int = 0) -> Optional[int]:
+    def allocate(self, rid: int, context_len: int, reserve: int = 0,
+                 prompt: Optional[Sequence[int]] = None) -> Optional[int]:
         """Claim a slot for ``context_len`` tokens of existing context plus
         ``reserve`` tokens still to be generated. Returns ``None`` when no
         slot is free; raises on a sequence that can never fit (such a
-        request must be rejected at submit, never queued)."""
+        request must be rejected at submit, never queued). ``prompt`` is
+        the prefix-sharing hook; the slot pool has no pages to share."""
         if not self.fits(context_len, max(reserve, 1)):
             raise ValueError(
                 f"request {rid}: context {context_len} + reserve {reserve} "
@@ -136,6 +157,16 @@ class SlotKVPool:
         self.owner[slot] = rid
         self.lengths[slot] = context_len
         return slot
+
+    # -- prefix sharing: contiguous slots have nothing to share ----------
+    def match_prefix(self, prompt: Sequence[int]) -> int:
+        return 0
+
+    def prefix_matched(self, slot: int) -> int:
+        return 0
+
+    def cache_prompt(self, slot: int, prompt: Sequence[int]) -> int:
+        return 0
 
     def append(self, slot: int) -> None:
         self.lengths[slot] += 1
@@ -209,6 +240,7 @@ class SlotKVPool:
             "migrations": 0,
             "pages_moved": 0,
             "utilization": round(self.utilization, 4),
+            "prefix": {"enabled": False},
         }
 
     @property
@@ -236,12 +268,35 @@ class PagedKVPool:
     cache buffers (``take_moves``) — the indirection-table discipline of
     real paged-attention kernels, collapsed to slot granularity by the
     sim's physical layout.
+
+    ``prefix_cache=True`` layers cross-session prefix sharing on top:
+
+    - ``cache_prompt`` (engine, at prefill completion) registers the full
+      blocks of a finished prompt in the radix trie; the owning slot's
+      identity pages holding them become **shared** and the slot becomes
+      *cache-resident* — it never re-enters the free-slot list while any
+      of its pages are registered, so the physical row stays intact.
+    - ``allocate(prompt=...)`` matches the longest cached block chain,
+      bumps each node's refcount, builds the block table as
+      ``[shared donor pages] + [own identity pages]`` and queues one
+      (donor_slot, slot) whole-row move — the deepest matched node's home
+      row physically holds the entire prefix, so a single gather
+      materializes it. The matched token count is readable via
+      ``prefix_matched(slot)`` until release; the scheduler turns it into
+      a reduced prefill obligation.
+    - Writes are copy-on-write by construction: matching is block-aligned
+      and the sim writes through the slot row, so a borrowing request
+      only ever dirties its own identity pages — never the donor's.
+    - ``release``/``discard``/``migrate`` decrement shared refcounts
+      instead of freeing shared pages; a page at refcount 0 stays cached
+      until LRU leaf eviction reclaims it under free-pool pressure.
     """
 
     name = "paged"
     supports_migration = True
 
-    def __init__(self, num_slots: int, max_len: int, block_size: int = 16):
+    def __init__(self, num_slots: int, max_len: int, block_size: int = 16,
+                 prefix_cache: bool = False):
         assert block_size > 0
         self.num_slots = num_slots
         self.max_len = max_len
@@ -260,6 +315,13 @@ class PagedKVPool:
         self.migrations = 0         # snapshots restored/relocated intact
         self.pages_moved = 0        # blocks shipped by those migrations
         self.block_appends = 0      # copy-on-extend events
+        # -- prefix sharing state (all empty when disabled) ---------------
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(block_size) if prefix_cache else None)
+        self._shared: dict[int, PrefixNode] = {}     # block id -> trie node
+        self._home_shared: dict[int, set[int]] = {}  # slot -> its shared pages
+        self._prefix_matched: dict[int, int] = {}    # slot -> matched tokens
+        self._foreign: dict[int, int] = {}           # slot -> borrowed blocks
 
     # -- identity-block helpers ---------------------------------------
     def _identity_block(self, slot: int, i: int) -> int:
@@ -284,25 +346,141 @@ class PagedKVPool:
         request still caps at one slot's worth of blocks."""
         return context_len + max_new <= self.max_len
 
-    def allocate(self, rid: int, context_len: int,
-                 reserve: int = 0) -> Optional[int]:
+    def allocate(self, rid: int, context_len: int, reserve: int = 0,
+                 prompt: Optional[Sequence[int]] = None) -> Optional[int]:
         """Claim a slot and the blocks covering ``context_len`` resident
         tokens (``reserve`` is a fit check only — blocks for tokens still
         to be generated are claimed lazily by ``append``, copy-on-extend).
         Returns ``None`` when no slot is free; raises on a sequence that
-        can never fit (reject at submit, never queue)."""
+        can never fit (reject at submit, never queue).
+
+        With the prefix cache enabled and a ``prompt`` given, the longest
+        cached block chain prefixing it is borrowed: those pages enter the
+        block table shared (refcounted, never written by this request) and
+        one whole-row copy from the deepest donor's slot is queued so the
+        physical row materializes the prefix before the first step. The
+        matched token count is readable via ``prefix_matched(slot)``."""
         if not self.fits(context_len, max(reserve, 1)):
             raise ValueError(
                 f"request {rid}: context {context_len} + reserve {reserve} "
                 f"can never fit max_len={self.max_len}; reject at submit")
+        if not self._free_slots and self.prefix is not None:
+            self._reclaim_slot()        # LRU-evict cache-only pages
         if not self._free_slots:
             return None
         slot = self._free_slots.pop(0)
         self._owner[slot] = rid
         self._lengths[slot] = context_len
-        self._tables[slot] = self._claim_identity(
-            slot, self._blocks_for(context_len))
+        chain: list[PrefixNode] = []
+        if self.prefix is not None and prompt is not None:
+            chain = self.prefix.match(prompt)
+        if chain:
+            self.prefix.acquire(chain)
+            shared = [n.block for n in chain]
+            need = self._blocks_for(context_len)
+            own = []
+            for i in range(len(shared), need):
+                b = self._identity_block(slot, i)
+                assert b in self._free_blocks, (
+                    f"identity block {b} of slot {slot} is not free — "
+                    f"block-pool invariant broken")
+                self._free_blocks.discard(b)
+                own.append(b)
+            self._tables[slot] = shared + own
+            self._prefix_matched[slot] = len(shared) * self.block_size
+            self._foreign[slot] = len(shared)
+            # the deepest matched node's home row physically holds the
+            # whole prefix (its occupant decoded through it) — one gather
+            donor_slot = shared[-1] // self.blocks_per_slot
+            self._moves.append((donor_slot, slot))
+        else:
+            self._tables[slot] = self._claim_identity(
+                slot, self._blocks_for(context_len))
+            self._prefix_matched[slot] = 0
+            self._foreign[slot] = 0
         return slot
+
+    # -- prefix sharing -------------------------------------------------
+    def match_prefix(self, prompt: Sequence[int]) -> int:
+        """Read-only probe (submit-time accounting): how many prompt
+        tokens are currently resident in cached pages. Does not touch
+        refcounts or hit/miss counters — the authoritative match happens
+        at ``allocate``."""
+        if self.prefix is None:
+            return 0
+        return len(self.prefix.match(prompt, count=False)) * self.block_size
+
+    def prefix_matched(self, slot: int) -> int:
+        """Tokens this slot borrowed from the cache at allocation (0 for
+        fresh misses, restores, and the slot pool). The scheduler converts
+        this into the request's reduced prefill obligation."""
+        return self._prefix_matched.get(slot, 0)
+
+    def cache_prompt(self, slot: int, prompt: Sequence[int]) -> int:
+        """Register every full block of a completed prompt in the trie
+        (the engine calls this once prefill finishes and the positions are
+        resident). Blocks already cached are deduped; new nodes take this
+        slot's identity pages, which become shared with refcount 1 (the
+        occupant's own table reference) and park the slot out of the
+        free list for as long as they stay registered. Returns the number
+        of newly shared pages."""
+        if self.prefix is None or self._owner[slot] < 0:
+            return 0
+        table = self._tables.get(slot)
+        if not table:
+            return 0
+
+        def block_of(depth: int) -> Optional[int]:
+            if depth >= len(table):
+                return None
+            b = table[depth]
+            # only pages physically backed by this slot's row are
+            # shareable; borrowed donor pages are already in the trie
+            return b if b == self._identity_block(slot, depth) else None
+
+        created = self.prefix.insert(prompt, block_of)
+        for node in created:
+            node.refs = 1           # the occupant's block-table reference
+            self._shared[node.block] = node
+            self._home_shared.setdefault(slot, set()).add(node.block)
+        return len(created)
+
+    def _release_blocks(self, blocks: Sequence[int]) -> None:
+        """Return a table's pages: shared ones drop a reference (the page
+        stays cached, evictable once refs hit 0), private ones go back to
+        the free pool."""
+        for b in blocks:
+            node = self._shared.get(b)
+            if node is not None:
+                self.prefix.release(node)
+            else:
+                self._free_blocks.add(b)
+
+    def _slot_reclaimable(self, slot: int) -> bool:
+        return (not self._home_shared.get(slot)
+                and self._owner[slot] < 0
+                and slot not in self._pinned_slots)
+
+    def _reclaim_slot(self) -> None:
+        """Free-pool pressure: evict least-recently-matched cache-only
+        leaves until a cache-resident slot fully unparks (all its shared
+        pages gone) or nothing evictable remains."""
+        while not self._free_slots:
+            node = self.prefix.evictable_leaf()
+            if node is None:
+                return
+            self.prefix.remove(node)
+            b = node.block
+            del self._shared[b]
+            self._free_blocks.add(b)
+            home = b // self.blocks_per_slot
+            pages = self._home_shared.get(home)
+            if pages is not None:
+                pages.discard(b)
+                if not pages:
+                    del self._home_shared[home]
+                    if self._slot_reclaimable(home):
+                        self._free_slots.append(home)
 
     # -- decode bookkeeping -------------------------------------------
     def append(self, slot: int) -> None:
@@ -348,10 +526,15 @@ class PagedKVPool:
     def release(self, slot: int) -> None:
         if slot < 0 or self._owner[slot] < 0 or slot in self._pinned_slots:
             return
-        self._free_blocks.update(self._tables.pop(slot, ()))
+        self._release_blocks(self._tables.pop(slot, ()))
         self._owner[slot] = -1
         self._lengths[slot] = 0
-        self._free_slots.append(slot)
+        self._prefix_matched.pop(slot, None)
+        self._foreign.pop(slot, None)
+        if not self._home_shared.get(slot):
+            # cache-resident slots stay parked: their registered pages
+            # live in this physical row and must not be overwritten
+            self._free_slots.append(slot)
 
     def release_all(self) -> list[int]:
         """Evict every *decoding* sequence (rank-failure semantics).
@@ -400,10 +583,13 @@ class PagedKVPool:
         if snap is None:
             return
         self._pinned_slots.discard(snap.slot)
-        self._free_blocks.update(snap.blocks)
+        self._release_blocks(snap.blocks)
         self._owner[snap.slot] = -1
         self._lengths[snap.slot] = 0
-        self._free_slots.append(snap.slot)
+        self._prefix_matched.pop(snap.slot, None)
+        self._foreign.pop(snap.slot, None)
+        if not self._home_shared.get(snap.slot):
+            self._free_slots.append(snap.slot)
         self._tables.pop(snap.slot, None)
 
     def migrate(self, rid: int, dst_slot: int) -> KVSnapshot:
@@ -418,13 +604,19 @@ class PagedKVPool:
         new_blocks = tuple(self._claim_identity(
             dst_slot, self._blocks_for(snap.length)))
         self._free_slots.remove(dst_slot)
-        # old residency returns to the pools
-        self._free_blocks.update(snap.blocks)
-        self._free_slots.append(src_slot)
+        # old residency returns to the pools; borrowed shared pages drop a
+        # reference instead (the move un-shares this request: the gather
+        # copies the whole src row, so the dst identity pages hold a
+        # private copy of everything, prefix included)
+        self._release_blocks(snap.blocks)
+        self._pinned_slots.discard(src_slot)
         self._owner[src_slot] = -1
         self._lengths[src_slot] = 0
         self._tables.pop(src_slot, None)
-        self._pinned_slots.discard(src_slot)
+        self._prefix_matched.pop(src_slot, None)
+        self._foreign.pop(src_slot, None)
+        if not self._home_shared.get(src_slot):
+            self._free_slots.append(src_slot)
         self._owner[dst_slot] = rid
         self._lengths[dst_slot] = snap.length
         self._tables[dst_slot] = list(new_blocks)
@@ -446,8 +638,20 @@ class PagedKVPool:
 
     # -- introspection -------------------------------------------------
     def inflight_pages(self) -> int:
-        """Blocks held by live work (decoding + pinned) — the population a
-        drain's KV-page manifest is computed over."""
+        """PHYSICAL blocks held by live work (decoding + pinned) — the
+        population a drain's KV-page manifest is computed over. A shared
+        page referenced by many block tables counts once: it ships once."""
+        pages: set[int] = set()
+        for s in self.active_slots():
+            pages.update(self._tables[s])
+        for snap in self._pinned.values():
+            pages.update(snap.blocks)
+        return len(pages)
+
+    def inflight_pages_logical(self) -> int:
+        """Block-table *references* held by live work — what the manifest
+        would ship if shared pages were duplicated per referencing
+        request. The physical/logical gap is the dedup win."""
         return (sum(len(self._tables[s]) for s in self.active_slots())
                 + sum(s.pages for s in self._pinned.values()))
 
@@ -457,12 +661,18 @@ class PagedKVPool:
         capacity = sum(len(t) for t in held.values()) * self.block_size
         per_request = {str(int(self._owner[s])): len(t)
                        for s, t in held.items()}
+        blocks_used = self.num_blocks - len(self._free_blocks)
+        prefix = ({"enabled": False} if self.prefix is None else dict(
+            self.prefix.stats(),
+            cache_resident_slots=len(self._home_shared)))
         return {
             "pool": self.name,
             "block_size": self.block_size,
             "blocks_total": self.num_blocks,
             "blocks_free": len(self._free_blocks),
-            "blocks_used": self.num_blocks - len(self._free_blocks),
+            "blocks_used": blocks_used,
+            "blocks_shared": len(self._shared),
+            "blocks_held": blocks_used - len(self._shared),
             "slots_total": self.num_slots,
             "slots_free": len(self._free_slots),
             "pinned": len(self._pinned),
@@ -472,6 +682,7 @@ class PagedKVPool:
             "migrations": self.migrations,
             "pages_moved": self.pages_moved,
             "utilization": round(self.utilization, 4),
+            "prefix": prefix,
         }
 
     @property
@@ -480,10 +691,15 @@ class PagedKVPool:
 
 
 def make_pool(kind: str, num_slots: int, max_len: int, *,
-              block_size: int = 16) -> "SlotKVPool | PagedKVPool":
-    """Pool factory keyed by ``ArchConfig.kv_pool`` ("slot" | "paged")."""
+              block_size: int = 16,
+              prefix_cache: bool = False) -> "SlotKVPool | PagedKVPool":
+    """Pool factory keyed by ``ArchConfig.kv_pool`` ("slot" | "paged").
+    ``prefix_cache`` is honored by the paged pool only — the engine gates
+    it on the cache layout actually being position-indexed and
+    non-wrapping (see ``ServingEngine.prefix_cache_supported``)."""
     if kind == "paged":
-        return PagedKVPool(num_slots, max_len, block_size=block_size)
+        return PagedKVPool(num_slots, max_len, block_size=block_size,
+                           prefix_cache=prefix_cache)
     if kind == "slot":
         return SlotKVPool(num_slots, max_len)
     raise ValueError(f"unknown kv pool kind {kind!r}")

@@ -13,7 +13,14 @@ serving papers do:
   * **multi-tenant mix** — each arrival is assigned a tenant by weighted
     draw; a tenant can carry a per-request relative deadline (the SLO the
     EDF queue policy schedules against) and a quota (enforced by the
-    frontend, recorded here so one spec fully describes an experiment).
+    frontend, recorded here so one spec fully describes an experiment);
+  * **shared prompt prefixes** — with ``prefix_groups > 0`` each tenant
+    owns that many fixed "system prompts" of ``prefix_len`` tokens
+    (drawn once, up front, from the same seeded rng); every arrival
+    prepends one of its tenant's prefixes to its drawn suffix. This is
+    the reuse structure real traffic has (system prompts, few-shot
+    templates) and is what exercises the engine's cross-session prefix
+    cache deterministically — in-process and over the wire alike.
 
 ``build_sessions(spec, seed)`` expands the spec into a concrete session
 list. Everything is driven by one ``random.Random(seed)`` — same spec +
@@ -58,6 +65,13 @@ class WorkloadSpec:
     out_max: int = 32
     vocab: int = 1000              # token ids drawn uniform from [1, vocab)
     tenants: tuple = (TenantSpec(),)
+    # shared system-prompt prefixes (0 = disabled): per tenant,
+    # ``prefix_groups`` distinct prefixes of ``prefix_len`` tokens each;
+    # every arrival prepends one (uniform pick) to its drawn suffix.
+    # Block-align ``prefix_len`` to the engine's kv_block_size for full
+    # cache effect — partial trailing blocks are never shared.
+    prefix_groups: int = 0
+    prefix_len: int = 0
 
     def quotas(self) -> dict:
         """The frontend ``tenant_quotas`` dict this spec implies."""
@@ -98,6 +112,17 @@ def build_sessions(spec: WorkloadSpec, seed: int) -> list[Session]:
     names = [t.name for t in spec.tenants]
     weights = [max(t.weight, 0.0) for t in spec.tenants]
     deadlines = {t.name: t.deadline_s for t in spec.tenants}
+    # shared system prompts: drawn ONCE, before the arrival loop, so the
+    # prefixes themselves are a deterministic function of (spec, seed)
+    # and every arrival that picks group g of tenant t gets the exact
+    # same token block — the reuse the prefix cache feeds on
+    prefixes: dict[str, list[tuple]] = {}
+    if spec.prefix_groups > 0 and spec.prefix_len > 0:
+        for name in names:
+            prefixes[name] = [
+                tuple(rng.randrange(1, spec.vocab)
+                      for _ in range(spec.prefix_len))
+                for _ in range(spec.prefix_groups)]
     sessions: list[Session] = []
     t = 0.0
     while len(sessions) < spec.n_max:
@@ -110,6 +135,9 @@ def build_sessions(spec: WorkloadSpec, seed: int) -> list[Session]:
         max_new = _lognormal_len(rng, spec.out_mean, spec.out_sigma,
                                  1, spec.out_max)
         prompt = tuple(rng.randrange(1, spec.vocab) for _ in range(plen))
+        if prefixes:
+            group = rng.randrange(spec.prefix_groups)
+            prompt = prefixes[tenant][group] + prompt
         sessions.append(Session(sid=len(sessions), t_arrival=round(t, 6),
                                 prompt=prompt, max_new=max_new,
                                 tenant=tenant,

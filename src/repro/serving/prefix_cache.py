@@ -1,0 +1,222 @@
+"""Cross-session prefix index over the paged KV pool.
+
+Real traffic is dominated by shared prompt prefixes — system prompts,
+few-shot templates, multi-turn history. The paged pool (``kv_cache.py``)
+already gives every request a block table over fixed-size physical KV
+pages; this module adds the *index* that lets a new request discover
+that the first N full blocks of its prompt are already resident in some
+other request's pages, and borrow them instead of re-prefilling.
+
+Design:
+
+- A radix trie with one node per full **block** of prompt tokens
+  (``block_size`` tokens — the same granularity as the pool's physical
+  pages). A node is keyed by the rolling hash of the entire prefix up
+  to and including its block; the raw token tuple is stored alongside
+  and compared on every walk, so hash collisions degrade to a miss,
+  never to wrong KV.
+- Each node owns exactly one **physical block id** in the pool — the
+  page that holds the KV for the node's token positions. The pool is
+  responsible for guaranteeing the page's content stays valid while the
+  node exists (it parks the page's slot out of the allocatable set).
+- ``refs`` counts live referencers: request block tables and pinned
+  migration snapshots that currently include the node's page. A node
+  with ``refs == 0`` is cache-only — droppable — and eviction removes
+  the least-recently-matched such **leaf** when the pool runs dry
+  (interior nodes are pinned by their descendants: a child's KV is
+  meaningless without its parent's positions).
+- Matching never mutates refcounts (``match`` is a read-only probe used
+  by ``Scheduler.submit`` for admission accounting); the pool acquires
+  the chain only when it actually builds a block table over it.
+
+The trie knows nothing about slots, tables, or jax — it is pure
+bookkeeping over (token block, physical page) pairs, fully unit-testable
+without an engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Optional, Sequence
+
+# Rabin-Karp-style rolling hash over token ids, chained parent-to-child so
+# a node's key commits to the whole prefix, not just its own block. The
+# modulus is a Mersenne prime (2^61 - 1): multiplication stays exact in
+# Python ints and the collision probability per lookup is ~2^-61 — and a
+# collision still costs only a cache miss thanks to the token-tuple check.
+_ROLL_BASE = 1_000_003
+_ROLL_MOD = (1 << 61) - 1
+_ROOT_KEY = 0x5EED_0F_5EED % _ROLL_MOD
+
+
+def roll_hash(parent_key: int | None, tokens: Sequence[int]) -> int:
+    """Extend ``parent_key`` (``None`` = the trie root) with one block
+    of tokens."""
+    h = _ROOT_KEY if parent_key is None else parent_key
+    for t in tokens:
+        h = (h * _ROLL_BASE + int(t) + 1) % _ROLL_MOD
+    return h
+
+
+@dataclass
+class PrefixNode:
+    """One cached block: ``tokens`` worth of KV living in physical page
+    ``block``. ``refs`` = live block-table + pinned-snapshot references;
+    0 means cache-only (evictable once it is a leaf)."""
+    key: int
+    tokens: tuple
+    block: int
+    parent: Optional["PrefixNode"]
+    depth: int = 0                      # block index within the prompt
+    refs: int = 0
+    last_used: int = 0                  # logical tick, for LRU
+    children: dict = field(default_factory=dict)   # key -> PrefixNode
+
+    def is_leaf(self) -> bool:
+        return not self.children
+
+
+class PrefixCache:
+    """Block-granularity radix index: prompt prefix -> chain of cached
+    physical pages. Pure accounting; the pool owns page lifetimes."""
+
+    def __init__(self, block_size: int):
+        assert block_size >= 1
+        self.block_size = block_size
+        self.root = PrefixNode(key=_ROOT_KEY, tokens=(), block=-1,
+                               parent=None, depth=-1)
+        self._tick = 0
+        # counters surfaced through pool.stats()["prefix"]
+        self.hits = 0           # match() calls that found >= 1 block
+        self.misses = 0         # match() calls over >= 1 full block, found 0
+        self.tokens_matched = 0
+        self.inserted = 0       # nodes ever created
+        self.evictions = 0      # nodes removed by LRU pressure
+
+    # -- walking ---------------------------------------------------------
+
+    def _blocks(self, tokens: Sequence[int]) -> list[tuple]:
+        bs = self.block_size
+        return [tuple(tokens[i * bs:(i + 1) * bs])
+                for i in range(len(tokens) // bs)]
+
+    def match(self, tokens: Sequence[int],
+              count: bool = True) -> list[PrefixNode]:
+        """Longest chain of cached blocks prefixing ``tokens``. Read-only
+        apart from LRU touch and hit/miss counters (``count=False``
+        suppresses those too, for pure probes)."""
+        self._tick += 1
+        chain: list[PrefixNode] = []
+        node = self.root
+        blocks = self._blocks(tokens)
+        for blk in blocks:
+            key = roll_hash(node.key, blk)
+            child = node.children.get(key)
+            if child is None or child.tokens != blk:
+                break
+            child.last_used = self._tick
+            chain.append(child)
+            node = child
+        if count and blocks:
+            if chain:
+                self.hits += 1
+                self.tokens_matched += len(chain) * self.block_size
+            else:
+                self.misses += 1
+        return chain
+
+    # -- reference lifecycle --------------------------------------------
+
+    def acquire(self, chain: Sequence[PrefixNode]) -> None:
+        for node in chain:
+            node.refs += 1
+
+    def release(self, node: PrefixNode) -> None:
+        assert node.refs > 0, "refcount underflow on prefix node"
+        node.refs -= 1
+
+    # -- insertion -------------------------------------------------------
+
+    def insert(self, tokens: Sequence[int],
+               block_of: Callable[[int], Optional[int]]) -> list[PrefixNode]:
+        """Register every full block of ``tokens`` not already cached.
+        ``block_of(depth)`` names the physical page that holds block
+        ``depth``'s KV, or None if that page cannot be shared (it is not
+        owned by the inserting request) — insertion stops there, since a
+        deeper block is useless without its ancestors. Returns the newly
+        created nodes (refs start at 0; the caller accounts the owner's
+        table reference)."""
+        self._tick += 1
+        node = self.root
+        created: list[PrefixNode] = []
+        for depth, blk in enumerate(self._blocks(tokens)):
+            key = roll_hash(node.key, blk)
+            child = node.children.get(key)
+            if child is not None and child.tokens == blk:
+                child.last_used = self._tick       # dedup: already cached
+                node = child
+                continue
+            if child is not None:
+                break                              # hash collision: stop
+            page = block_of(depth)
+            if page is None:
+                break
+            child = PrefixNode(key=key, tokens=blk, block=page, parent=node,
+                               depth=depth, last_used=self._tick)
+            node.children[key] = child
+            created.append(child)
+            self.inserted += 1
+            node = child
+        return created
+
+    # -- eviction --------------------------------------------------------
+
+    def evictable_leaf(self) -> Optional[PrefixNode]:
+        """Least-recently-matched leaf with no live references, or None.
+        Deterministic tiebreak on (last_used, block id)."""
+        best: Optional[PrefixNode] = None
+        for node in self._iter_nodes():
+            if node.is_leaf() and node.refs == 0:
+                if best is None or ((node.last_used, node.block)
+                                    < (best.last_used, best.block)):
+                    best = node
+        return best
+
+    def remove(self, node: PrefixNode) -> None:
+        """Drop a leaf from the trie (eviction). The caller frees the
+        physical page."""
+        assert node.is_leaf() and node.refs == 0 and node.parent is not None
+        del node.parent.children[node.key]
+        node.parent = None
+        self.evictions += 1
+
+    # -- introspection ---------------------------------------------------
+
+    def _iter_nodes(self) -> Iterator[PrefixNode]:
+        stack = list(self.root.children.values())
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            yield node
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self._iter_nodes())
+
+    def blocks(self) -> set[int]:
+        """All physical pages currently registered in the trie."""
+        return {n.block for n in self._iter_nodes()}
+
+    def stats(self) -> dict:
+        nodes = list(self._iter_nodes())
+        lookups = self.hits + self.misses
+        return {
+            "enabled": True,
+            "nodes": len(nodes),
+            "shared_blocks": len(nodes),
+            "shared_refs": sum(n.refs for n in nodes),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": round(self.hits / lookups, 6) if lookups else 0.0,
+            "tokens_matched": self.tokens_matched,
+            "inserted": self.inserted,
+            "evictions": self.evictions,
+        }

@@ -48,6 +48,14 @@ class Request:
     # intact, so the engine must neither reset the slot nor replay — it
     # resumes feeding from the restored resident length.
     kv_intact: bool = False
+    # prefix-cache accounting. ``prefix_hint`` is the submit-time probe
+    # (tokens the cache held when the request was accepted — advisory);
+    # ``prefix_skip`` is the binding admission-time figure: replay starts
+    # at this position because the pool materialized [0, prefix_skip)
+    # from shared pages. Always < replay_len (the last prompt token is
+    # replayed so the first decode step has logits to sample from).
+    prefix_hint: int = 0
+    prefix_skip: int = 0
 
     @property
     def context_len(self) -> int:

@@ -39,6 +39,8 @@ class SchedulerStats:
     tokens_out: int = 0
     tokens_recomputed: int = 0  # generated tokens replayed on resume
     tokens_migrated: int = 0    # resident KV tokens moved intact (no replay)
+    prefix_hits: int = 0        # admissions that borrowed cached prefix pages
+    tokens_prefill_skipped: int = 0  # prompt positions served from the cache
 
 
 class Scheduler:
@@ -77,6 +79,11 @@ class Scheduler:
                        context_len=len(req.prompt),
                        max_new=req.max_new_tokens, max_len=self.kv.max_len)
             return False
+        # advisory prefix probe: how much of this prompt the cache holds
+        # right now. The binding match happens at admission (the cache can
+        # grow or shrink while queued); the hint prices the request's
+        # prefill obligation for admission accounting and metrics.
+        req.prefix_hint = self.kv.match_prefix(req.prompt)
         req.state = RequestState.QUEUED
         self.queue.append(req)
         return True
@@ -110,12 +117,23 @@ class Scheduler:
                 req.kv_snapshot = None
                 reserve = req.max_new_tokens - len(req.generated)
                 slot = self.kv.allocate(req.rid, req.context_len,
-                                        reserve=reserve)
+                                        reserve=reserve, prompt=req.prompt)
                 if slot is None:
                     break
             self.queue.remove(req)
             req.slot = slot
             req.replay_len = req.context_len
+            # reduced prefill obligation: positions [0, prefix_skip) were
+            # materialized from shared pages at allocate, so replay starts
+            # there. The last prompt token always replays — the first
+            # decode step needs logits even on a full-prompt cache hit.
+            req.prefix_skip = 0
+            if not migrated_in:
+                matched = self.kv.prefix_matched(slot)
+                if matched > 0:
+                    req.prefix_skip = min(matched, req.replay_len - 1)
+                    self.stats.prefix_hits += 1
+                    self.stats.tokens_prefill_skipped += req.prefix_skip
             if req.snapshot_epoch >= 0 and 0 <= epoch < req.snapshot_epoch:
                 raise RuntimeError(
                     f"request {req.rid}: continuation snapshot from "

@@ -1,0 +1,491 @@
+"""Cross-session prefix sharing (repro.serving.prefix_cache + the
+prefix-enabled PagedKVPool + the engine/scheduler threading):
+
+  * radix-trie mechanics — rolling block hashes, longest-chain match with
+    token-tuple verification, refcounted acquire/release, LRU leaf
+    eviction, dedup on re-insert;
+  * pool partition discipline: every physical block is exactly one of
+    free / held (private to one table or snapshot) / shared (registered
+    in the trie); any multi-referenced block is shared; non-borrowed
+    table entries are identity blocks (copy-on-write by construction —
+    a request can only ever write its own row);
+  * a property test over random allocate/cache/append/release/snapshot/
+    restore/migrate/discard walks against those invariants (hypothesis
+    when the dev extra is installed, seeded walks otherwise);
+  * evict -> re-insert: a reclaimed prefix re-caches content-identical;
+  * engine integration — a 64-session prefix-heavy storm skips >= 50%
+    of all prompt tokens, streams byte-identical to a cache-off run of
+    the same sessions, one compilation;
+  * planned drain with shared pages live: zero recompute, the manifest
+    dedupes shared physical pages (kv_bytes_moved strictly below the
+    cache-off logical baseline on the same workload);
+  * the AdminGateway ``kv.prefix`` status section round-trips as JSON.
+"""
+import json
+import random
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import make_initial_membership
+from repro.core.reintegration import WarmupCostModel
+from repro.models import init_params
+from repro.runtime.elastic import ElasticEPRuntime
+from repro.serving.api import ServingFrontend
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import PagedKVPool, SlotKVPool, make_pool
+from repro.serving.prefix_cache import PrefixCache, roll_hash
+
+
+def _frontend(max_batch=4, max_len=32, prefix_cache=None, seed=0,
+              kv_pool="paged"):
+    import dataclasses
+    cfg = get_config("mixtral-8x22b").reduced()
+    if prefix_cache is not None:
+        cfg = dataclasses.replace(cfg, prefix_cache=prefix_cache)
+    table = make_initial_membership(8, cfg.moe.num_experts, 1)
+    params = init_params(cfg, jax.random.key(seed), jnp.float32,
+                         table.slot_to_expert, table.num_slots)
+    rt = ElasticEPRuntime(cfg, params, table,
+                          warmup_model=WarmupCostModel(1, 1, 2, 1))
+    eng = ServingEngine(rt, max_batch=max_batch, max_len=max_len,
+                        kv_pool=kv_pool)
+    return rt, eng, ServingFrontend(eng)
+
+
+# ---------------------------------------------------------------------------
+# Trie mechanics
+# ---------------------------------------------------------------------------
+
+def test_roll_hash_chains_and_separates():
+    a = roll_hash(None, (1, 2, 3, 4))
+    b = roll_hash(None, (1, 2, 3, 4))
+    c = roll_hash(None, (4, 3, 2, 1))
+    assert a == b != c
+    # chained: the parent key folds into the child block's hash
+    assert roll_hash(a, (5, 6)) == roll_hash(b, (5, 6))
+    assert roll_hash(a, (5, 6)) != roll_hash(c, (5, 6))
+    assert roll_hash(a, (5, 6)) != roll_hash(None, (5, 6))
+
+
+def test_match_insert_refcount_and_lru_eviction():
+    pc = PrefixCache(block_size=4)
+    blocks = {0: 10, 1: 11, 2: 12}
+    created = pc.insert((1, 2, 3, 4, 5, 6, 7, 8, 9), blocks.get)
+    assert [n.block for n in created] == [10, 11]    # partial 3rd block: no
+    assert len(pc) == 2 and pc.blocks() == {10, 11}
+    # re-insert dedupes, nothing new
+    assert pc.insert((1, 2, 3, 4, 5, 6, 7, 8), blocks.get) == []
+    chain = pc.match((1, 2, 3, 4, 5, 6, 7, 8, 99))
+    assert [n.block for n in chain] == [10, 11]
+    assert len(pc.match((1, 2, 3, 4, 99))) == 1
+    assert pc.match((9, 9, 9, 9)) == []
+    st = pc.stats()
+    assert st["hits"] == 2 and st["misses"] == 1
+    assert st["tokens_matched"] == 12
+    # refcounts pin against eviction
+    pc.acquire(chain)
+    assert all(n.refs == 1 for n in chain)
+    assert pc.evictable_leaf() is None               # leaf is referenced
+    pc.release(chain[1])
+    leaf = pc.evictable_leaf()
+    assert leaf is chain[1]                          # deepest refs-0 LEAF
+    pc.remove(leaf)
+    assert len(pc) == 1 and pc.stats()["evictions"] == 1
+    # the surviving node is still referenced; nothing evictable
+    assert pc.evictable_leaf() is None
+    pc.release(chain[0])
+    assert pc.evictable_leaf() is chain[0]
+
+
+def test_match_verifies_tokens_not_just_hashes():
+    pc = PrefixCache(block_size=2)
+    pc.insert((1, 2, 3, 4), {0: 5, 1: 6}.get)
+    node = pc.match((1, 2), count=False)[0]
+    node.tokens = (7, 8)        # simulate a hash collision / stale node
+    assert pc.match((1, 2), count=False) == []
+
+
+# ---------------------------------------------------------------------------
+# Pool partition / COW invariants
+# ---------------------------------------------------------------------------
+
+def _check_prefix_invariants(pool: PagedKVPool):
+    shared = set(pool._shared)
+    refs: dict[int, int] = {}
+    held = set()
+    for s, table in pool._tables.items():
+        if s in pool._pinned_slots:
+            # a pinned slot's table stays resident for the eventual
+            # restore, but its authoritative reference is the snapshot
+            # (counted below) — counting both would double-count
+            continue
+        fcount = pool._foreign.get(s, 0)
+        for i, b in enumerate(table):
+            refs[b] = refs.get(b, 0) + 1
+            if b not in shared:
+                held.add(b)
+            if i >= fcount:
+                # COW by construction: every position this request can
+                # write lives in its own identity blocks
+                assert b == s * pool.blocks_per_slot + i, (
+                    f"slot {s} depth {i}: non-borrowed entry {b} is not "
+                    f"the identity block")
+    for snap in pool._pinned.values():
+        for b in snap.blocks:
+            refs[b] = refs.get(b, 0) + 1
+            if b not in shared:
+                held.add(b)
+    free = set(pool._free_blocks)
+    # free / held / shared partition the physical pool
+    assert not (free & held) and not (free & shared) and not (held & shared)
+    assert free | held | shared == set(range(pool.num_blocks)), \
+        "block leak: free+held+shared != pool"
+    # no two writers: any block referenced more than once is shared
+    for b, n in refs.items():
+        if n > 1:
+            assert b in shared, f"private block {b} aliased by {n} tables"
+    # trie refcounts equal the live reference counts exactly
+    if pool.prefix is not None:
+        trie_blocks = {n.block for n in pool.prefix._iter_nodes()}
+        assert trie_blocks == shared
+        for node in pool.prefix._iter_nodes():
+            assert node.refs == refs.get(node.block, 0), (
+                f"block {node.block}: trie refs {node.refs} != "
+                f"{refs.get(node.block, 0)} live references")
+    st = pool.stats()
+    assert (st["blocks_free"] + st["blocks_held"] + st["blocks_shared"]
+            == st["blocks_total"])
+    assert st["blocks_shared"] == len(shared)
+
+
+def test_shared_prefix_partitions_pool_and_parks_donor():
+    pool = PagedKVPool(num_slots=4, max_len=32, block_size=4,
+                       prefix_cache=True)
+    prompt = tuple(range(1, 11))                     # 10 tokens: 2 full + 1
+    s0 = pool.allocate(0, len(prompt), prompt=prompt)
+    assert pool.prefix_matched(s0) == 0              # cold cache
+    assert pool.cache_prompt(s0, prompt) == 2        # the 2 full blocks
+    _check_prefix_invariants(pool)
+    st = pool.stats()
+    assert st["blocks_shared"] == 2
+    assert st["prefix"]["cache_resident_slots"] == 1
+
+    s1 = pool.allocate(1, len(prompt), prompt=prompt)
+    assert pool.prefix_matched(s1) == 8              # 2 blocks x 4 tokens
+    # table = [donor shared, donor shared, own identity 3rd block]
+    t = pool._tables[s1]
+    assert t[:2] == pool._tables[s0][:2]
+    assert t[2] == s1 * pool.blocks_per_slot + 2
+    # one whole-row donor gather queued, from the deepest node's home
+    assert pool.take_moves() == [(s0, s1)]
+    _check_prefix_invariants(pool)
+    assert pool.stats()["prefix"]["hits"] == 1
+    # physical vs logical inflight: 2 shared pages counted once
+    assert pool.inflight_pages_logical() - pool.inflight_pages() == 2
+
+    # releases drop references; pages stay cached; donor slot stays parked
+    pool.release(s1)
+    pool.release(s0)
+    _check_prefix_invariants(pool)
+    st = pool.stats()
+    assert st["blocks_shared"] == 2 and st["slots_free"] == 3
+    # a fresh request still matches the now cache-only pages
+    s2 = pool.allocate(2, len(prompt), prompt=prompt)
+    assert pool.prefix_matched(s2) == 8
+    _check_prefix_invariants(pool)
+
+
+def test_eviction_unparks_donor_and_reinsert_is_content_identical():
+    # 2 slots x 3 blocks: tiny pool, heavy pressure (max_len leaves
+    # headroom for one decode token past the 8-token prompts)
+    pool = PagedKVPool(num_slots=2, max_len=12, block_size=4,
+                       prefix_cache=True)
+    pa = (1, 2, 3, 4, 5, 6, 7, 8)
+    s0 = pool.allocate(0, len(pa), prompt=pa)
+    pool.cache_prompt(s0, pa)
+    pool.release(s0)                                 # parked cache-resident
+    assert pool.stats()["slots_free"] == 1
+    chain_before = [(n.key, tuple(n.tokens), n.depth)
+                    for n in pool.prefix.match(pa, count=False)]
+    assert len(chain_before) == 2
+    # two fresh non-matching requests force reclaim of the parked slot
+    s1 = pool.allocate(1, 8, prompt=(9, 9, 9, 9, 9, 9, 9, 9))
+    s2 = pool.allocate(2, 8, prompt=(8, 8, 8, 8, 8, 8, 8, 8))
+    assert s1 is not None and s2 is not None and s2 == s0
+    assert pool.stats()["prefix"]["evictions"] == 2
+    assert pool.prefix.match(pa, count=False) == []  # fully evicted
+    _check_prefix_invariants(pool)
+    # re-insert the same prompt: the rebuilt chain is content-identical
+    # (same rolling keys, same token blocks, same depths)
+    pool.release(s2)
+    s3 = pool.allocate(3, len(pa), prompt=pa)
+    pool.cache_prompt(s3, pa)
+    chain_after = [(n.key, tuple(n.tokens), n.depth)
+                   for n in pool.prefix.match(pa, count=False)]
+    assert chain_after == chain_before
+    _check_prefix_invariants(pool)
+
+
+def test_prefix_disabled_and_slot_pool_are_inert():
+    paged = PagedKVPool(num_slots=2, max_len=16, block_size=4)
+    slot = SlotKVPool(num_slots=2, max_len=16)
+    prompt = tuple(range(1, 9))
+    for pool in (paged, slot):
+        s = pool.allocate(0, len(prompt), prompt=prompt)
+        assert pool.match_prefix(prompt) == 0
+        assert pool.prefix_matched(s) == 0
+        assert pool.cache_prompt(s, prompt) == 0
+        assert pool.stats()["prefix"] == {"enabled": False}
+    assert make_pool("paged", 2, 16, prefix_cache=True).prefix is not None
+    assert make_pool("paged", 2, 16).prefix is None
+
+
+# ---------------------------------------------------------------------------
+# Property: random op walks never break the partition / COW / refcounts
+# ---------------------------------------------------------------------------
+
+SHARED_PROMPTS = [tuple(range(100, 100 + n)) for n in (8, 12, 9)]
+
+
+def _prefix_walk(seed: int, steps: int = 150) -> None:
+    rng = random.Random(seed)
+    pool = PagedKVPool(num_slots=4, max_len=32, block_size=4,
+                       prefix_cache=True)
+    next_rid = 0
+    active: dict[int, int] = {}                     # rid -> slot
+    prompts: dict[int, tuple] = {}                  # rid -> prompt
+    pinned: dict[int, object] = {}
+    for _ in range(steps):
+        ops = ["allocate", "allocate"]
+        if active:
+            ops += ["append", "release", "cache", "snapshot"]
+        if pinned:
+            ops += ["restore", "discard"]
+            if pool._free_slots:
+                ops.append("migrate")
+        op = rng.choice(ops)
+        if op == "allocate":
+            if rng.random() < 0.6:
+                prompt = rng.choice(SHARED_PROMPTS)
+            else:
+                prompt = tuple(rng.randrange(1, 50)
+                               for _ in range(rng.randint(1, 12)))
+            slot = pool.allocate(next_rid, len(prompt), prompt=prompt)
+            if slot is not None:
+                assert pool.prefix_matched(slot) <= len(prompt)
+                active[next_rid] = slot
+                prompts[next_rid] = prompt
+                next_rid += 1
+        elif op == "cache":
+            rid = rng.choice(sorted(active))
+            pool.cache_prompt(active[rid], prompts[rid])
+        elif op == "append":
+            rid = rng.choice(sorted(active))
+            if pool.length_of(active[rid]) < pool.max_len:
+                pool.append(active[rid])
+        elif op == "release":
+            rid = rng.choice(sorted(active))
+            pool.release(active.pop(rid))
+        elif op == "snapshot":
+            rid = rng.choice(sorted(active))
+            active.pop(rid)
+            pinned[rid] = pool.snapshot(rid)
+        elif op == "migrate":
+            rid = rng.choice(sorted(pinned))
+            dst = rng.choice(pool._free_slots)
+            pinned[rid] = pool.migrate(rid, dst)
+        elif op == "restore":
+            rid = rng.choice(sorted(pinned))
+            snap = pinned.pop(rid)
+            slot = pool.restore(snap)
+            assert slot == snap.slot
+            assert tuple(pool._tables[slot]) == snap.blocks
+            active[rid] = slot
+        elif op == "discard":
+            rid = rng.choice(sorted(pinned))
+            pool.discard(pinned.pop(rid))
+        moves = pool.take_moves()
+        assert len(moves) == len(set(moves))
+        _check_prefix_invariants(pool)
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 100_000))
+    def test_prefix_pool_random_walk_property(seed):
+        _prefix_walk(seed)
+except ImportError:                                 # seeded fallback
+    def test_prefix_pool_random_walk_property():
+        for seed in range(40):
+            _prefix_walk(seed)
+
+
+# ---------------------------------------------------------------------------
+# Engine gate
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_supported_gates_on_layout():
+    sup = ServingEngine.prefix_cache_supported
+    mixtral = get_config("mixtral-8x22b").reduced()     # swa, window 32
+    assert sup(mixtral, 32) and sup(mixtral, 16)
+    assert not sup(mixtral, 64)          # ring buffer wraps past the window
+    assert not sup(get_config("jamba-v0.1-52b").reduced(), 32)   # recurrent
+    assert not sup(get_config("whisper-small").reduced(), 32)    # encoder
+    assert not sup(get_config("internvl2-26b").reduced(), 32)    # frontend
+    assert sup(get_config("yi-34b").reduced(), 32)               # dense gqa
+
+
+def test_engine_honors_config_toggle_and_gate():
+    _, eng_on, _ = _frontend(max_len=32, prefix_cache=True)
+    _, eng_off, _ = _frontend(max_len=32, prefix_cache=False)
+    _, eng_swa, _ = _frontend(max_len=64, prefix_cache=True)
+    _, eng_slot, _ = _frontend(max_len=32, prefix_cache=True, kv_pool="slot")
+    assert eng_on.prefix_enabled and eng_on.kv.prefix is not None
+    assert not eng_off.prefix_enabled and eng_off.kv.prefix is None
+    assert not eng_swa.prefix_enabled            # window < max_len: wraps
+    assert not eng_slot.prefix_enabled
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: skip >= 50%, byte-identical streams, one compile
+# ---------------------------------------------------------------------------
+
+def test_prefix_storm_64_sessions_skips_half_and_streams_identical():
+    from repro.serving.loadgen import WorkloadSpec, build_sessions, run_storm
+    spec = WorkloadSpec(rate_rps=16.0, duration_s=30.0, n_max=64,
+                        prompt_mean=2, prompt_max=4, out_mean=3, out_max=6,
+                        vocab=256, prefix_groups=1, prefix_len=16)
+    sessions = build_sessions(spec, seed=7)
+    assert len(sessions) == 64
+    total_prompt = sum(len(s.prompt) for s in sessions)
+
+    streams = {}
+    for enabled in (True, False):
+        rt, eng, fe = _frontend(max_batch=8, max_len=32,
+                                prefix_cache=enabled)
+        results = run_storm(fe, sessions)
+        assert all(r.outcome == "FINISHED" for r in results)
+        assert not fe.stream_violations()
+        assert eng.compile_count() == 1
+        streams[enabled] = {
+            r.session.sid: tuple(e.token for e in r.events
+                                 if e.kind == "TOKEN")
+            for r in results}
+        m = fe.metrics()
+        if enabled:
+            assert eng.prefix_enabled
+            # the tentpole acceptance: most prefill work never re-runs
+            assert m["tokens_prefill_skipped"] >= 0.5 * total_prompt
+            assert m["prefix_hits"] >= 32
+            assert 0.0 < m["prefix_hit_rate"] <= 1.0
+            _check_prefix_invariants(eng.kv)
+        else:
+            assert m["tokens_prefill_skipped"] == 0
+            assert m["prefix_hits"] == 0
+    # the cache is invisible in the output: byte-identical streams
+    assert streams[True] == streams[False]
+
+
+def test_full_prompt_hit_still_replays_last_token():
+    """A prompt matching ENTIRELY (every block cached) must still replay
+    its final token — the first decode step needs that position's logits.
+    skip == replay_len - 1, never replay_len."""
+    rt, eng, fe = _frontend(max_batch=4, max_len=32, prefix_cache=True)
+    prompt = list(range(1, 17))                      # exactly one block
+    a = fe.submit(prompt, max_new=4)
+    fe.run(max_steps=200)
+    assert a.outcome == "FINISHED"
+    b = fe.submit(prompt, max_new=4)
+    fe.run(max_steps=200)
+    assert b.outcome == "FINISHED"
+    assert b.tokens == a.tokens                      # same model, same KV
+    st = eng.sched.stats
+    assert st.prefix_hits == 1
+    assert st.tokens_prefill_skipped == len(prompt) - 1
+
+
+# ---------------------------------------------------------------------------
+# Drain with shared pages: zero recompute, deduped manifest
+# ---------------------------------------------------------------------------
+
+def _drain_with_shared_pages(enabled: bool):
+    rt, eng, fe = _frontend(max_batch=8, max_len=32, prefix_cache=enabled)
+    prompt = list(range(1, 18))                      # 17 tokens: 2 blocks
+    donor = fe.submit(prompt, max_new=12)
+    for _ in range(len(prompt) + 2):                 # donor prefill done,
+        fe.step()                                    # prompt cached
+    rest = [fe.submit(prompt, max_new=12) for _ in range(7)]
+    for _ in range(4):
+        fe.step()
+    assert eng.sched.inflight == 8
+    if enabled:
+        assert eng.kv.stats()["blocks_shared"] > 0
+        assert fe.metrics()["prefix_hits"] == 7
+    fe.admin.execute({"cmd": "drain", "ranks": [2, 3]})
+    fe.run(until=rt.clock.now() + 200.0, max_steps=30_000)
+    st = eng.sched.stats
+    assert st.finished == 8 and st.failed == 0
+    assert fe.metrics()["error_events"] == 0
+    assert not fe.stream_violations()
+    # the paper's planned-drain gate holds with shared pages live
+    assert st.tokens_recomputed == 0
+    drains = [e for e in rt.timeline if e.kind == "drain"]
+    assert drains
+    rec = drains[-1].detail
+    streams = [tuple(h.tokens) for h in [donor] + rest]
+    return rec, streams
+
+
+def test_drain_ships_each_shared_page_once():
+    rec_on, streams_on = _drain_with_shared_pages(True)
+    rec_off, streams_off = _drain_with_shared_pages(False)
+    # identical behavior either way (the cache is a pure optimization)
+    assert streams_on == streams_off
+    # 8 requests x 2 blocks: 16 logical pages; shared dedup collapses the
+    # 7 borrowed prefix pages, so the manifest ships strictly less
+    assert rec_off.get("kv_pages_deduped", 0) == 0
+    assert rec_on["kv_pages_deduped"] > 0
+    assert rec_on["kv_pages_moved"] < rec_off["kv_pages_moved"]
+    assert rec_on["kv_bytes_moved"] < rec_off["kv_bytes_moved"]
+    assert rec_on["kv_bytes_moved"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Admin surface
+# ---------------------------------------------------------------------------
+
+def test_admin_status_kv_prefix_section_round_trips():
+    rt, eng, fe = _frontend(max_batch=4, max_len=32, prefix_cache=True)
+    prompt = list(range(1, 17))
+    fe.submit(prompt, max_new=4)
+    fe.run(max_steps=200)
+    fe.submit(prompt, max_new=4)
+    for _ in range(4):
+        fe.step()
+    raw = fe.admin.execute_json('{"cmd": "status"}')
+    doc = json.loads(raw)
+    prefix = doc["result"]["kv"]["prefix"]
+    assert prefix["enabled"] is True
+    assert prefix["nodes"] >= 1
+    assert prefix["shared_blocks"] >= 1
+    assert prefix["hits"] == 1 and prefix["misses"] >= 1
+    assert 0.0 < prefix["hit_rate"] <= 1.0
+    assert prefix["tokens_matched"] >= 15
+    assert prefix["evictions"] == 0
+    assert prefix["cache_resident_slots"] >= 1
+    json.dumps(doc)                                  # fully serializable
+    # scheduler counters ride the same status document
+    sched = doc["result"]["scheduler"]
+    assert sched["prefix_hits"] == 1
+    assert sched["tokens_prefill_skipped"] == len(prompt) - 1
+    # and the disabled flavor reports itself honestly
+    _, _, fe_off = _frontend(max_batch=4, max_len=32, prefix_cache=False)
+    doc = json.loads(fe_off.admin.execute_json('{"cmd": "status"}'))
+    assert doc["result"]["kv"]["prefix"] == {"enabled": False}

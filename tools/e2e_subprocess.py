@@ -1,0 +1,144 @@
+"""Subprocess end-to-end: a REAL ``serve --http`` child, a REAL storm client.
+
+Everything else in CI exercises the wire in one process (the storm boots
+its own transport). This script is the cross-process proof: it spawns
+
+    python -m repro.launch.serve --arch ... --http 0 --admin-socket ...
+
+as a genuine child process, waits for the readiness line on its stdout
+("serving http://127.0.0.1:PORT ..."), then drives
+
+    python -m repro.launch.storm --connect 127.0.0.1:PORT --check ...
+
+against it — two OS processes, one TCP port, one unix admin socket.
+The storm side never imports jax (``--connect`` builds only the session
+list), so this also pins the client's stdlib-only property.
+
+The workload is prefix-heavy (shared system prompts), so the run
+doubles as an e2e check that the server-side prefix cache engages
+across the wire: after the storm we pull ``status`` over the admin
+socket and require ``kv.prefix.hits > 0``.
+
+Exit 0 on success; nonzero (with the child's captured output) on any
+failure. No arguments needed; knobs via env for CI tinkering:
+
+    E2E_ARCH=mixtral-8x22b E2E_SEED=0 python tools/e2e_subprocess.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ARCH = os.environ.get("E2E_ARCH", "mixtral-8x22b")
+SEED = int(os.environ.get("E2E_SEED", "0"))
+BOOT_TIMEOUT_S = float(os.environ.get("E2E_BOOT_TIMEOUT_S", "420"))
+STORM_TIMEOUT_S = float(os.environ.get("E2E_STORM_TIMEOUT_S", "420"))
+
+
+def main() -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    tmp = tempfile.mkdtemp(prefix="repro-e2e-")
+    admin_sock = f"{tmp}/admin.sock"
+
+    # serve.py sizes max_len = prompt_len + max_new + 8 = 32: exactly one
+    # SWA window for the reduced mixtral config, so the prefix-cache gate
+    # stays ON — and the storm below must keep prompt+out inside it
+    server = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", ARCH,
+         "--smoke", "--requests", "0", "--http", "0",
+         "--admin-socket", admin_sock, "--seed", str(SEED)],
+        cwd=REPO, env=env, stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True)
+    try:
+        port = None
+        deadline = time.monotonic() + BOOT_TIMEOUT_S
+        lines = []
+        while time.monotonic() < deadline:
+            line = server.stdout.readline()
+            if not line:
+                if server.poll() is not None:
+                    break
+                continue
+            lines.append(line)
+            m = re.search(r"serving http://127\.0\.0\.1:(\d+)", line)
+            if m:
+                port = int(m.group(1))
+                break
+        if port is None:
+            print("E2E FAILED: server never printed its port",
+                  file=sys.stderr)
+            print("".join(lines), file=sys.stderr)
+            return 1
+        print(f"e2e: server up as pid {server.pid} on port {port}")
+
+        # prefix-heavy, sized to the server's max_len=32 budget:
+        # 16 (shared prefix) + suffix<=6 + out<=6 < 32, no overflow rejects
+        storm = subprocess.run(
+            [sys.executable, "-m", "repro.launch.storm", "--arch", ARCH,
+             "--smoke", "--connect", f"127.0.0.1:{port}",
+             "--admin-socket", admin_sock, "--check",
+             "--rate", "6", "--duration", "3",
+             "--prefix-groups", "2", "--prefix-len", "16",
+             "--prompt-mean", "4", "--prompt-max", "6",
+             "--out-mean", "4", "--out-max", "6",
+             "--time-scale", "0.05", "--seed", str(SEED)],
+            cwd=REPO, env=env, capture_output=True, text=True,
+            timeout=STORM_TIMEOUT_S)
+        print(storm.stdout)
+        if storm.returncode != 0:
+            print("E2E FAILED: storm --check exited "
+                  f"{storm.returncode}", file=sys.stderr)
+            print(storm.stderr, file=sys.stderr)
+            return 1
+
+        # the storm card already embeds the admin status it fetched
+        # BEFORE the run; re-fetch now for post-run prefix counters
+        probe = subprocess.run(
+            [sys.executable, "-c",
+             "import json, sys; "
+             "from repro.serving.transport import admin_request; "
+             "print(json.dumps(admin_request(sys.argv[1], "
+             "{'cmd': 'status'})))", admin_sock],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=60)
+        if probe.returncode != 0:
+            print("E2E FAILED: post-run admin status probe failed",
+                  file=sys.stderr)
+            print(probe.stderr, file=sys.stderr)
+            return 1
+        status = json.loads(probe.stdout)
+        prefix = ((status.get("result") or {}).get("kv") or {}).get(
+            "prefix") or {}
+        print(f"e2e: post-run kv.prefix = {json.dumps(prefix)}")
+        if not prefix.get("enabled"):
+            print("E2E FAILED: server prefix cache not enabled",
+                  file=sys.stderr)
+            return 1
+        if not prefix.get("hits"):
+            print("E2E FAILED: prefix-heavy storm produced zero "
+                  "cache hits across the wire", file=sys.stderr)
+            return 1
+        print("e2e subprocess check: OK (cross-process wire + admin, "
+              "prefix cache engaged)")
+        return 0
+    finally:
+        if server.poll() is None:
+            server.send_signal(signal.SIGINT)
+            try:
+                server.wait(timeout=20)
+            except subprocess.TimeoutExpired:
+                server.kill()
+                server.wait(timeout=20)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
